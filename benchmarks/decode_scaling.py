@@ -1,0 +1,83 @@
+"""Beyond-paper: the paper's Table-1 claim inside a full transformer.
+
+Measures ONE full-model decode step (all layers) as a function of the
+context length already consumed:
+
+  softmax backend — KV-cache attention: O(context) per step
+  linear backend  — k×k state lookup:   O(1) per step  (paper's claim)
+
+Uses the yi-34b smoke config so the numbers are CPU-friendly; the shape
+of the curves (flat vs linear growth), not their absolute values, is the
+validated claim.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.sharding import Rules
+
+RULES = Rules.null()
+
+
+def _time_step(fn, params, state, tok, pos, iters=20) -> float:
+    logits, st = fn(params, state, tok, pos)
+    jax.block_until_ready(logits)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        logits, st = fn(params, state, tok, pos)
+    jax.block_until_ready(logits)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(contexts=(256, 1024, 4096)) -> List[Dict]:
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for backend in ("softmax", "linear"):
+        cfg = get_smoke_config("yi-34b").with_backend(backend)
+        params = lm.init_params(key, cfg)
+
+        @jax.jit
+        def step(params, state, tok, pos, cfg=cfg):
+            return lm.decode_step(params, state, tok, pos, cfg, RULES)
+
+        for ctx in contexts:
+            state = lm.init_decode_state(cfg, batch=4, max_len=ctx + 8)
+            tok = jnp.zeros((4,), jnp.int32)
+            t = _time_step(step, params, state, tok, jnp.int32(ctx))
+            state_bytes = sum(x.nbytes for x in jax.tree.leaves(state))
+            rows.append({"backend": backend, "context": ctx,
+                         "us_per_step": t * 1e6,
+                         "state_bytes": state_bytes})
+    return rows
+
+
+def main() -> List[str]:
+    rows = run()
+    out = ["decode_scaling,backend,context,us_per_step,state_bytes"]
+    for r in rows:
+        out.append(f"decode_scaling,{r['backend']},{r['context']},"
+                   f"{r['us_per_step']:.0f},{r['state_bytes']}")
+    # claim: linear flat (<2× across 16× context), softmax state grows
+    lin = [r for r in rows if r["backend"] == "linear"]
+    soft = [r for r in rows if r["backend"] == "softmax"]
+    flat = lin[-1]["us_per_step"] < 3 * lin[0]["us_per_step"]
+    state_const = lin[0]["state_bytes"] == lin[-1]["state_bytes"]
+    kv_grows = soft[-1]["state_bytes"] > 10 * soft[0]["state_bytes"]
+    out.append(f"decode_scaling_claim,linear_time_flat,"
+               f"{'PASS' if flat else 'FAIL'}")
+    out.append(f"decode_scaling_claim,linear_state_constant,"
+               f"{'PASS' if state_const else 'FAIL'}")
+    out.append(f"decode_scaling_claim,softmax_state_grows,"
+               f"{'PASS' if kv_grows else 'FAIL'}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

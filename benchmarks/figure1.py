@@ -1,0 +1,70 @@
+"""Paper Figure 1: validation accuracy of the four attention variants.
+
+Claims validated (paper §5 / Figure 1):
+  a) softmax attention reaches the best accuracy,
+  b) the linear mechanisms are significantly better than no attention,
+  c) gated linear ≥ basic linear,
+  d) attention models converge faster than no-attention.
+
+The CNN corpus cannot ship in this container; the synthetic cloze task
+(repro/data/cloze.py) preserves its structure — entity-anonymised facts,
+queries answerable only by reading the document.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.paper_qa import QAConfig
+from repro.data.cloze import ClozeTask
+from repro.qa.train import TrainResult, train_qa
+
+
+def run(steps: int = 600, seed: int = 0) -> Dict[str, TrainResult]:
+    task = ClozeTask(n_entities=20, n_relations=20, n_facts=10,
+                     seed=seed + 7)
+    cfg = QAConfig(vocab_size=task.vocab_size, n_entities=20, lr=2e-3)
+    out = {}
+    for att in ("none", "linear", "gated_linear", "softmax",
+                "second_order"):
+        out[att] = train_qa(att, steps=steps, eval_every=steps // 6,
+                            seed=seed, cfg=cfg, task=task)
+    return out
+
+
+def check_claims(results: Dict[str, TrainResult]) -> Dict[str, bool]:
+    best = {k: r.best_acc for k, r in results.items()}
+    t50 = {k: r.steps_to_acc(0.5) for k, r in results.items()}
+
+    def reached(k):
+        return t50[k] if t50[k] > 0 else 10**9
+
+    return {
+        "softmax_best": best["softmax"] >= max(
+            best["linear"], best["gated_linear"]) - 0.02,
+        "linear_beats_none": best["linear"] > best["none"] + 0.1,
+        "gated_geq_linear": best["gated_linear"] >= best["linear"] - 0.02,
+        "attention_converges_faster": min(
+            reached("linear"), reached("gated_linear"),
+            reached("softmax")) < reached("none"),
+        # the paper's §6 proposal (our implementation, beyond-paper):
+        # second-order recurrence must also clearly beat no-attention
+        "second_order_beats_none":
+            best["second_order"] > best["none"] + 0.1,
+    }
+
+
+def main(steps: int = 600) -> List[str]:
+    results = run(steps=steps)
+    claims = check_claims(results)
+    out = ["figure1,variant,best_acc,final_acc,steps_to_50pct"]
+    for k, r in results.items():
+        out.append(f"figure1,{k},{r.best_acc:.3f},{r.final_acc:.3f},"
+                   f"{r.steps_to_acc(0.5)}")
+    for c, ok in claims.items():
+        out.append(f"figure1_claim,{c},{'PASS' if ok else 'FAIL'}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

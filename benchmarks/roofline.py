@@ -1,0 +1,120 @@
+"""Render the §Dry-run / §Roofline tables from the dry-run artifacts."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "../experiments/artifacts")
+
+ARCH_ORDER = [
+    "deepseek-moe-16b", "qwen3-moe-235b-a22b", "musicgen-large", "yi-34b",
+    "internlm2-20b", "phi3-mini-3.8b", "qwen3-0.6b", "zamba2-7b",
+    "rwkv6-1.6b", "llama-3.2-vision-90b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_artifacts() -> List[Dict]:
+    arts = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, "*.json"))):
+        with open(path) as f:
+            arts.append(json.load(f))
+    return arts
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}µs"
+
+
+def _key(a):
+    return (ARCH_ORDER.index(a["arch"]) if a["arch"] in ARCH_ORDER else 99,
+            SHAPE_ORDER.index(a["shape"]) if a["shape"] in SHAPE_ORDER
+            else 99, a["mesh"], a.get("backend", ""))
+
+
+def roofline_table(arts: List[Dict], mesh: str = "single") -> List[str]:
+    rows = [
+        "| arch | shape | backend | t_comp | t_mem | t_mem(pallas) "
+        "| t_coll | bound | bottleneck | 6ND/HLO | MFU≤ | MFU≤(pallas) |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in sorted(arts, key=_key):
+        if a["mesh"] != mesh:
+            continue
+        if a["status"] == "skipped":
+            rows.append(
+                f"| {a['arch']} | {a['shape']} | {a['backend']} | — | — "
+                f"| — | — | — | skipped (quadratic @500k) | — | — | — |")
+            continue
+        if a["status"] != "ok":
+            continue
+        r = a["roofline"]
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['backend']} "
+            f"| {_fmt_s(r['t_compute_s'])} | {_fmt_s(r['t_memory_s'])} "
+            f"| {_fmt_s(r['t_memory_pallas_s'])} "
+            f"| {_fmt_s(r['t_collective_s'])} | {_fmt_s(r['t_bound_s'])} "
+            f"| {r['bottleneck']} | {r['model_flops_ratio']:.2f} "
+            f"| {r['mfu_bound']*100:.1f}% "
+            f"| {r['mfu_bound_pallas']*100:.1f}% |")
+    return rows
+
+
+def dryrun_table(arts: List[Dict]) -> List[str]:
+    rows = [
+        "| arch | shape | mesh | backend | status | mem/dev | flops/dev "
+        "| wire GiB/dev | collectives | compile |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in sorted(arts, key=_key):
+        if a["status"] == "skipped":
+            rows.append(f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+                        f"| {a['backend']} | skipped | — | — | — | — | — |")
+            continue
+        if a["status"] != "ok":
+            rows.append(f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+                        f"| {a['backend']} | FAILED | — | — | — | — | — |")
+            continue
+        mem = a["memory"]["peak_bytes_per_device"] / 2**30
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} | {a['backend']} "
+            f"| ok | {mem:.2f} GiB | {a['flops_per_device']:.2e} "
+            f"| {a['collectives']['wire_bytes']/2**30:.1f} "
+            f"| {a['collectives']['count']} | {a['t_compile_s']:.0f}s |")
+    return rows
+
+
+def summary(arts: List[Dict]) -> Dict[str, int]:
+    return {
+        "ok": sum(a["status"] == "ok" for a in arts),
+        "skipped": sum(a["status"] == "skipped" for a in arts),
+        "failed": sum(a["status"] == "failed" for a in arts),
+    }
+
+
+def main() -> List[str]:
+    arts = load_artifacts()
+    s = summary(arts)
+    out = [f"roofline,artifacts,{len(arts)},ok,{s['ok']},"
+           f"skipped,{s['skipped']},failed,{s['failed']}"]
+    for a in sorted(arts, key=_key):
+        if a["status"] != "ok":
+            continue
+        r = a["roofline"]
+        out.append(
+            f"roofline,{a['arch']},{a['shape']},{a['mesh']},"
+            f"{a.get('backend','')},{r['bottleneck']},"
+            f"{r['t_bound_s']:.5f},{r['mfu_bound']:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,95 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+with the full production stack (checkpointing, auto-resume, straggler
+telemetry) — deliverable (b)'s end-to-end example.
+
+The model is qwen3-0.6b's FAMILY at reduced width (~100M params) with the
+paper's ``gated_linear`` attention backend, on the synthetic bigram
+stream (loss falls from ~log V quickly, proving learning).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+CPU note: ~100M params trains a few steps/minute; --tiny uses the smoke
+config for a fast sanity run.
+"""
+
+import argparse
+import dataclasses
+import logging
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ModelConfig
+from repro.data import SyntheticLMDataset
+from repro.models import lm
+from repro.optim import adamw, cosine_warmup
+from repro.runtime import TrainLoop, TrainLoopConfig, make_train_step
+from repro.sharding import Rules
+
+
+def lm_100m() -> ModelConfig:
+    """~100M-param member of the qwen3 family, gated-linear backend."""
+    return ModelConfig(
+        name="lm-100m-gated-linear",
+        family="dense",
+        n_layers=8,
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=8,
+        head_dim=64,
+        d_ff=2048,
+        vocab_size=32064,
+        attention_backend="gated_linear",
+        qk_norm=True,
+        linear_chunk=64,
+    )
+
+
+def main() -> int:
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("qwen3-0.6b") if args.tiny else lm_100m()
+    rules = Rules.null()
+    key = jax.random.PRNGKey(0)
+
+    params = lm.init_params(key, cfg)
+    n_params = lm.param_count(params)
+    print(f"model: {cfg.name}  params: {n_params/1e6:.1f}M  "
+          f"backend: {cfg.attention_backend}")
+
+    optimizer = adamw(cosine_warmup(3e-4, 20, args.steps),
+                      weight_decay=0.1)
+    opt_state = optimizer.init(params)
+    dataset = SyntheticLMDataset(vocab_size=cfg.vocab_size,
+                                 seq_len=args.seq_len,
+                                 global_batch=args.batch, seed=0)
+    step = jax.jit(make_train_step(cfg, rules, optimizer))
+
+    loop = TrainLoop(
+        step, params, opt_state, dataset,
+        TrainLoopConfig(total_steps=args.steps, ckpt_every=100,
+                        ckpt_dir=args.ckpt_dir, log_every=20),
+        put_batch=lambda b: {k: jnp.asarray(v) for k, v in b.items()})
+    out = loop.run()
+    if not out["metrics"]:
+        print(f"checkpoint already at step {out['step']} — nothing to "
+              f"do (delete {args.ckpt_dir} for a fresh run)")
+        return 0
+    losses = [m["loss"] for m in out["metrics"]]
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} over "
+          f"{out['step']} steps "
+          f"(uniform would stay at {jnp.log(cfg.vocab_size):.2f})")
+    if args.steps >= 150:  # shorter runs are smoke checks only
+        assert losses[-1] < losses[0] - 0.5, "no learning?"
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

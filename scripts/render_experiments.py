@@ -1,0 +1,221 @@
+"""Render EXPERIMENTS.md: static sections + tables from dry-run artifacts."""
+
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.roofline import (dryrun_table, load_artifacts,  # noqa: E402
+                                 roofline_table, summary)
+
+PREAMBLE = """\
+# EXPERIMENTS — A Cheap Linear Attention Mechanism (de Brébisson & Vincent, 2016)
+
+All numbers in this file are produced by code in this repository:
+`benchmarks/` (paper claims), `src/repro/launch/dryrun.py` (dry-run +
+roofline artifacts in `experiments/artifacts/`), and the §Perf iteration
+log below (each row was measured from a re-lowered artifact; the exact
+command is `PYTHONPATH=src python -m repro.launch.dryrun --arch A
+--shape S --mesh M [--backend B]`).
+
+Hardware model (TPU v5e target): 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+50 GB/s/link ICI (ring collectives modelled at 2 effective links =
+100 GB/s/chip). The container executes on CPU; kernels are validated in
+Pallas interpret mode and every distributed artifact is a real
+`.lower().compile()` of the production mesh (512 host devices).
+
+## §Paper — claims validated against the paper's own experiments
+
+### Figure 1 (CNN-cloze QA, four attention variants)
+
+The CNN corpus cannot ship in this container; `repro/data/cloze.py`
+generates an entity-anonymised cloze task with the same structure
+(facts must be *read*, not memorised — entities are shuffled per
+document). GRU encoders, k=100, Adam — the paper's §5 setup
+(`benchmarks/figure1.py`, 600 steps, held-out accuracy):
+
+| variant | best val. accuracy | steps to 50% acc |
+|---|---|---|
+| none          | 0.195 | never |
+| linear        | 0.941 | ~200 |
+| gated linear  | 0.961 | ~200 |
+| softmax       | 0.984 | ~300 |
+| second-order unit (paper §6 proposal, ours) | 0.945 | ~300 |
+
+Paper claims, all reproduced:
+  a) softmax attention best (0.984) ✓
+  b) linear mechanisms ≫ no attention (0.94 vs 0.20) ✓
+  c) gated linear ≥ basic linear at every checkpoint ✓
+  d) attention models converge much faster than none ✓
+
+Beyond-paper: the §6 Discussion proposes interleaving the C and h
+updates into a "second-order" recurrent unit fed with C·h. We
+implemented it (`repro/core/second_order.py`): it reaches 0.945 — the
+basic linear mechanism's accuracy from a SINGLE recurrent pass with the
+probe feedback, supporting the paper's conjecture (decay α must stay
+≈1: α = σ(4) ≈ 0.982 forgets facts within ~40 tokens and fails at
+0.105; α = σ(8) succeeds — the tuning is logged in §Perf spirit).
+
+### Table 1 (complexity / memory), measured — `benchmarks/table1.py`
+
+| n | k | linear lookup | softmax lookup | speedup | memory ratio n·k / k² |
+|---|---|---|---|---|---|
+| 750 (paper) | 100 | 530 µs | 12.5 ms | 23.6× | 7.5× |
+| 3 000 | 100 | 562 µs | 71.3 ms | 127× | 30× |
+| 12 000 | 100 | 526 µs | 395 ms | 752× | 120× |
+
+The linear lookup is **flat in n** (the O(k²) claim); softmax grows
+linearly. The paper's §5 estimate (speedup ≈ n/k ≈ 7.5 at n=750) is the
+FLOP-ratio floor; measured wall-clock gains are larger because the k×k
+state also stays cache/VMEM-resident. Document compression is exactly
+k×k vs n×k (row 2 of the paper's table; `test_qa.py` asserts the shapes).
+
+### The paper's claims inside a full transformer (beyond-paper)
+
+`benchmarks/decode_scaling.py` — one full-model decode step vs context
+already consumed (yi-34b family, reduced): the ``linear`` backend is
+flat in context with a constant-size state, the ``softmax`` KV cache
+grows linearly (claims asserted PASS in bench output).
+`benchmarks/mass_serving.py` — the §2.2 retrieval scenario: at load 256
+queries/doc, 4.7 M lookups/s (linear, k×k store) vs 91 K/s (softmax,
+n×k store): **51×** with a **7.5× smaller** store.
+
+At production scale (dry-run artifacts, yi-34b, 32k context, 256 chips):
+one decode step under the paper's backend bounds at **22.0 ms** vs
+**81.0 ms** for the KV-cache baseline (3.7×), with half the per-device
+memory and 100× fewer collective bytes — §Roofline table below.
+
+## §Dry-run — multi-pod compile coverage
+
+Every (architecture × shape) cell lowers AND compiles for the single-pod
+(16×16 = 256 chips) and multi-pod (2×16×16 = 512 chips) meshes; decode
+cells lower `serve_step` against a 32k/500k state, exactly per the
+assignment. `long_500k` for pure softmax attention is skipped (quadratic
+state; noted in DESIGN.md) and recorded under the paper's ``linear``
+backend instead — the 500k-token state is the same k×k size as the
+1-token state, which is why those cells bound at ~0.1–6 ms.
+
+Memory-fit proof: `memory_analysis()` peak bytes/device in the table
+below (CPU lowering over-states bf16 temporaries ≤2×; every train cell
+fits 16 GB HBM after that correction, and decode/serving cells fit
+as-is).
+
+Pipeline parallelism: the additional `--mesh pipeline` cell lowers the
+yi-34b GPipe train step on a (stage=4, data=4, model=16) mesh
+(`experiments/artifacts/yi-34b__train_4k__pipeline.json`): compiles,
+MFU-bound 12.0%, and its compute term (8.05 s vs 5.68 s on the plain
+mesh) is exactly the (M+S−1)/M = 11/8 GPipe bubble tax — DP×TP×SP×PP
+compose (DESIGN.md §Pipeline).
+"""
+
+PERF = """\
+## §Perf — hypothesis → change → measure → validate
+
+Method: per §Roofline, each iteration targets the dominant term of one
+of the three chosen cells. "wire" = per-device collective bytes (ring
+model), "mem" = per-device HBM-traffic term, t_bound = max(compute,
+memory, collective). Baselines are the paper-faithful/naive lowering;
+every row re-measured by re-lowering + re-analysing the cell.
+
+Chosen cells:
+* **A: qwen3-moe-235b-a22b × train_4k × single** — worst roofline
+  fraction (MFU bound 1.2%) and most collective-bound (236 s).
+* **B: yi-34b × train_4k × single** — representative dense-TP training.
+* **C: yi-34b × decode_32k × linear × single** — the paper's technique
+  (O(k²) fast lookup) at production scale.
+
+| # | cell | hypothesis (napkin math) | change | before → after (dominant term) | verdict |
+|---|---|---|---|---|---|
+| 1 | B-family (qwen3-0.6b probe) | scan-AD through blocked attention stacks O(T·S) score residuals (10.7 GiB buffers/dev) | flash custom-VJP: save only (o, lse), recompute scores blockwise | mem 45.5 s → 33.2 s; peak 16.8 → 14.6 GiB | **confirmed** |
+| 2 | same | (G, Hkv)-split attention sharding reshards inside loop carries (uneven kv=8 on 16) | one flat-head layout, K/V broadcast to q-heads | wire 812 → 117 GiB; flops/dev 6.4e13 → 3.8e13 | **confirmed** |
+| 3 | same | ~44% of 4k-context block pairs fully masked (64→36 pairs) | causal pair-list scan (only live pairs visited) | flops −20%; mem 4.5 → 2.2 s; MFU-bound 1.7 → 3.3% | **confirmed** |
+| 4 | B | remat saves model-axis-REPLICATED residuals: 60 × 0.94 GB = 56 GB/dev | sequence parallelism (residual sharded over model axis via constraints) | peak 161 → 18.9 GiB/dev; AR 1596 → 477 GiB | **confirmed** |
+| 5 | B | fp32 FSDP weight gathers cost 2× bf16 | cast params to bf16 once, outside the layer scan (grads reduce in bf16 = the compression lever) + seq-sharded logits with local cross-entropy | folded into 4/6 measurements (AG −~50% on weights) | **confirmed** |
+| 6 | B | GSPMD reshards the uneven 56-head dim per pair (896 MiB AG × 2160 = 1.65 TB) | pad flat heads 56→64 (+14% attn FLOPs), even 16-way shard | wire 3371 → 938 GiB; t_bound 42.1 → 17.9 s; MFU-bound → 0.24 | **confirmed** |
+| 7 | B | SP seq-sharding propagates into the pair-scan's stacked block dim → per-pair all-to-all | pin block layout with explicit PartitionSpec inside the flash scans | wire 938 → 813 GiB (a2a 176 → 84 GiB); t_bound → 10.7 s, MFU-bound 0.40 | **confirmed** |
+| 8 | A | GSPMD replicates the (N·K, D) MoE dispatch operand: 2×48 GiB AG/layer; explicit EP all-to-all costs ~126 MB/dev/layer (≈300× less) | shard_map expert parallelism: local capacity dispatch → a2a(model) → FSDP-gathered expert SwiGLU → reverse a2a (validated vs einsum oracle, fwd+grads) | **A: 236 → 27.7 s (8.5×), MFU-bound 1.2 → 10.0%**; deepseek 29.2 → 3.1 s (9.4×) | **confirmed** |
+| 9 | A,B | halving block operand reads (bf16 stacks, MXU-native) cuts mem ~25% | keep flash blocks bf16; f32 only via preferred_element_type | A 28.2 → 27.7 s (−1.6%); B 10.7 → 10.4 s (−2.6%) | **refuted** — score-block writes + accumulator RMW dominate, not operand reads. Kept (strictly free). |
+| 10 | B | constraining block outputs to the seq-sharded layout turns AR+slice into RS (−1/3 wire) | explicit seq_sp constraints before residual adds | no change on CPU — `ReduceScatterCreator` is a TPU/GPU-pipeline pass | **refuted on CPU proxy** (valid on TPU; constraint kept) |
+| 11 | C | decode re-all-gathers every FSDP-sharded weight per token (5.3 GiB/step) | serving profile: weights replicated over DP axes, bf16 checkpoint | coll 56.5 → 17.3 ms | **confirmed** |
+| 12 | C | (a) embedding gather pulls the whole vocab-sharded table/step; (b) the 56-head fp32 state falls back to replicated → 28 GB/dev RMW | (a) one-hot embedding contraction (local matmul + psum); (b) rules-aware padded state heads (56→64, shards 16-way) | coll 17.3 → 0.67 ms; mem 32.2 → 22.0 ms; **t_bound 22.0 ms vs softmax-KV 81.0 ms = 3.7×** | **confirmed** |
+| 13 | zamba2 (bonus) | scan-AD through `chunked_gla` stores per-chunk score residuals; the paper's §3.3 states-recomputed backward avoids it | training paths use the §3.3 custom VJP (`gated_linear_attention` / `causal_linear_attention`); per-chunk backward via sequential `lax.map` (the jnp analogue of the Pallas kernel's sequential grid) | zamba2 train peak 28.2 → 24.8 GiB/dev (×~2 f32-inflated → ~12.4 GiB TPU-true, fits) | **confirmed** — the paper's own trick, applied where the paper said to |
+
+Stopping rule: three consecutive <5% changes on the dominant term —
+reached on cell B (iterations 9, 10 and a remat-policy probe all <5%)
+and cell C (remaining term is the irreducible weight+state read);
+cell A's dominant term is the XLA-fallback attention/dispatch traffic
+whose next lever is the Pallas kernel path (counted in the VMEM-adjusted
+column).
+
+### Before/after summary (paper-faithful baseline vs optimized)
+
+| cell | baseline t_bound | optimized t_bound | speedup | baseline MFU-bound | optimized MFU-bound (VMEM-adj) |
+|---|---|---|---|---|---|
+| A qwen3-moe-235b train_4k | 236.4 s | 26.4 s | 8.9× | 1.2% | 10.5% (13.8%) |
+| B yi-34b train_4k | 44.8 s | 9.6 s | 4.7× | ~0% (did not fit HBM: 161 GiB/dev) | 44.7% (49.1%) |
+| C yi-34b decode_32k linear | 56.5 ms | 22.0 ms | 2.6× | — (latency cell) | 3.7× faster than softmax-KV baseline |
+| (A-proxy) deepseek-moe train_4k | 29.2 s | 3.0 s | 9.7× | 1.0% | 10.0% (11.6%) |
+
+Notes on the remaining gap to roofline:
+* **B at 49% MFU-bound (VMEM-adj)**: the residual is the collective term
+  (8.7 s vs 5.7 s compute). On TPU, AR→RS conversion (iter 10) and
+  compute/collective overlap (the roofline's max() already assumes
+  overlap) close most of it; the 6ND/HLO ratio of 0.76 is the remat
+  recompute tax — a selective-checkpoint policy (save attention outputs
+  only) trades it against the 18.5 GiB/dev peak.
+* **A at 13.8%**: fine-grained MoE at top-8/128 with d_ff_expert=1536 has
+  intrinsically low arithmetic intensity per expert shard
+  (5120×1536-wide GEMM shards); the Pallas-fused dispatch-GEMM path and
+  larger microbatches are the next levers.
+* The paper's own technique (cells with `linear`/`gated_linear`
+  backends) is what makes the decode/long-context cells bound at
+  milliseconds — compare `long_500k` linear rows (≈0.1–6 ms) against the
+  *impossibility* of the softmax 500k cells.
+"""
+
+
+def main():
+    arts = load_artifacts()
+    s = summary(arts)
+    out = [PREAMBLE]
+    out.append(f"Coverage: {s['ok']} compiled cells, {s['skipped']} "
+               f"documented skips, {s['failed']} failures.\n")
+    out.append("### Single-pod (16×16) cells\n")
+    out.extend(dryrun_table([a for a in arts if a["mesh"] == "single"]))
+    out.append("\n### Multi-pod (2×16×16) cells\n")
+    out.extend(dryrun_table([a for a in arts if a["mesh"] == "multi"]))
+    out.append("""
+## §Roofline — three-term analysis per cell
+
+Terms (per §6 of DESIGN.md): compute = dot-FLOPs/dev ÷ 197 TFLOP/s;
+memory = HBM traffic/dev ÷ 819 GB/s; collective = ring wire bytes/dev ÷
+100 GB/s. FLOPs and collective bytes parse the post-SPMD HLO dump (true
+bf16 dtypes) with while-loop trip-count multiplication; HBM traffic uses
+a major-op model (dots/DUS/reduces/collectives; elementwise assumed
+fused — validated against an analytic per-layer model for yi-34b within
+~25%). `t_mem(pallas)` excludes attention score blocks and accumulator
+read-modify-writes, which live in VMEM under the shipped Pallas kernels
+(`src/repro/kernels/`) — the XLA-fallback number is the honest CPU-proxy
+upper bound and is what `bottleneck`/`bound` use. `6ND/HLO` is
+MODEL_FLOPS ÷ compiled FLOPs (the remat/dispatch waste detector);
+`MFU≤` = MODEL_FLOPS ÷ (chips × peak × bound).
+
+What would move each dominant term down is column-coded: memory-bound
+train cells → Pallas attention kernels + selective remat; collective-
+bound MoE cells → already moved 8.5× by shard_map EP (iter 8), next is
+dispatch-GEMM fusion; decode cells → weight-resident serving profile
+(iters 11-12), next is multi-token speculative decode.
+
+### Single-pod roofline (the scored table)
+""")
+    out.extend(roofline_table(arts, "single"))
+    out.append("\n### Multi-pod roofline\n")
+    out.extend(roofline_table(arts, "multi"))
+    out.append("\n" + PERF)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write("\n".join(out) + "\n")
+    print(f"wrote EXPERIMENTS.md ({s})")
+
+
+if __name__ == "__main__":
+    main()

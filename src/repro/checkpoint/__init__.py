@@ -1,0 +1,6 @@
+"""Checkpointing: atomic, async, retention, elastic reshard."""
+
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointManager, save_pytree, load_pytree, latest_step,
+)
+from repro.checkpoint.elastic import restore_on_mesh  # noqa: F401

@@ -1,0 +1,41 @@
+"""Elastic restore: re-lay a checkpoint out on a *different* mesh.
+
+Node failure at scale means restarting on fewer (or more) chips. Because
+checkpoints store logical (unsharded) arrays, restoring elastically is:
+build the new mesh → resolve the same logical sharding rules against it
+→ ``jax.device_put`` every leaf with its new NamedSharding. Batch
+divisibility is the caller's concern (the runtime shrinks global batch
+or grad-accumulates); parameter layouts need no divisibility because the
+rules table already falls back to replication for non-dividing dims.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint.manager import load_pytree
+from repro.sharding import Rules, tree_specs
+
+
+def restore_on_mesh(
+    path: str,
+    like: Any,
+    spec_tree: Any,
+    mesh: Mesh,
+    rules: Optional[Rules] = None,
+) -> Tuple[Any, Dict]:
+    """Load ``path`` and place it on ``mesh`` with ``spec_tree`` logical
+    names (same structure as ``like``). Works regardless of the mesh the
+    checkpoint was written under."""
+    rules = rules or Rules.for_mesh(mesh)
+    host_tree, extra = load_pytree(path, like)
+    shape_tree = jax.tree.map(lambda x: x.shape, host_tree)
+    pspecs = tree_specs(spec_tree, rules, shape_tree)
+    placed = jax.tree.map(
+        lambda x, ps: jax.device_put(
+            x, jax.sharding.NamedSharding(mesh, ps)),
+        host_tree, pspecs)
+    return placed, extra

@@ -1,0 +1,170 @@
+"""Sharded-model checkpointing with atomic writes and async saves.
+
+Design (mirrors what Orbax does, scaled to this container):
+
+* **mesh-agnostic on disk** — arrays are written as host numpy in the
+  *logical* layout; sharding is applied at restore time, so a checkpoint
+  written on one mesh restores onto any other (the elastic path).
+* **atomic** — a checkpoint directory is staged as ``step_N.tmp`` and
+  ``os.replace``d into place; readers can never observe a half-written
+  step. A crash mid-save leaves only a ``.tmp`` which is garbage-collected
+  on the next manager construction.
+* **async** — ``save(..., blocking=False)`` snapshots arrays to host
+  memory synchronously (cheap) and writes in a background thread, so the
+  training loop overlaps checkpoint I/O with compute — the standard trick
+  for minimising checkpoint stalls at scale. ``wait()`` joins the writer.
+* **retention** — keep the newest ``keep`` steps.
+
+At real multi-host scale each host would write only its addressable
+shards (process-local files + a metadata manifest); on this single-host
+container ``jax.device_get`` materialises the full array, which is the
+same code path with world size 1. The on-disk format already carries the
+per-array tree path manifest needed for that extension.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+_SEP = "/"
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = _SEP.join(_path_str(p) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def _path_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(p)
+
+
+def save_pytree(path: str, tree: Any, extra: Optional[Dict] = None) -> None:
+    """Write tree to ``path`` (directory) atomically."""
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    arrays = {}
+    manifest = []
+    for key, leaf in _flatten_with_paths(tree):
+        arrays[key] = np.asarray(jax.device_get(leaf))
+        manifest.append(key)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"keys": manifest, "extra": extra or {}}, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str, like: Any) -> Tuple[Any, Dict]:
+    """Load into the structure of ``like`` (values replaced)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves = {key: data[key] for key in meta["keys"]}
+    keys_in_order = [k for k, _ in _flatten_with_paths(like)]
+    flat = [leaves[k] for k in keys_in_order]
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), flat)
+    return tree, meta.get("extra", {})
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._writer: Optional[threading.Thread] = None
+        self._writer_exc: Optional[BaseException] = None
+        os.makedirs(directory, exist_ok=True)
+        # garbage-collect interrupted saves
+        for name in os.listdir(directory):
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(directory, name),
+                              ignore_errors=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step}")
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
+             blocking: bool = True) -> None:
+        self.wait()
+        # snapshot to host synchronously — the background thread must not
+        # race live donated/updated device buffers.
+        host_tree = jax.tree.map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save_pytree(self._step_dir(step), host_tree, extra)
+                self._retain()
+            except BaseException as e:   # surfaced on next wait()
+                self._writer_exc = e
+
+        if blocking:
+            work()
+            if self._writer_exc:
+                raise self._writer_exc
+        else:
+            self._writer = threading.Thread(target=work, daemon=True)
+            self._writer.start()
+
+    def wait(self) -> None:
+        if self._writer is not None:
+            self._writer.join()
+            self._writer = None
+        if self._writer_exc is not None:
+            exc, self._writer_exc = self._writer_exc, None
+            raise exc
+
+    def restore(self, like: Any, step: Optional[int] = None
+                ) -> Tuple[Any, Dict, int]:
+        self.wait()
+        if step is None:
+            step = latest_step(self.directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.directory}")
+        tree, extra = load_pytree(self._step_dir(step), like)
+        return tree, extra, step
+
+    def has_checkpoint(self) -> bool:
+        return latest_step(self.directory) is not None
+
+    def _retain(self) -> None:
+        steps = sorted(
+            int(m.group(1))
+            for m in (re.fullmatch(r"step_(\d+)", n)
+                      for n in os.listdir(self.directory))
+            if m)
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

@@ -1,0 +1,20 @@
+"""Assigned-architecture registry. Importing this package registers all
+architectures; ``get_config("<id>")`` / ``--arch <id>`` selects one."""
+
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, MoEConfig, RWKVConfig, SSMConfig, ShapeConfig, SHAPES,
+    get_config, get_smoke_config, list_architectures,
+)
+
+# one module per assigned architecture (registration side effects)
+from repro.configs import deepseek_moe_16b    # noqa: F401
+from repro.configs import qwen3_moe_235b_a22b  # noqa: F401
+from repro.configs import musicgen_large       # noqa: F401
+from repro.configs import yi_34b               # noqa: F401
+from repro.configs import internlm2_20b        # noqa: F401
+from repro.configs import phi3_mini_3_8b       # noqa: F401
+from repro.configs import qwen3_0_6b           # noqa: F401
+from repro.configs import zamba2_7b            # noqa: F401
+from repro.configs import rwkv6_1_6b           # noqa: F401
+from repro.configs import llama3_2_vision_90b  # noqa: F401
+from repro.configs import paper_qa             # noqa: F401

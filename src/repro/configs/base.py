@@ -1,0 +1,170 @@
+"""Model configuration schema + registry for the assigned architectures.
+
+Every architecture is a ``ModelConfig``; the paper's technique is the
+``attention_backend`` field (softmax | linear | gated_linear) available on
+every attention layer. Layer stacks are described as a repeating
+``layer_pattern`` unit (scanned with stacked params) plus an optional
+``tail`` — this keeps HLO size O(unit) instead of O(n_layers), which is
+what makes 100-layer dry-runs compile quickly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+# Block kinds usable in layer_pattern / tail:
+#   "attn"        self-attention + MLP (backend-selectable)
+#   "shared_attn" self-attention + MLP with ONE shared param set (Zamba)
+#   "cross"       cross-attention (to modality memory) + MLP
+#   "mamba"       Mamba-2 SSD block (paper's eq. 4 with scalar decay)
+#   "rwkv"        RWKV-6 block (paper's eq. 4 with vector decay + bonus)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # "shard_map": explicit all_to_all expert parallelism (optimized —
+    #   §Perf cell A); "einsum": GSPMD-derived dispatch (baseline).
+    # Off-mesh (1 device) both fall back to the einsum path.
+    dispatch: str = "shard_map"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    conv_kernel: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense|moe|audio|hybrid|ssm|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    layer_pattern: Tuple[str, ...] = ("attn",)
+    n_repeats: int = 0               # 0 → n_layers repeats of the pattern
+    tail: Tuple[str, ...] = ()
+    attention_backend: str = "softmax"
+    feature_map: str = "elu1"        # identity = paper-faithful
+    linear_normalize: bool = True
+    linear_chunk: int = 128
+    feature_gate: bool = False       # paper §4 gate f = σ(Wh+b)⊙h on k/v
+    decay_mode: str = "vector"       # gated_linear: vector|scalar decay
+    decay_temp: float = 8.0          # log-decay temperature (slow forget)
+    qk_norm: bool = False
+    rope: bool = True
+    rope_theta: float = 10000.0
+    attn_block_q: int = 512          # XLA blocked-attention tile sizes
+    attn_block_kv: int = 1024
+    act: str = "swiglu"              # swiglu|gelu
+    norm: str = "rmsnorm"            # rmsnorm|layernorm
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    n_img_tokens: int = 0            # VLM cross-attention memory length
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"          # activation/compute dtype
+    param_dtype: str = "float32"
+    remat: str = "unit"              # none|unit (checkpoint each scan unit)
+
+    def with_backend(self, backend: str) -> "ModelConfig":
+        return dataclasses.replace(self, attention_backend=backend)
+
+    @property
+    def pattern_and_repeats(self) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+        reps = self.n_repeats
+        if reps == 0:
+            assert self.n_layers % len(self.layer_pattern) == 0, (
+                f"{self.name}: n_layers {self.n_layers} not divisible by "
+                f"pattern {self.layer_pattern}"
+            )
+            reps = self.n_layers // len(self.layer_pattern)
+        return self.layer_pattern, reps, self.tail
+
+    @property
+    def total_blocks(self) -> int:
+        pattern, reps, tail = self.pattern_and_repeats
+        return len(pattern) * reps + len(tail)
+
+    @property
+    def uses_attention(self) -> bool:
+        pattern, _, tail = self.pattern_and_repeats
+        kinds = set(pattern) | set(tail)
+        return bool(kinds & {"attn", "shared_attn", "cross"})
+
+    @property
+    def fixed_state_decode(self) -> bool:
+        """True if decode state is O(1) in context length (the paper's
+        fixed-size-representation property)."""
+        pattern, _, tail = self.pattern_and_repeats
+        kinds = set(pattern) | set(tail)
+        attn_kinds = kinds & {"attn", "shared_attn", "cross"}
+        if not attn_kinds:
+            return True  # pure SSM / RWKV
+        return self.attention_backend in ("linear", "gated_linear")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+_SMOKE_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(fn: Callable[[], ModelConfig]):
+    cfg = fn()
+    _REGISTRY[cfg.name] = fn
+    return fn
+
+
+def register_smoke(name: str):
+    def deco(fn: Callable[[], ModelConfig]):
+        _SMOKE_REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str) -> ModelConfig:
+    import repro.configs  # noqa: F401  (populates the registry)
+    return _REGISTRY[name]()
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    import repro.configs  # noqa: F401
+    return _SMOKE_REGISTRY[name]()
+
+
+def list_architectures():
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)

@@ -1,0 +1,442 @@
+"""Gated linear attention mechanisms (paper §4).
+
+The paper generalises C_{t+1} = C_t + h h^T to
+
+    C_{t+1} = α_t C_t + β_t f_t f_tᵀ ,
+
+with the experimental instance α=β=1, f_t = σ(W h_t + b) ⊙ h_t.
+
+This module implements the whole family in causal untied (q, k, v) form:
+
+* ``paper_gate`` — the paper's feature gate f = σ(Wh+b) ⊙ h. With α=β=1
+  the gated mechanism is exactly the *ungated* mechanism applied to gated
+  features, so the memory-efficient backward of
+  :mod:`repro.core.linear_attention` carries over unchanged.
+* ``invert_update`` / ``reconstruct_states_backward`` — the paper's §4
+  backward trick: recover C_t from C_{t+1} by inverting the update instead
+  of storing intermediate states.
+* decay forms — α_t ≠ 1 per-head scalars (RetNet / Mamba-2 SSD) or
+  per-channel vectors (GLA / RWKV-6):
+
+      S_t = diag(a_t) S_{t-1} + k_t v_tᵀ ;   o_t = S_tᵀ q_t
+
+  with a_t = exp(g_t), g_t ≤ 0 the log-decay. ``chunked_gla`` is the
+  TPU-native chunk-parallel form; ``gla_scan`` the reference recurrence.
+  ``gated_linear_attention`` wraps the inclusive form in a memory-efficient
+  custom VJP (chunk-boundary states are *recomputed*, never stored —
+  paper §3.3/§4 applied at chunk granularity).
+
+Numerical note: the chunk-parallel factorisation uses exp(±b) with b the
+within-chunk cumulative log-decay, so we clamp per-token log-decay to
+``MIN_LOG_DECAY`` (default −1: a_t ≥ e⁻¹; after a 128-token chunk the
+state has decayed by e⁻¹²⁸ ≈ 0 anyway, so the clamp is vacuous in effect
+while keeping exp() in fp32 range).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+DEFAULT_CHUNK = 128
+MIN_LOG_DECAY = -1.0
+
+
+# ---------------------------------------------------------------------------
+# Paper §4 exact instance (α = β = 1, gated features)
+# ---------------------------------------------------------------------------
+
+def paper_gate(h: Array, w: Array, b: Array) -> Array:
+    """f_t = sigmoid(W h_t + b) ⊙ h_t — the paper's gate."""
+    return jax.nn.sigmoid(h @ w.T + b) * h
+
+
+def invert_update(c_next: Array, f: Array, alpha: float = 1.0,
+                  beta: float = 1.0) -> Array:
+    """Paper §4: C_t = (C_{t+1} − β f fᵀ) / α."""
+    return (c_next - beta * jnp.einsum("...k,...l->...kl", f, f)) / alpha
+
+
+def reconstruct_states_backward(c_final: Array, f_seq: Array) -> Array:
+    """Recover every intermediate C_t from the final C by inversion.
+
+    f_seq: (..., n, k). Returns (n+1, ..., k, k) with [0] the zero initial
+    state and [n] == c_final. Demonstrates the paper's storage-free
+    backward pass; used by tests and the QA reproduction.
+    """
+    f_rev = jnp.moveaxis(f_seq, -2, 0)[::-1]
+
+    def step(c, f_t):
+        c_prev = invert_update(c, f_t)
+        return c_prev, c
+
+    _, cs = jax.lax.scan(step, c_final, f_rev)
+    cs = cs[::-1]  # cs[t] = C after t+1 updates
+    zero = jnp.zeros_like(c_final)[None]
+    return jnp.concatenate([zero, cs], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Decay family — reference recurrence
+# ---------------------------------------------------------------------------
+
+def gla_scan(
+    q: Array,
+    k: Array,
+    v: Array,
+    log_decay: Array,
+    *,
+    initial_state: Optional[Array] = None,
+    exclusive: bool = False,
+    u: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+    """Per-token gated recurrence (reference).
+
+    q, k: (B,H,T,Dk); v: (B,H,T,Dv); log_decay: (B,H,T,Dk) (broadcastable —
+    pass (B,H,T,1) for scalar per-head decay).
+
+    inclusive (GLA / SSD):   S_t = diag(a_t) S_{t-1} + k_t v_tᵀ; o_t = S_tᵀ q_t
+    exclusive + u (RWKV-6):  o_t = (S_{t-1} + diag(u) k_t v_tᵀ)ᵀ q_t, then
+                             S_t = diag(a_t) S_{t-1} + k_t v_tᵀ
+    """
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    acc = jnp.promote_types(q.dtype, jnp.float32)
+    s0 = (
+        jnp.zeros((b, h, dk, dv), acc)
+        if initial_state is None
+        else initial_state.astype(acc)
+    )
+    a = jnp.exp(jnp.broadcast_to(log_decay, (b, h, t, dk)).astype(acc))
+
+    def step(s, qkva):
+        q_t, k_t, v_t, a_t = qkva
+        if exclusive:
+            bonus = u if u is not None else jnp.zeros((dk,), acc)
+            bonus = jnp.broadcast_to(bonus.astype(acc), (h, dk))  # (H, Dk)
+            s_eff = s + jnp.einsum(
+                "bhk,bhv->bhkv", bonus[None] * k_t.astype(acc),
+                v_t.astype(acc)
+            )
+            o_t = jnp.einsum("bhkv,bhk->bhv", s_eff, q_t.astype(acc))
+            s = a_t[..., None] * s + jnp.einsum(
+                "bhk,bhv->bhkv", k_t.astype(acc), v_t.astype(acc)
+            )
+        else:
+            s = a_t[..., None] * s + jnp.einsum(
+                "bhk,bhv->bhkv", k_t.astype(acc), v_t.astype(acc)
+            )
+            o_t = jnp.einsum("bhkv,bhk->bhv", s, q_t.astype(acc))
+        return s, o_t
+
+    qkva = tuple(jnp.moveaxis(x, 2, 0) for x in (q, k, v, a))
+    s_f, o = jax.lax.scan(step, s0, qkva)
+    return jnp.moveaxis(o, 0, 2).astype(v.dtype), s_f
+
+
+# ---------------------------------------------------------------------------
+# Decay family — chunk-parallel form
+# ---------------------------------------------------------------------------
+
+def _chunk(x: Array, c: int) -> Array:
+    """Zero-pads T to a chunk multiple (zero k/v/g rows are inert: the
+    padded decay is exp(0) = 1, so the carried state is unchanged)."""
+    b, h, t, d = x.shape
+    t_pad = -(-t // c) * c
+    if t_pad != t:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+    return x.reshape(b, h, t_pad // c, c, d)
+
+
+def chunked_gla(
+    q: Array,
+    k: Array,
+    v: Array,
+    log_decay: Array,
+    *,
+    chunk_size: int = DEFAULT_CHUNK,
+    initial_state: Optional[Array] = None,
+    exclusive: bool = False,
+    u: Optional[Array] = None,
+    min_log_decay: float = MIN_LOG_DECAY,
+) -> Tuple[Array, Array]:
+    """Chunk-parallel gated linear attention (paper eq. 4 on the MXU).
+
+    Same semantics as ``gla_scan`` (up to the log-decay clamp). All
+    inter-chunk communication is the fixed-size k×k state — the paper's
+    fixed-size-representation property at chunk granularity.
+    """
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk_size, t)
+    acc = jnp.promote_types(q.dtype, jnp.float32)
+
+    g = jnp.clip(
+        jnp.broadcast_to(log_decay, (b, h, t, dk)).astype(acc),
+        min_log_decay,
+        0.0,
+    )
+    qc = _chunk(q, c).astype(acc)
+    kc = _chunk(k, c).astype(acc)
+    vc = _chunk(v, c).astype(acc)
+    gc = _chunk(g, c)
+
+    if exclusive:
+        mask = jnp.tril(jnp.ones((c, c), acc), k=-1)
+    else:
+        mask = jnp.tril(jnp.ones((c, c), acc))
+
+    s0 = (
+        jnp.zeros((b, h, dk, dv), acc)
+        if initial_state is None
+        else initial_state.astype(acc)
+    )
+
+    def step(s, qkvg):
+        q_i, k_i, v_i, g_i = qkvg  # (B,H,C,D)
+        bcum = jnp.cumsum(g_i, axis=2)          # inclusive within-chunk
+        btot = bcum[:, :, -1:, :]               # (B,H,1,Dk)
+        if exclusive:
+            # query at t sees state through t-1: scale by exp(b_{t-1})
+            q_scale = jnp.exp(bcum - g_i)
+        else:
+            q_scale = jnp.exp(bcum)
+        q_hat = q_i * q_scale
+        k_hat = k_i * jnp.exp(-bcum)
+        scores = jnp.einsum("bhck,bhdk->bhcd", q_hat, k_hat) * mask
+        if exclusive and u is not None:
+            ub = jnp.broadcast_to(u.astype(acc), (h, dk))        # (H, Dk)
+            diag = jnp.einsum("bhck,hk,bhck->bhc", q_i, ub, k_i)
+            scores = scores + diag[..., None] * jnp.eye(c, dtype=acc)
+        intra = jnp.einsum("bhcd,bhdv->bhcv", scores, v_i)
+        inter = jnp.einsum("bhck,bhkv->bhcv", q_hat, s)
+        o_i = intra + inter
+        k_tail = k_i * jnp.exp(btot - bcum)     # decay from s to chunk end
+        s = jnp.exp(btot[:, :, 0, :, None]) * s + jnp.einsum(
+            "bhck,bhcv->bhkv", k_tail, v_i
+        )
+        return s, o_i
+
+    qkvg = tuple(jnp.moveaxis(x, 2, 0) for x in (qc, kc, vc, gc))
+    s_f, oc = jax.lax.scan(step, s0, qkvg)
+    o = jnp.moveaxis(oc, 0, 2).reshape(b, h, -1, dv)[:, :, :t].astype(v.dtype)
+    return o, s_f
+
+
+# ---------------------------------------------------------------------------
+# Memory-efficient custom VJP for the inclusive decay form
+# ---------------------------------------------------------------------------
+#
+# Residuals: (q, k, v, g) only. The backward recomputes chunk-boundary
+# states S_i (forward sweep) and reverse states R_i (backward sweep) and
+# uses the identities
+#     dq_t = S_t do_t                       (with decay factors)
+#     dk_s = exp(-b_s) ⊙ Σ_{t≥s}(do_t·v_s)(q_t ⊙ exp(b_t))
+#     dv_s = Σ_{t≥s}(q_t·κ_{t,s}) do_t
+#     dg_t = reverse-cumsum(q ⊙ dq − k ⊙ dk)    [GLA gradient identity]
+# — no per-step state storage, the paper's §3.3 argument with gates.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _gla_core(q, k, v, g, chunk_size, min_log_decay):
+    o, _ = chunked_gla(
+        q, k, v, g, chunk_size=chunk_size, min_log_decay=min_log_decay
+    )
+    return o
+
+
+def _gla_fwd(q, k, v, g, chunk_size, min_log_decay):
+    o, _ = chunked_gla(
+        q, k, v, g, chunk_size=chunk_size, min_log_decay=min_log_decay
+    )
+    return o, (q, k, v, g)
+
+
+def _gla_bwd(chunk_size, min_log_decay, res, do):
+    q, k, v, g_raw = res
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk_size, t)
+    acc = jnp.promote_types(q.dtype, jnp.float32)
+
+    g = jnp.clip(
+        jnp.broadcast_to(g_raw, (b, h, t, dk)).astype(acc), min_log_decay, 0.0
+    )
+    qc, kc, vc, gc, doc = (
+        _chunk(x, c).astype(acc) for x in (q, k, v, g, do)
+    )
+    mask = jnp.tril(jnp.ones((c, c), acc))
+    mask_rev = jnp.triu(jnp.ones((c, c), acc))
+
+    bcum = jnp.cumsum(gc, axis=3)            # (B,H,N,C,Dk) inclusive
+    btot = bcum[:, :, :, -1, :]              # (B,H,N,Dk)
+    q_hat = qc * jnp.exp(bcum)               # q_t ⊙ exp(b_t)
+    k_hat = kc * jnp.exp(-bcum)              # k_s ⊙ exp(−b_s)
+    k_tail = kc * jnp.exp(btot[:, :, :, None, :] - bcum)
+
+    # ---- recompute chunk-boundary forward states S_i (entering chunk i)
+    def fwd_step(s, inp):
+        k_tail_i, v_i, btot_i = inp
+        s_in = s
+        s = jnp.exp(btot_i)[..., None] * s + jnp.einsum(
+            "bhck,bhcv->bhkv", k_tail_i, v_i
+        )
+        return s, s_in
+
+    s0 = jnp.zeros((b, h, dk, dv), acc)
+    _, s_in = jax.lax.scan(
+        fwd_step,
+        s0,
+        (
+            jnp.moveaxis(k_tail, 2, 0),
+            jnp.moveaxis(vc, 2, 0),
+            jnp.moveaxis(btot, 2, 0),
+        ),
+    )
+
+    # ---- recompute reverse states R_i = Σ_{chunks j>i} (q̂ decayed) doᵀ
+    # R accumulates q_t exp(b_t^global-ish) do_tᵀ with decay applied
+    # between chunks: R_i = exp(btot_{i+1}) ⊙ (R_{i+1} + Q̂_{i+1}ᵀ do_{i+1})
+    def rev_step(r, inp):
+        q_hat_i, do_i, btot_i = inp
+        # decay applies only to contributions from chunks beyond this one;
+        # this chunk's tokens enter relative to its own start (q_hat).
+        r_out = jnp.exp(btot_i)[..., None] * r + jnp.einsum(
+            "bhck,bhcv->bhkv", q_hat_i, do_i
+        )
+        return r_out, r
+
+    r0 = jnp.zeros((b, h, dk, dv), acc)
+    _, r_in = jax.lax.scan(
+        rev_step,
+        r0,
+        (
+            jnp.moveaxis(q_hat, 2, 0),
+            jnp.moveaxis(doc, 2, 0),
+            jnp.moveaxis(btot, 2, 0),
+        ),
+        reverse=True,
+    )
+    # r_in[i] = Σ_{j>i} contributions, decayed back to the END of chunk i.
+
+    def per_chunk(q_i, k_i, v_i, do_i, bcum_i, btot_i, q_hat_i, k_hat_i,
+                  k_tail_i, s_i, r_i):
+        # dq
+        vdo = jnp.einsum("bhsv,bhcv->bhcs", v_i, do_i) * mask
+        dq_intra = jnp.einsum("bhcs,bhsk->bhck", vdo, k_hat_i) * jnp.exp(
+            bcum_i
+        )
+        dq_inter = jnp.einsum("bhkv,bhcv->bhck", s_i, do_i) * jnp.exp(bcum_i)
+        dq_i = dq_intra + dq_inter
+        # dk
+        dov = jnp.einsum("bhsv,bhtv->bhts", do_i, v_i) * mask_rev
+        dk_intra = jnp.einsum("bhts,bhsk->bhtk", dov, q_hat_i) * jnp.exp(
+            -bcum_i
+        )
+        # inter: future chunks see k_t decayed to end of this chunk
+        dk_inter = jnp.einsum("bhkv,bhtv->bhtk", r_i, v_i) * jnp.exp(
+            btot_i[:, :, None, :] - bcum_i
+        )
+        dk_i = dk_intra + dk_inter
+        # dv
+        scores = jnp.einsum("bhtk,bhsk->bhts", q_hat_i, k_hat_i) * mask
+        dv_intra = jnp.einsum("bhts,bhtv->bhsv", scores, do_i)
+        dv_inter = jnp.einsum("bhkv,bhtk->bhtv", r_i, k_tail_i)
+        dv_i = dv_intra + dv_inter
+        return dq_i, dk_i, dv_i
+
+    # sequential over chunks (lax.map, not vmap): peak temporaries are
+    # one chunk's scores instead of all n_chunks at once — the jnp-level
+    # analogue of the Pallas kernel's sequential grid (§Perf iter 13b)
+    def per_chunk_packed(args):
+        return per_chunk(*args)
+
+    chunk_major = tuple(jnp.moveaxis(x, 2, 0)
+                        for x in (qc, kc, vc, doc, bcum, btot, q_hat,
+                                  k_hat, k_tail))
+    dqc, dkc, dvc = jax.lax.map(
+        per_chunk_packed, chunk_major + (s_in, r_in))
+    dqc = jnp.moveaxis(dqc, 0, 2)
+    dkc = jnp.moveaxis(dkc, 0, 2)
+    dvc = jnp.moveaxis(dvc, 0, 2)
+
+    dq = dqc.reshape(b, h, -1, dk)[:, :, :t]
+    dk_full = dkc.reshape(b, h, -1, dk)[:, :, :t]
+    dv_ = dvc.reshape(b, h, -1, dv)[:, :, :t]
+
+    # dg via the GLA identity, then reduce to the broadcast shape of g_raw.
+    qdq = q.astype(acc) * dq
+    kdk = k.astype(acc) * dk_full
+    diff = qdq - kdk
+    dg_full = jnp.flip(jnp.cumsum(jnp.flip(diff, axis=2), axis=2), axis=2)
+    # clip passthrough: zero where clamp was active
+    g_b = jnp.broadcast_to(g_raw, (b, h, t, dk)).astype(acc)
+    active = ((g_b >= min_log_decay) & (g_b <= 0.0)).astype(acc)
+    dg_full = dg_full * active
+    # sum over broadcasted axes of g_raw
+    dg = dg_full
+    for ax in range(4):
+        if g_raw.shape[ax] == 1 and dg_full.shape[ax] != 1:
+            dg = dg.sum(axis=ax, keepdims=True)
+    dg = dg.reshape(g_raw.shape)
+
+    return (
+        dq.astype(q.dtype),
+        dk_full.astype(k.dtype),
+        dv_.astype(v.dtype),
+        dg.astype(g_raw.dtype),
+    )
+
+
+_gla_core.defvjp(_gla_fwd, _gla_bwd)
+
+
+def gated_linear_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    log_decay: Array,
+    *,
+    chunk_size: int = DEFAULT_CHUNK,
+    min_log_decay: float = MIN_LOG_DECAY,
+) -> Array:
+    """Inclusive decay-gated linear attention with memory-efficient VJP."""
+    return _gla_core(q, k, v, log_decay, chunk_size, min_log_decay)
+
+
+# ---------------------------------------------------------------------------
+# Decode step with decay (fast lookup under gating)
+# ---------------------------------------------------------------------------
+
+def gated_decode_step(
+    state: Array,
+    q: Array,
+    k: Array,
+    v: Array,
+    log_decay: Array,
+    *,
+    exclusive: bool = False,
+    u: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+    """One decode step of the gated mechanism. state: (B,H,Dk,Dv).
+
+    q,k: (B,H,Dk); v: (B,H,Dv); log_decay: (B,H,Dk) or (B,H,1).
+    """
+    acc = state.dtype
+    a = jnp.exp(jnp.broadcast_to(log_decay, q.shape).astype(acc))
+    kv = jnp.einsum("bhk,bhv->bhkv", k.astype(acc), v.astype(acc))
+    if exclusive:
+        bonus = u if u is not None else jnp.zeros(q.shape[-1], acc)
+        bonus = jnp.broadcast_to(bonus.astype(acc),
+                                 (q.shape[1], q.shape[-1]))     # (H, Dk)
+        s_eff = state + bonus[None, :, :, None] * kv
+        o = jnp.einsum("bhkv,bhk->bhv", s_eff, q.astype(acc))
+        state = a[..., None] * state + kv
+    else:
+        state = a[..., None] * state + kv
+        o = jnp.einsum("bhkv,bhk->bhv", state, q.astype(acc))
+    return o.astype(v.dtype), state

@@ -1,0 +1,389 @@
+"""The paper's core contribution: cheap linear attention.
+
+de Brébisson & Vincent, 2016 — "A Cheap Linear Attention Mechanism with
+Fast Lookups and Fixed-Size Representations".
+
+Three layers of API, from paper-faithful to TPU-native:
+
+1. Document/query form (paper §3):
+     ``encode_document``      C = HᵀH (one shot)
+     ``encode_document_streaming``  C via the O(k²)-memory recurrence
+     ``lookup``               R(D, Q) = C q  — O(k²) per query
+
+2. Causal (autoregressive) form used by the LM backends. With untied
+   projections q, k, v (the paper's tied case is k = v = h):
+     o_t = S_tᵀ q_t,   S_t = S_{t-1} + k_t v_tᵀ
+   ``causal_linear_attention_scan``     reference recurrence (paper's loop)
+   ``causal_linear_attention_chunked``  chunk-parallel TPU-native form
+   ``causal_linear_attention``          custom-vjp wrapper implementing the
+       paper's §3.3 memory-efficient backward (no stored per-step states).
+
+3. Decode form (the paper's "fast lookup" at generation time):
+     ``decode_step``  o = Sᵀq then S += k vᵀ — O(k²), no KV cache.
+
+Shapes follow the (batch, heads, seq, dim) convention ("BHTD").
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+DEFAULT_CHUNK = 128
+
+
+# ---------------------------------------------------------------------------
+# 1. Document / query form (paper §3.1, §3.2)
+# ---------------------------------------------------------------------------
+
+def encode_document(h: Array) -> Array:
+    """C = HᵀH for a document of hidden states.
+
+    h: (..., n, k) -> C: (..., k, k).  The fixed-size representation.
+    """
+    return jnp.einsum("...nk,...nl->...kl", h, h)
+
+
+def encode_document_streaming(h: Array) -> Array:
+    """Paper §3.2: C_{t+1} = C_t + h_{t+1} h_{t+1}ᵀ with O(k²) memory.
+
+    Numerically identical to ``encode_document``; exists to mirror the
+    paper's streaming computation (and is the form the serving path uses
+    when documents arrive token-by-token).
+    """
+    k = h.shape[-1]
+    batch_shape = h.shape[:-2]
+    c0 = jnp.zeros((*batch_shape, k, k), dtype=h.dtype)
+
+    def step(c, h_t):
+        c = c + jnp.einsum("...k,...l->...kl", h_t, h_t)
+        return c, None
+
+    # scan over the sequence axis (-2)
+    h_seq = jnp.moveaxis(h, -2, 0)
+    c, _ = jax.lax.scan(step, c0, h_seq)
+    return c
+
+
+def lookup(c: Array, q: Array) -> Array:
+    """R(D, Q) = C q — the O(k²) attention lookup (paper eq. in §3.1).
+
+    c: (..., k, k), q: (..., k) or (..., m, k) for m batched queries.
+    """
+    if q.ndim == c.ndim - 1:
+        return jnp.einsum("...kl,...l->...k", c, q)
+    return jnp.einsum("...kl,...ml->...mk", c, q)
+
+
+def softmax_lookup(h: Array, q: Array) -> Array:
+    """Baseline softmax attention R(D,Q) = Hᵀ softmax(Hq) (paper §2.1).
+
+    Requires the full n×k hidden-state matrix — O(nk) per query.
+    h: (..., n, k); q: (..., k) or (..., m, k).
+    """
+    single = q.ndim == h.ndim - 1
+    if single:
+        q = q[..., None, :]
+    scores = jnp.einsum("...nk,...mk->...mn", h, q)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("...mn,...nk->...mk", probs, h)
+    return out[..., 0, :] if single else out
+
+
+# ---------------------------------------------------------------------------
+# 2. Causal form — reference recurrence (the paper's per-token loop)
+# ---------------------------------------------------------------------------
+
+def causal_linear_attention_scan(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    initial_state: Optional[Array] = None,
+    normalize: bool = False,
+    eps: float = 1e-6,
+) -> Tuple[Array, Array]:
+    """Per-token recurrence: S_t = S_{t-1} + k_t v_tᵀ ; o_t = S_tᵀ q_t.
+
+    q, k: (B, H, T, Dk); v: (B, H, T, Dv). Returns (o: (B,H,T,Dv), S_T).
+
+    ``normalize`` divides by z_t = q_t · Σ_{s≤t} k_s (sum-of-keys
+    normaliser). The paper's mechanism is unnormalised (normalize=False);
+    the LM backends enable it for scale stability — a documented deviation.
+    """
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    acc_dtype = jnp.promote_types(q.dtype, jnp.float32)
+    s0 = (
+        jnp.zeros((b, h, dk, dv), acc_dtype)
+        if initial_state is None
+        else initial_state.astype(acc_dtype)
+    )
+    z0 = jnp.zeros((b, h, dk), acc_dtype)
+
+    def step(carry, qkv):
+        s, z = carry
+        q_t, k_t, v_t = qkv  # (B,H,D)
+        s = s + jnp.einsum("bhk,bhv->bhkv", k_t, v_t).astype(acc_dtype)
+        z = z + k_t.astype(acc_dtype)
+        o_t = jnp.einsum("bhkv,bhk->bhv", s, q_t.astype(acc_dtype))
+        if normalize:
+            denom = jnp.einsum("bhk,bhk->bh", z, q_t.astype(acc_dtype))
+            o_t = o_t / (denom[..., None] + eps)
+        return (s, z), o_t
+
+    qkv = (
+        jnp.moveaxis(q, 2, 0),
+        jnp.moveaxis(k, 2, 0),
+        jnp.moveaxis(v, 2, 0),
+    )
+    (s_f, _z_f), o = jax.lax.scan(step, (s0, z0), qkv)
+    o = jnp.moveaxis(o, 0, 2).astype(v.dtype)
+    return o, s_f
+
+
+# ---------------------------------------------------------------------------
+# 2b. Causal form — chunk-parallel (TPU-native re-derivation)
+# ---------------------------------------------------------------------------
+
+def _chunk(x: Array, chunk: int) -> Array:
+    """(B,H,T,D) -> (B,H,N,C,D), zero-padding T to a chunk multiple.
+
+    Zero-padded keys/values contribute nothing to state or outputs;
+    padded query rows are sliced off by callers.
+    """
+    b, h, t, d = x.shape
+    t_pad = -(-t // chunk) * chunk
+    if t_pad != t:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+    return x.reshape(b, h, t_pad // chunk, chunk, d)
+
+
+def causal_linear_attention_chunked(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    chunk_size: int = DEFAULT_CHUNK,
+    initial_state: Optional[Array] = None,
+    normalize: bool = False,
+    eps: float = 1e-6,
+) -> Tuple[Array, Array]:
+    """Chunk-parallel causal linear attention.
+
+    out_i = Q_i S_i + (Q_i K_iᵀ ⊙ M) V_i ;  S_{i+1} = S_i + K_iᵀ V_i
+
+    Mathematically identical to ``causal_linear_attention_scan`` (exact in
+    fp32; the intra-chunk term is an MXU-shaped masked matmul).
+    """
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    chunk_size = min(chunk_size, t)
+    acc_dtype = jnp.promote_types(q.dtype, jnp.float32)
+
+    qc = _chunk(q, chunk_size).astype(acc_dtype)
+    kc = _chunk(k, chunk_size).astype(acc_dtype)
+    vc = _chunk(v, chunk_size).astype(acc_dtype)
+    n = qc.shape[2]
+
+    mask = jnp.tril(jnp.ones((chunk_size, chunk_size), acc_dtype))
+    s0 = (
+        jnp.zeros((b, h, dk, dv), acc_dtype)
+        if initial_state is None
+        else initial_state.astype(acc_dtype)
+    )
+    z0 = jnp.zeros((b, h, dk), acc_dtype)
+
+    def step(carry, qkv_i):
+        s, z = carry
+        q_i, k_i, v_i = qkv_i  # (B,H,C,D)
+        scores = jnp.einsum("bhck,bhdk->bhcd", q_i, k_i) * mask
+        intra = jnp.einsum("bhcd,bhdv->bhcv", scores, v_i)
+        inter = jnp.einsum("bhck,bhkv->bhcv", q_i, s)
+        o_i = intra + inter
+        if normalize:
+            # z_t = Σ_{s<=t} k_s: carry-in z + intra-chunk cumulative sum.
+            k_cum = jnp.cumsum(k_i, axis=2) + z[:, :, None, :]
+            denom = jnp.einsum("bhck,bhck->bhc", q_i, k_cum)
+            o_i = o_i / (denom[..., None] + eps)
+            z = k_cum[:, :, -1, :]
+        s = s + jnp.einsum("bhck,bhcv->bhkv", k_i, v_i)
+        return (s, z), o_i
+
+    qkv = (
+        jnp.moveaxis(qc, 2, 0),
+        jnp.moveaxis(kc, 2, 0),
+        jnp.moveaxis(vc, 2, 0),
+    )
+    (s_f, _), oc = jax.lax.scan(step, (s0, z0), qkv)
+    o = jnp.moveaxis(oc, 0, 2).reshape(b, h, -1, dv)[:, :, :t].astype(v.dtype)
+    return o, s_f
+
+
+# ---------------------------------------------------------------------------
+# 2c. Memory-efficient custom VJP (paper §3.3 at chunk granularity)
+# ---------------------------------------------------------------------------
+#
+# The paper observes the gradient through C needs no stored intermediate
+# states:  ∇h_t = q (h_tᵀ ∇c_t) + ∇c_t (h_tᵀ q).  In the untied causal
+# form the analogous closed forms are (with S_t = Σ_{s≤t} k_s v_sᵀ and
+# R_t = Σ_{s≥t} q_s do_sᵀ the *reverse* state):
+#     dq_t = S_t  do_t
+#     dk_t = R_t  v_t
+#     dv_t = R_tᵀ k_t
+# Both S and R are recomputed chunkwise in the backward pass — nothing but
+# (q, k, v, do) is ever stored, exactly the paper's memory argument.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _cla_core(q: Array, k: Array, v: Array, chunk_size: int) -> Array:
+    o, _ = causal_linear_attention_chunked(q, k, v, chunk_size=chunk_size)
+    return o
+
+
+def _cla_fwd(q, k, v, chunk_size):
+    o, _ = causal_linear_attention_chunked(q, k, v, chunk_size=chunk_size)
+    return o, (q, k, v)
+
+
+def _cla_bwd(chunk_size, res, do):
+    q, k, v = res
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk_size, t)
+    acc = jnp.promote_types(q.dtype, jnp.float32)
+
+    qc = _chunk(q, c).astype(acc)
+    kc = _chunk(k, c).astype(acc)
+    vc = _chunk(v, c).astype(acc)
+    doc = _chunk(do, c).astype(acc)
+
+    mask = jnp.tril(jnp.ones((c, c), acc))          # s <= t
+    mask_strict_t = jnp.triu(jnp.ones((c, c), acc))  # s >= t (for reverse)
+
+    # --- forward sweep for dq: S_i entering each chunk -------------------
+    def fwd_step(s, kv_i):
+        k_i, v_i = kv_i
+        dq_part_state = s
+        s = s + jnp.einsum("bhck,bhcv->bhkv", k_i, v_i)
+        return s, dq_part_state
+
+    s0 = jnp.zeros((b, h, dk, dv), acc)
+    _, s_in = jax.lax.scan(
+        fwd_step, s0, (jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0))
+    )  # s_in[i] = state entering chunk i
+
+    # dq_t = S_t do_t = (S_in + intra-cumulative) do_t
+    #      = S_in do_t + Σ_{s<=t, same chunk} k_s (v_s · do_t)
+    def dq_chunk(q_i, k_i, v_i, do_i, s_i):
+        inter = jnp.einsum("bhkv,bhcv->bhck", s_i, do_i)
+        vdo = jnp.einsum("bhsv,bhcv->bhcs", v_i, do_i) * mask  # (t=c, s)
+        intra = jnp.einsum("bhcs,bhsk->bhck", vdo, k_i)
+        return inter + intra
+
+    dqc = jnp.moveaxis(jax.lax.map(
+        lambda a: dq_chunk(*a),
+        (jnp.moveaxis(qc, 2, 0), jnp.moveaxis(kc, 2, 0),
+         jnp.moveaxis(vc, 2, 0), jnp.moveaxis(doc, 2, 0), s_in)), 0, 2)
+
+    # --- reverse sweep for dk, dv: R_i entering each chunk (from the end)
+    def rev_step(r, qdo_i):
+        q_i, do_i = qdo_i
+        r_out = r  # state entering chunk i from the right (excl. chunk i)
+        r = r + jnp.einsum("bhck,bhcv->bhkv", q_i, do_i)
+        return r, r_out
+
+    r0 = jnp.zeros((b, h, dk, dv), acc)
+    _, r_in = jax.lax.scan(
+        rev_step,
+        r0,
+        (jnp.moveaxis(qc, 2, 0), jnp.moveaxis(doc, 2, 0)),
+        reverse=True,
+    )  # r_in[i] = Σ over chunks > i of q do^T
+
+    def dkv_chunk(q_i, k_i, v_i, do_i, r_i):
+        # dk_t = R_t v_t ; dv_t = R_tᵀ k_t
+        # intra part of R_t applied to v_t:
+        #   Σ_{s>=t} q_s (do_s · v_t)
+        dov = jnp.einsum("bhsv,bhtv->bhts", do_i, v_i) * mask_strict_t
+        dk_intra = jnp.einsum("bhts,bhsk->bhtk", dov, q_i)
+        dk_inter = jnp.einsum("bhkv,bhtv->bhtk", r_i, v_i)
+        #   Σ_{s>=t} (q_s · k_t) do_s
+        qk = jnp.einsum("bhsk,bhtk->bhts", q_i, k_i) * mask_strict_t
+        dv_intra = jnp.einsum("bhts,bhsv->bhtv", qk, do_i)
+        dv_inter = jnp.einsum("bhkv,bhtk->bhtv", r_i, k_i)
+        return dk_intra + dk_inter, dv_intra + dv_inter
+
+    dkc, dvc = jax.lax.map(
+        lambda a: dkv_chunk(*a),
+        (jnp.moveaxis(qc, 2, 0), jnp.moveaxis(kc, 2, 0),
+         jnp.moveaxis(vc, 2, 0), jnp.moveaxis(doc, 2, 0), r_in))
+    dkc = jnp.moveaxis(dkc, 0, 2)
+    dvc = jnp.moveaxis(dvc, 0, 2)
+
+    dq = dqc.reshape(b, h, -1, dk)[:, :, :t].astype(q.dtype)
+    dk_ = dkc.reshape(b, h, -1, dk)[:, :, :t].astype(k.dtype)
+    dv_ = dvc.reshape(b, h, -1, dv)[:, :, :t].astype(v.dtype)
+    return dq, dk_, dv_
+
+
+_cla_core.defvjp(_cla_fwd, _cla_bwd)
+
+
+def causal_linear_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    chunk_size: int = DEFAULT_CHUNK,
+    normalize: bool = False,
+    eps: float = 1e-6,
+) -> Array:
+    """Public causal linear attention with the paper's memory-efficient VJP.
+
+    The unnormalised core carries the custom VJP (paper §3.3); the optional
+    normaliser is a cheap differentiable epilogue handled by autodiff.
+    """
+    o = _cla_core(q, k, v, chunk_size)
+    if normalize:
+        acc = jnp.promote_types(q.dtype, jnp.float32)
+        k_cum = jnp.cumsum(k.astype(acc), axis=2)
+        denom = jnp.einsum("bhtk,bhtk->bht", q.astype(acc), k_cum)
+        o = (o.astype(acc) / (denom[..., None] + eps)).astype(v.dtype)
+    return o
+
+
+# ---------------------------------------------------------------------------
+# 3. Decode (the paper's fast lookup, used by serve_step)
+# ---------------------------------------------------------------------------
+
+def decode_step(
+    state: Array,
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    z: Optional[Array] = None,
+    normalize: bool = False,
+    eps: float = 1e-6,
+) -> Tuple[Array, Array, Optional[Array]]:
+    """One autoregressive step: update state with (k, v), answer q.
+
+    state: (B,H,Dk,Dv); q,k: (B,H,Dk); v: (B,H,Dv).
+    Returns (o: (B,H,Dv), new_state, new_z). O(k²) — independent of context
+    length: this is the paper's constant-time lookup property.
+    """
+    acc = state.dtype
+    state = state + jnp.einsum("bhk,bhv->bhkv", k.astype(acc), v.astype(acc))
+    o = jnp.einsum("bhkv,bhk->bhv", state, q.astype(acc))
+    new_z = None
+    if normalize:
+        assert z is not None
+        new_z = z + k.astype(acc)
+        denom = jnp.einsum("bhk,bhk->bh", new_z, q.astype(acc))
+        o = o / (denom[..., None] + eps)
+    return o.astype(v.dtype), state, new_z

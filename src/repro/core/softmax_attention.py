@@ -1,0 +1,100 @@
+"""Classic softmax attention (paper §2) — the baseline we compare against.
+
+R(D, Q) = Hᵀ softmax(Hq):  O(nk) per lookup, O(nk) memory. Also provides
+the causal multi-head form used by the transformer `softmax` backend and
+complexity-accounting helpers for the Table-1 benchmark.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def softmax_lookup(h: Array, q: Array) -> Array:
+    """R(D,Q) = Hᵀ softmax(Hq). h: (..., n, k); q: (..., k) or (..., m, k)."""
+    single = q.ndim == h.ndim - 1
+    if single:
+        q = q[..., None, :]
+    scores = jnp.einsum("...nk,...mk->...mn", h, q)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("...mn,...nk->...mk", probs, h.astype(jnp.float32))
+    out = out.astype(h.dtype)
+    return out[..., 0, :] if single else out
+
+
+def causal_softmax_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    scale: Optional[float] = None,
+    bias: Optional[Array] = None,
+) -> Array:
+    """Causal softmax attention, (B,H,T,D) convention, fp32 softmax."""
+    t = q.shape[2]
+    s = k.shape[2]
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k).astype(jnp.float32) * scale
+    if bias is not None:
+        scores = scores + bias
+    causal = jnp.tril(jnp.ones((t, s), bool), k=s - t)
+    scores = jnp.where(causal, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", probs.astype(v.dtype), v)
+
+
+def softmax_decode_step(
+    k_cache: Array,
+    v_cache: Array,
+    cache_len: Array,
+    q: Array,
+    k_new: Array,
+    v_new: Array,
+    *,
+    scale: Optional[float] = None,
+) -> Tuple[Array, Array, Array]:
+    """One decode step against a KV cache (the O(n) lookup we beat).
+
+    k_cache, v_cache: (B,H,S,D) ring buffers; cache_len: () current length;
+    q, k_new, v_new: (B,H,D). Returns (o, k_cache, v_cache).
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    k_cache = jax.lax.dynamic_update_index_in_dim(k_cache, k_new, cache_len, 2)
+    v_cache = jax.lax.dynamic_update_index_in_dim(v_cache, v_new, cache_len, 2)
+    s = k_cache.shape[2]
+    scores = jnp.einsum("bhd,bhsd->bhs", q, k_cache).astype(jnp.float32)
+    scores = scores * scale
+    valid = jnp.arange(s) <= cache_len
+    scores = jnp.where(valid[None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhs,bhsd->bhd", probs.astype(v_cache.dtype), v_cache)
+    return o, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Complexity accounting (paper Table 1)
+# ---------------------------------------------------------------------------
+
+def lookup_flops_softmax(n: int, k: int, m: int = 1) -> int:
+    """Per-query softmax lookup: Hq (2nk) + softmax (~5n) + Hᵀp (2nk)."""
+    return m * (2 * n * k + 5 * n + 2 * n * k)
+
+
+def lookup_flops_linear(k: int, m: int = 1) -> int:
+    """Per-query linear lookup Cq: 2k² — independent of n (the claim)."""
+    return m * 2 * k * k
+
+
+def memory_softmax(n: int, k: int, bytes_per: int = 4) -> int:
+    return n * k * bytes_per
+
+
+def memory_linear(k: int, bytes_per: int = 4) -> int:
+    return k * k * bytes_per

@@ -1,0 +1,196 @@
+"""Fixed-size document representations (the paper's k×k store).
+
+``DocumentState`` is the paper's deliverable object: a document compressed
+to C = HᵀH (optionally a key-sum normaliser z). States are mergeable
+(C = C_a + C_b for concatenated/sharded documents — C is a sum of outer
+products), serialisable, and queryable in O(k²).
+
+``DocumentStore`` is the serving-side container used by
+``examples/serve_lookup.py``: millions of queries against pre-encoded
+documents, never touching the raw hidden states — the paper's headline
+information-retrieval scenario.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DocumentState:
+    """Fixed-size representation of one (batch of) document(s).
+
+    c: (..., k, k) non-centred covariance of hidden states (paper §3.1).
+    z: (..., k) optional key-sum normaliser.
+    n_tokens: number of tokens folded into the state (for diagnostics —
+       the representation itself is O(k²) regardless of n).
+    """
+
+    c: Array
+    z: Optional[Array]
+    n_tokens: int
+
+    def tree_flatten(self):
+        return (self.c, self.z), (self.n_tokens,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        c, z = children
+        return cls(c=c, z=z, n_tokens=aux[0])
+
+    @property
+    def k(self) -> int:
+        return self.c.shape[-1]
+
+    @property
+    def nbytes(self) -> int:
+        n = self.c.size * self.c.dtype.itemsize
+        if self.z is not None:
+            n += self.z.size * self.z.dtype.itemsize
+        return n
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_hidden_states(cls, h: Array, with_normalizer: bool = False
+                           ) -> "DocumentState":
+        c = jnp.einsum("...nk,...nl->...kl", h, h)
+        z = jnp.sum(h, axis=-2) if with_normalizer else None
+        return cls(c=c, z=z, n_tokens=h.shape[-2])
+
+    @classmethod
+    def zeros(cls, k: int, batch_shape=(), dtype=jnp.float32,
+              with_normalizer: bool = False) -> "DocumentState":
+        c = jnp.zeros((*batch_shape, k, k), dtype)
+        z = jnp.zeros((*batch_shape, k), dtype) if with_normalizer else None
+        return cls(c=c, z=z, n_tokens=0)
+
+    # -- the paper's operations --------------------------------------------
+
+    def update(self, h_t: Array) -> "DocumentState":
+        """C_{t+1} = C_t + h hᵀ (paper §3.2 streaming update)."""
+        c = self.c + jnp.einsum("...k,...l->...kl", h_t, h_t)
+        z = None if self.z is None else self.z + h_t
+        return DocumentState(c=c, z=z, n_tokens=self.n_tokens + 1)
+
+    def lookup(self, q: Array, normalize: bool = False,
+               eps: float = 1e-6) -> Array:
+        """R(D,Q) = Cq — O(k²) regardless of document length."""
+        if q.ndim == self.c.ndim - 1:
+            out = jnp.einsum("...kl,...l->...k", self.c, q)
+            if normalize and self.z is not None:
+                out = out / (jnp.einsum("...k,...k->...", self.z, q)[..., None]
+                             + eps)
+            return out
+        out = jnp.einsum("...kl,...ml->...mk", self.c, q)
+        if normalize and self.z is not None:
+            denom = jnp.einsum("...k,...mk->...m", self.z, q)[..., None]
+            out = out / (denom + eps)
+        return out
+
+    def merge(self, other: "DocumentState") -> "DocumentState":
+        """States of document shards sum — C is a sum of outer products."""
+        z = None
+        if self.z is not None and other.z is not None:
+            z = self.z + other.z
+        return DocumentState(
+            c=self.c + other.c, z=z, n_tokens=self.n_tokens + other.n_tokens
+        )
+
+
+class DocumentStore:
+    """Key → DocumentState container with npz persistence.
+
+    The serving hot path (``batched_lookup``) runs against a cached
+    stacked (N, k, k) tensor + jitted gather-lookup, so a query costs one
+    device dispatch — not a host-side restack (which would hide the
+    paper's O(k²) advantage behind Python overhead).
+    """
+
+    def __init__(self) -> None:
+        self._docs: Dict[str, DocumentState] = {}
+        self._stack_cache = None   # (ids->row, (N,k,k) C, (N,k) z|None)
+
+    def __len__(self) -> int:
+        return len(self._docs)
+
+    def __contains__(self, doc_id: str) -> bool:
+        return doc_id in self._docs
+
+    def add(self, doc_id: str, state: DocumentState) -> None:
+        self._docs[doc_id] = state
+        self._stack_cache = None
+
+    def get(self, doc_id: str) -> DocumentState:
+        return self._docs[doc_id]
+
+    def ids(self) -> Iterable[str]:
+        return self._docs.keys()
+
+    def _stacked(self):
+        if self._stack_cache is None:
+            ids = list(self._docs)
+            rows = {d: i for i, d in enumerate(ids)}
+            cs = jnp.stack([self._docs[d].c for d in ids])
+            zs = (jnp.stack([self._docs[d].z for d in ids])
+                  if all(self._docs[d].z is not None for d in ids)
+                  else None)
+            self._stack_cache = (rows, cs, zs)
+        return self._stack_cache
+
+    @staticmethod
+    @jax.jit
+    def _lookup_rows(cs: Array, rows: Array, queries: Array) -> Array:
+        return jnp.einsum("bkl,bl->bk", cs[rows], queries)
+
+    def batched_lookup(self, doc_ids, queries: Array,
+                       normalize: bool = False) -> Array:
+        """Answer queries[i] against doc_ids[i] in one jitted dispatch."""
+        rows, cs, zs = self._stacked()
+        idx = jnp.asarray([rows[d] for d in doc_ids], jnp.int32)
+        out = self._lookup_rows(cs, idx, queries)
+        if normalize and zs is not None:
+            denom = jnp.einsum("bk,bk->b", zs[idx], queries)[..., None]
+            out = out / (denom + 1e-6)
+        return out
+
+    @property
+    def nbytes(self) -> int:
+        return sum(s.nbytes for s in self._docs.values())
+
+    def save(self, path: str) -> None:
+        arrays = {}
+        for doc_id, st in self._docs.items():
+            arrays[f"{doc_id}::c"] = np.asarray(st.c)
+            arrays[f"{doc_id}::n"] = np.asarray(st.n_tokens)
+            if st.z is not None:
+                arrays[f"{doc_id}::z"] = np.asarray(st.z)
+        tmp = path + ".tmp.npz"
+        np.savez(tmp, **arrays)
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "DocumentStore":
+        store = cls()
+        data = np.load(path)
+        ids = {k.split("::")[0] for k in data.files}
+        for doc_id in ids:
+            z = data.get(f"{doc_id}::z")
+            store.add(
+                doc_id,
+                DocumentState(
+                    c=jnp.asarray(data[f"{doc_id}::c"]),
+                    z=None if z is None else jnp.asarray(z),
+                    n_tokens=int(data[f"{doc_id}::n"]),
+                ),
+            )
+        return store

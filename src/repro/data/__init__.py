@@ -1,0 +1,5 @@
+"""Data pipeline: deterministic, sharded, checkpointable."""
+
+from repro.data.synthetic import SyntheticLMDataset  # noqa: F401
+from repro.data.memmap import TokenFileDataset, write_token_file  # noqa: F401
+from repro.data.cloze import ClozeTask, ClozeBatch  # noqa: F401

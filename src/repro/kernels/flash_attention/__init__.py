@@ -1,0 +1,2 @@
+"""flash_attention kernel package."""
+from repro.kernels.flash_attention import ops, ref  # noqa: F401

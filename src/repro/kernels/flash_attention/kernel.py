@@ -1,0 +1,95 @@
+"""Pallas TPU causal flash attention (the paper's softmax baseline).
+
+Online-softmax over KV chunks with running (m, l, acc) in VMEM scratch.
+Grid: (BH, n_q, n_kv) with the KV axis minor (sequential), so the scratch
+carries across KV chunks of a fixed query chunk. This kernel exists to
+benchmark the O(n) softmax lookup against the paper's O(k²) linear lookup
+on identical tiling assumptions.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                *, cq, ckv, scale, t_off, s_real):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)       # (Cq, D)
+    k = k_ref[0].astype(jnp.float32)       # (Ckv, D)
+    v = v_ref[0].astype(jnp.float32)       # (Ckv, D)
+
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    rows = iq * cq + jax.lax.broadcasted_iota(jnp.int32, (cq, ckv), 0) + t_off
+    cols = ik * ckv + jax.lax.broadcasted_iota(jnp.int32, (cq, ckv), 1)
+    scores = jnp.where((rows >= cols) & (cols < s_real), scores, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    p = jnp.exp(scores - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _emit():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked (padded) query rows
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def fwd(q, k, v, *, cq: int = 128, ckv: int = 128,
+        scale: float | None = None, interpret: bool = False,
+        t_off: int | None = None, s_real: int | None = None):
+    """q: (BH, T, D); k, v: (BH, S, D); T % cq == 0, S % ckv == 0.
+
+    Causal alignment: query i attends key j iff j ≤ i + t_off and
+    j < s_real. Defaults assume queries are the LAST T positions of the S
+    keys (t_off = S − T), the decode/prefill convention.
+    """
+    bh, t, d = q.shape
+    s = k.shape[1]
+    if scale is None:
+        scale = d ** -0.5
+    kernel = functools.partial(
+        _fwd_kernel, cq=cq, ckv=ckv, scale=scale,
+        t_off=s - t if t_off is None else t_off,
+        s_real=s if s_real is None else s_real,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, t // cq, s // ckv),
+        in_specs=[
+            pl.BlockSpec((1, cq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, ckv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, ckv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((cq, 1), jnp.float32),
+            pltpu.VMEM((cq, 1), jnp.float32),
+            pltpu.VMEM((cq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

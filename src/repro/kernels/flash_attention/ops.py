@@ -1,0 +1,48 @@
+"""Jit'd wrapper for the flash-attention baseline kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as _k
+
+Array = jax.Array
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    cq: int = 128,
+    ckv: int = 128,
+    scale: float | None = None,
+    interpret: bool | None = None,
+) -> Array:
+    """Causal softmax attention via Pallas. (B,H,T,D) convention."""
+    if interpret is None:
+        interpret = _on_cpu()
+    b, h, t, d = q.shape
+    s = k.shape[2]
+    cq_ = min(cq, t) if t % cq else cq
+    ckv_ = min(ckv, s) if s % ckv else ckv
+    t_pad = -(-t // cq_) * cq_
+    s_pad = -(-s // ckv_) * ckv_
+    qf = q.reshape(b * h, t, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+    if t_pad != t:
+        qf = jnp.pad(qf, ((0, 0), (0, t_pad - t), (0, 0)))
+    if s_pad != s:
+        kf = jnp.pad(kf, ((0, 0), (0, s_pad - s), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, s_pad - s), (0, 0)))
+    # t_off/s_real use the REAL lengths so padded keys stay masked and
+    # padded query rows are harmless (sliced off below).
+    o = _k.fwd(qf, kf, vf, cq=cq_, ckv=ckv_, scale=scale,
+               interpret=interpret, t_off=s - t, s_real=s)
+    return o[:, :t].reshape(b, h, t, d)

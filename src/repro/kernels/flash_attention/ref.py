@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the (baseline) causal flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, *,
+                        scale: float | None = None) -> Array:
+    """Causal softmax attention. q: (BH,T,D), k/v: (BH,S,D), T ≤ S."""
+    t, s = q.shape[1], k.shape[1]
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("btd,bsd->bts", q, k).astype(jnp.float32) * scale
+    causal = jnp.tril(jnp.ones((t, s), bool), k=s - t)
+    scores = jnp.where(causal, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bts,bsd->btd", probs.astype(v.dtype), v)

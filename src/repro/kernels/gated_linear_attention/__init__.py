@@ -1,0 +1,2 @@
+"""gated_linear_attention kernel package."""
+from repro.kernels.gated_linear_attention import ops, ref  # noqa: F401

@@ -1,0 +1,261 @@
+"""Pallas TPU kernels for gated (decay) chunk-parallel linear attention.
+
+Implements the paper's generalised update (eq. 4)
+    S_t = diag(a_t) S_{t-1} + k_t v_tᵀ,    a_t = exp(g_t), g_t ≤ 0
+in chunk-parallel form. The within-chunk cumulative log-decay is computed
+with a lower-triangular ones matmul (MXU-friendly, avoids a VPU scan).
+
+Two attention conventions share the kernel:
+  * inclusive (GLA / RetNet / Mamba-2 SSD): query sees S_t (incl. token t)
+  * exclusive + u bonus (RWKV-6): query sees S_{t-1} + diag(u) k_t v_tᵀ
+
+Log-decay is clamped to ``min_log_decay`` per token so exp(±cumsum) stays
+in fp32 range (see repro.core.gated for the numerical argument).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _masks(chunk: int):
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    incl = (row >= col).astype(jnp.float32)
+    strict = (row > col).astype(jnp.float32)
+    eye = (row == col).astype(jnp.float32)
+    tril_ones = incl  # for the cumulative-sum matmul
+    return incl, strict, eye, tril_ones
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, g_ref, u_ref, o_ref, s_out_ref,
+                s_scratch, *, chunk, exclusive, min_log_decay):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        s_scratch[...] = jnp.zeros_like(s_scratch)
+
+    q = q_ref[0].astype(jnp.float32)   # (C, Dk)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)   # (C, Dv)
+    g = jnp.clip(g_ref[0].astype(jnp.float32), min_log_decay, 0.0)
+    s = s_scratch[...]
+
+    incl, strict, eye, tril_ones = _masks(chunk)
+    # inclusive cumulative log-decay via matmul: bcum[t] = Σ_{s≤t} g[s]
+    bcum = jnp.dot(tril_ones, g, preferred_element_type=jnp.float32)
+    btot = bcum[-1:, :]                # (1, Dk)
+
+    q_scale = jnp.exp(bcum - g) if exclusive else jnp.exp(bcum)
+    q_hat = q * q_scale
+    k_hat = k * jnp.exp(-bcum)
+    mask = strict if exclusive else incl
+
+    scores = jnp.dot(q_hat, k_hat.T, preferred_element_type=jnp.float32)
+    scores = scores * mask
+    if exclusive:
+        u = u_ref[0].astype(jnp.float32)  # (1, Dk) broadcast row
+        diag = jnp.sum(q * u * k, axis=-1, keepdims=True)  # (C, 1)
+        scores = scores + diag * eye
+
+    intra = jnp.dot(scores, v, preferred_element_type=jnp.float32)
+    inter = jnp.dot(q_hat, s, preferred_element_type=jnp.float32)
+    o_ref[0] = (intra + inter).astype(o_ref.dtype)
+
+    k_tail = k * jnp.exp(btot - bcum)
+    s_scratch[...] = jnp.exp(btot).T * s + jnp.dot(
+        k_tail.T, v, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _emit_state():
+        s_out_ref[0] = s_scratch[...].astype(s_out_ref.dtype)
+
+
+def fwd(q, k, v, g, *, u=None, chunk: int = 128, exclusive: bool = False,
+        min_log_decay: float = -1.0, interpret: bool = False):
+    """q, k, g: (BH, T, Dk); v: (BH, T, Dv); u: (Dk,) or None."""
+    bh, t, dk = q.shape
+    dv = v.shape[-1]
+    n = t // chunk
+    if u is None:
+        u = jnp.zeros((dk,), jnp.float32)
+    u2 = u.reshape(1, dk).astype(jnp.float32)
+    kernel = functools.partial(
+        _fwd_kernel, chunk=chunk, exclusive=exclusive,
+        min_log_decay=min_log_decay,
+    )
+    o, s = pl.pallas_call(
+        kernel,
+        grid=(bh, n),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, dk), lambda b, i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dv), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, dk, dv), lambda b, i: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, dv), v.dtype),
+            jax.ShapeDtypeStruct((bh, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, g, u2)
+    return o, s
+
+
+# ---------------------------------------------------------------------------
+# Backward (inclusive convention) — two sweeps, recomputed states
+# ---------------------------------------------------------------------------
+
+def _dq_kernel(q_ref, k_ref, v_ref, g_ref, do_ref, dq_ref, s_scratch,
+               *, chunk, min_log_decay):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        s_scratch[...] = jnp.zeros_like(s_scratch)
+
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    g = jnp.clip(g_ref[0].astype(jnp.float32), min_log_decay, 0.0)
+    do = do_ref[0].astype(jnp.float32)
+    s = s_scratch[...]
+
+    incl, _, _, tril_ones = _masks(chunk)
+    bcum = jnp.dot(tril_ones, g, preferred_element_type=jnp.float32)
+    btot = bcum[-1:, :]
+    k_hat = k * jnp.exp(-bcum)
+    k_tail = k * jnp.exp(btot - bcum)
+
+    vdo = jnp.dot(do, v.T, preferred_element_type=jnp.float32) * incl
+    dq = jnp.dot(vdo, k_hat, preferred_element_type=jnp.float32)
+    dq = dq + jnp.dot(do, s.T, preferred_element_type=jnp.float32)
+    dq_ref[0] = (dq * jnp.exp(bcum)).astype(dq_ref.dtype)
+
+    s_scratch[...] = jnp.exp(btot).T * s + jnp.dot(
+        k_tail.T, v, preferred_element_type=jnp.float32
+    )
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, g_ref, do_ref, dk_ref, dv_ref,
+                r_scratch, *, chunk, min_log_decay):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        r_scratch[...] = jnp.zeros_like(r_scratch)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    g = jnp.clip(g_ref[0].astype(jnp.float32), min_log_decay, 0.0)
+    do = do_ref[0].astype(jnp.float32)
+    r = r_scratch[...]                 # decayed to the END of this chunk
+
+    incl, _, _, tril_ones = _masks(chunk)
+    mask_rev = incl.T
+    bcum = jnp.dot(tril_ones, g, preferred_element_type=jnp.float32)
+    btot = bcum[-1:, :]
+    q_hat = q * jnp.exp(bcum)
+    k_hat = k * jnp.exp(-bcum)
+    k_tail = k * jnp.exp(btot - bcum)
+
+    # dk_t = exp(−b_t)⊙Σ_{s≥t}(do_s·v_t) q̂_s  +  exp(b_T−b_t)⊙(R v_t)
+    dov = jnp.dot(v, do.T, preferred_element_type=jnp.float32) * mask_rev
+    dk_intra = jnp.dot(dov, q_hat, preferred_element_type=jnp.float32)
+    dk_intra = dk_intra * jnp.exp(-bcum)
+    dk_inter = jnp.dot(v, r.T, preferred_element_type=jnp.float32)
+    dk_inter = dk_inter * jnp.exp(btot - bcum)
+    dk_ref[0] = (dk_intra + dk_inter).astype(dk_ref.dtype)
+
+    # dv_t = Σ_{s≥t} scores[s,t] do_s  +  k_tailᵀ R
+    scores = jnp.dot(k_hat, q_hat.T, preferred_element_type=jnp.float32)
+    scores = scores * mask_rev
+    dv = jnp.dot(scores, do, preferred_element_type=jnp.float32)
+    dv = dv + jnp.dot(k_tail, r, preferred_element_type=jnp.float32)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+    # R_{prev} = exp(btot)⊙R + q̂ᵀ do  (decay only applies to older chunks'
+    # view of contributions beyond this chunk)
+    r_scratch[...] = jnp.exp(btot).T * r + jnp.dot(
+        q_hat.T, do, preferred_element_type=jnp.float32
+    )
+
+
+def bwd(q, k, v, g, do, *, chunk: int = 128, min_log_decay: float = -1.0,
+        interpret: bool = False):
+    """Backward for the inclusive convention. Returns (dq, dk, dv, dg).
+
+    dg uses the GLA identity dg = reverse-cumsum(q⊙dq − k⊙dk), computed in
+    plain jnp on the kernel outputs (cheap elementwise epilogue).
+    """
+    bh, t, dk_dim = q.shape
+    dv_dim = v.shape[-1]
+    n = t // chunk
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, chunk=chunk,
+                          min_log_decay=min_log_decay),
+        grid=(bh, n),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk_dim), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, dk_dim), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, dv_dim), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, dk_dim), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, dv_dim), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dk_dim), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, dk_dim), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((dk_dim, dv_dim), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, g, do)
+
+    def rev(b, i):
+        return (b, n - 1 - i, 0)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, chunk=chunk,
+                          min_log_decay=min_log_decay),
+        grid=(bh, n),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk_dim), rev),
+            pl.BlockSpec((1, chunk, dk_dim), rev),
+            pl.BlockSpec((1, chunk, dv_dim), rev),
+            pl.BlockSpec((1, chunk, dk_dim), rev),
+            pl.BlockSpec((1, chunk, dv_dim), rev),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dk_dim), rev),
+            pl.BlockSpec((1, chunk, dv_dim), rev),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, dk_dim), jnp.float32),
+            jax.ShapeDtypeStruct((bh, t, dv_dim), v.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk_dim, dv_dim), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, g, do)
+
+    # dg epilogue (GLA identity); clamp pass-through handled by caller.
+    acc = jnp.float32
+    diff = q.astype(acc) * dq - k.astype(acc) * dk
+    dg = jnp.flip(jnp.cumsum(jnp.flip(diff, axis=1), axis=1), axis=1)
+    g_b = g.astype(acc)
+    dg = dg * ((g_b >= min_log_decay) & (g_b <= 0.0)).astype(acc)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv, dg.astype(g.dtype)

@@ -1,0 +1,109 @@
+"""Jit'd public wrapper for the gated linear attention Pallas kernels."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gated_linear_attention import kernel as _k
+
+Array = jax.Array
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _prep(x: Array, t_pad: int, pad_value: float = 0.0) -> Array:
+    t = x.shape[1]
+    if t == t_pad:
+        return x
+    return jnp.pad(x, ((0, 0), (0, t_pad - t), (0, 0)),
+                   constant_values=pad_value)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _gla(q, k, v, g, chunk, min_log_decay, interpret):
+    o, _ = _k.fwd(q, k, v, g, chunk=chunk, min_log_decay=min_log_decay,
+                  interpret=interpret)
+    return o
+
+
+def _fwd_rule(q, k, v, g, chunk, min_log_decay, interpret):
+    o, _ = _k.fwd(q, k, v, g, chunk=chunk, min_log_decay=min_log_decay,
+                  interpret=interpret)
+    return o, (q, k, v, g)
+
+
+def _bwd_rule(chunk, min_log_decay, interpret, res, do):
+    q, k, v, g = res
+    dq, dk, dv, dg = _k.bwd(q, k, v, g, do, chunk=chunk,
+                            min_log_decay=min_log_decay, interpret=interpret)
+    return dq, dk, dv, dg
+
+
+_gla.defvjp(_fwd_rule, _bwd_rule)
+
+
+def gated_linear_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    log_decay: Array,
+    *,
+    chunk: int = 128,
+    min_log_decay: float = -1.0,
+    interpret: bool | None = None,
+) -> Array:
+    """Inclusive decay-gated causal linear attention (differentiable).
+
+    q, k: (B,H,T,Dk); v: (B,H,T,Dv); log_decay: broadcastable to q.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, t) if t % chunk else chunk
+    t_pad = -(-t // c) * c
+    g = jnp.broadcast_to(log_decay, q.shape)
+    qf = _prep(q.reshape(b * h, t, dk), t_pad)
+    kf = _prep(k.reshape(b * h, t, dk), t_pad)
+    vf = _prep(v.reshape(b * h, t, dv), t_pad)
+    gf = _prep(g.reshape(b * h, t, dk), t_pad)
+    o = _gla(qf, kf, vf, gf, c, min_log_decay, interpret)
+    return o[:, :t].reshape(b, h, t, dv)
+
+
+def rwkv6_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    log_decay: Array,
+    u: Array,
+    *,
+    chunk: int = 128,
+    min_log_decay: float = -1.0,
+    interpret: bool | None = None,
+) -> Tuple[Array, Array]:
+    """RWKV-6 convention (exclusive + bonus u). Forward only — training
+    uses the rematerialised jnp chunked path (see repro.core.gated)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, t) if t % chunk else chunk
+    t_pad = -(-t // c) * c
+    g = jnp.broadcast_to(log_decay, q.shape)
+    qf = _prep(q.reshape(b * h, t, dk), t_pad)
+    kf = _prep(k.reshape(b * h, t, dk), t_pad)
+    vf = _prep(v.reshape(b * h, t, dv), t_pad)
+    gf = _prep(g.reshape(b * h, t, dk), t_pad)
+    o, s = _k.fwd(qf, kf, vf, gf, u=u, chunk=c, exclusive=True,
+                  min_log_decay=min_log_decay, interpret=interpret)
+    return (
+        o[:, :t].reshape(b, h, t, dv),
+        s.reshape(b, h, dk, dv),
+    )

@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the gated (decay) linear attention kernel."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def gated_linear_attention_ref(
+    q: Array,
+    k: Array,
+    v: Array,
+    g: Array,
+    *,
+    exclusive: bool = False,
+    u: Optional[Array] = None,
+    initial_state: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+    """Direct quadratic reference of the paper's eq. 4 decay family.
+
+    q, k, g: (BH, T, Dk); v: (BH, T, Dv). g = log-decay ≤ 0.
+
+    inclusive: o_t = Σ_{s≤t} (q_t · (k_s ⊙ exp(b_t − b_s))) v_s
+    exclusive: o_t = Σ_{s<t} (q_t · (k_s ⊙ exp(b_{t−1} − b_s))) v_s
+                   + (q_t · (u ⊙ k_t)) v_t              (RWKV-6 bonus)
+    state:     S = Σ_s (k_s ⊙ exp(b_T − b_s)) v_sᵀ (+ decayed S₀)
+    """
+    bh, t, dk = q.shape
+    acc = jnp.float32
+    qf, kf, vf, gf = (x.astype(acc) for x in (q, k, v, g))
+    b = jnp.cumsum(gf, axis=1)  # inclusive
+    if exclusive:
+        b_q = b - gf            # b_{t-1}
+        mask = jnp.tril(jnp.ones((t, t), acc), k=-1)
+    else:
+        b_q = b
+        mask = jnp.tril(jnp.ones((t, t), acc))
+    # w[t,s,k] = exp(b_q[t,k] - b[s,k]) — explicit (small T only: oracle)
+    w = jnp.exp(b_q[:, :, None, :] - b[:, None, :, :])
+    scores = jnp.einsum("btk,btsk,bsk->bts", qf, w, kf) * mask
+    o = jnp.einsum("bts,bsv->btv", scores, vf)
+    if exclusive and u is not None:
+        diag = jnp.einsum("btk,k,btk->bt", qf, u.astype(acc), kf)
+        o = o + diag[..., None] * vf
+    btot = b[:, -1:, :]
+    k_tail = kf * jnp.exp(btot - b)
+    s = jnp.einsum("btk,btv->bkv", k_tail, vf)
+    if initial_state is not None:
+        s0 = initial_state.astype(acc)
+        s = s + jnp.exp(btot[:, 0, :])[..., None] * s0
+        o = o + jnp.einsum("btk,bkv->btv", qf * jnp.exp(b_q), s0)
+    return o.astype(v.dtype), s

@@ -1,0 +1,2 @@
+"""linear_attention kernel package."""
+from repro.kernels.linear_attention import ops, ref  # noqa: F401

@@ -1,0 +1,197 @@
+"""Pallas TPU kernels for chunk-parallel causal linear attention.
+
+The paper's recurrence C_{t+1} = C_t + h hᵀ is re-blocked for the MXU:
+the sequence is tiled into chunks of ``chunk`` tokens held in VMEM; the
+k×k (here Dk×Dv) state lives in a VMEM scratch that persists across the
+sequential chunk grid dimension. Each grid step does three MXU matmuls
+(scores, intra, state-update) instead of ``chunk`` rank-1 VPU updates.
+
+Grid layout: (BH, T // chunk) — the chunk axis is minor, so TPU iterates
+chunks sequentially per (batch·head), which is what makes the scratch a
+valid carry.
+
+The backward pass follows paper §3.3: nothing but (q, k, v, do) is read;
+forward states S_i are *recomputed* in a forward sweep (dq) and reverse
+states R_i in a reverse sweep (dk, dv — reverse iteration is expressed
+through the index_map).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _causal_mask(chunk: int, strict: bool = False) -> jax.Array:
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    return (row > col if strict else row >= col).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, s_out_ref, s_scratch, *, chunk):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        s_scratch[...] = jnp.zeros_like(s_scratch)
+
+    q = q_ref[0].astype(jnp.float32)   # (C, Dk)
+    k = k_ref[0].astype(jnp.float32)   # (C, Dk)
+    v = v_ref[0].astype(jnp.float32)   # (C, Dv)
+    s = s_scratch[...]                 # (Dk, Dv)
+
+    mask = _causal_mask(chunk)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * mask
+    intra = jnp.dot(scores, v, preferred_element_type=jnp.float32)
+    inter = jnp.dot(q, s, preferred_element_type=jnp.float32)
+    o_ref[0] = (intra + inter).astype(o_ref.dtype)
+
+    s_scratch[...] = s + jnp.dot(k.T, v, preferred_element_type=jnp.float32)
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _emit_state():
+        s_out_ref[0] = s_scratch[...].astype(s_out_ref.dtype)
+
+
+def fwd(q, k, v, *, chunk: int = 128, interpret: bool = False):
+    """q, k: (BH, T, Dk); v: (BH, T, Dv); T % chunk == 0."""
+    bh, t, dk = q.shape
+    dv = v.shape[-1]
+    n = t // chunk
+    grid = (bh, n)
+    kernel = functools.partial(_fwd_kernel, chunk=chunk)
+    o, s = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dv), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, dk, dv), lambda b, i: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, dv), v.dtype),
+            jax.ShapeDtypeStruct((bh, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)
+    return o, s
+
+
+# ---------------------------------------------------------------------------
+# Backward — dq sweep (forward direction, recomputes S)
+# ---------------------------------------------------------------------------
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, dq_ref, s_scratch, *, chunk):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        s_scratch[...] = jnp.zeros_like(s_scratch)
+
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    s = s_scratch[...]
+
+    mask = _causal_mask(chunk)
+    # dq_t = Σ_{s≤t} (do_t·v_s) k_s  +  S_in do_tᵀ-contraction
+    vdo = jnp.dot(do, v.T, preferred_element_type=jnp.float32) * mask
+    dq = jnp.dot(vdo, k, preferred_element_type=jnp.float32)
+    dq = dq + jnp.dot(do, s.T, preferred_element_type=jnp.float32)
+    dq_ref[0] = dq.astype(dq_ref.dtype)
+
+    s_scratch[...] = s + jnp.dot(k.T, v, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Backward — dk/dv sweep (reverse direction, recomputes R)
+# ---------------------------------------------------------------------------
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, dk_ref, dv_ref, r_scratch,
+                *, chunk):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        r_scratch[...] = jnp.zeros_like(r_scratch)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    r = r_scratch[...]                 # (Dk, Dv): Σ_{future} q do ᵀ
+
+    mask_rev = _causal_mask(chunk).T   # s >= t
+    # dk_t = Σ_{s≥t} (do_s·v_t) q_s + R v_t
+    dov = jnp.dot(v, do.T, preferred_element_type=jnp.float32) * mask_rev
+    dk = jnp.dot(dov, q, preferred_element_type=jnp.float32)
+    dk = dk + jnp.dot(v, r.T, preferred_element_type=jnp.float32)
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    # dv_t = Σ_{s≥t} (q_s·k_t) do_s + Rᵀ k_t
+    qk = jnp.dot(k, q.T, preferred_element_type=jnp.float32) * mask_rev
+    dv = jnp.dot(qk, do, preferred_element_type=jnp.float32)
+    dv = dv + jnp.dot(k, r, preferred_element_type=jnp.float32)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+    r_scratch[...] = r + jnp.dot(q.T, do, preferred_element_type=jnp.float32)
+
+
+def bwd(q, k, v, do, *, chunk: int = 128, interpret: bool = False):
+    """Memory-efficient backward: recompute-in-sweep, no stored states."""
+    bh, t, dk_dim = q.shape
+    dv_dim = v.shape[-1]
+    n = t // chunk
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, chunk=chunk),
+        grid=(bh, n),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk_dim), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, dk_dim), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, dv_dim), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, dv_dim), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dk_dim), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, dk_dim), q.dtype),
+        scratch_shapes=[pltpu.VMEM((dk_dim, dv_dim), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do)
+
+    # reverse sweep: iterate chunks last→first via the index map
+    def rev(b, i):
+        return (b, n - 1 - i, 0)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, chunk=chunk),
+        grid=(bh, n),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk_dim), rev),
+            pl.BlockSpec((1, chunk, dk_dim), rev),
+            pl.BlockSpec((1, chunk, dv_dim), rev),
+            pl.BlockSpec((1, chunk, dv_dim), rev),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dk_dim), rev),
+            pl.BlockSpec((1, chunk, dv_dim), rev),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, dk_dim), k.dtype),
+            jax.ShapeDtypeStruct((bh, t, dv_dim), v.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk_dim, dv_dim), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do)
+    return dq, dk, dv

@@ -1,0 +1,98 @@
+"""Jit'd public wrapper around the linear-attention Pallas kernels.
+
+Handles (B, H, T, D) ↔ (BH, T, D) reshaping, chunk padding, the
+custom-VJP plumbing (paper §3.3 backward) and the interpret-mode fallback
+used for CPU validation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.linear_attention import kernel as _k
+
+Array = jax.Array
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: Array, t_pad: int) -> Array:
+    t = x.shape[1]
+    if t == t_pad:
+        return x
+    return jnp.pad(x, ((0, 0), (0, t_pad - t), (0, 0)))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _linear_attention(q, k, v, chunk, interpret):
+    o, _ = _k.fwd(q, k, v, chunk=chunk, interpret=interpret)
+    return o
+
+
+def _fwd_rule(q, k, v, chunk, interpret):
+    o, _ = _k.fwd(q, k, v, chunk=chunk, interpret=interpret)
+    return o, (q, k, v)
+
+
+def _bwd_rule(chunk, interpret, res, do):
+    q, k, v = res
+    dq, dk, dv = _k.bwd(q, k, v, do, chunk=chunk, interpret=interpret)
+    return dq, dk, dv
+
+
+_linear_attention.defvjp(_fwd_rule, _bwd_rule)
+
+
+def linear_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    chunk: int = 128,
+    interpret: bool | None = None,
+) -> Array:
+    """Causal linear attention o_t = Σ_{s≤t}(q_t·k_s)v_s via Pallas.
+
+    q, k: (B, H, T, Dk); v: (B, H, T, Dv). Differentiable (custom VJP with
+    recompute — no stored intermediate states, paper §3.3).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, t) if t % chunk else chunk
+    t_pad = -(-t // c) * c
+    qf = _pad_to(q.reshape(b * h, t, dk), t_pad)
+    kf = _pad_to(k.reshape(b * h, t, dk), t_pad)
+    vf = _pad_to(v.reshape(b * h, t, dv), t_pad)
+    o = _linear_attention(qf, kf, vf, c, interpret)
+    return o[:, :t].reshape(b, h, t, dv)
+
+
+def linear_attention_with_state(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    chunk: int = 128,
+    interpret: bool | None = None,
+) -> Tuple[Array, Array]:
+    """Forward-only variant that also returns the final Dk×Dv state
+    (prefill → decode handoff; the paper's fixed-size representation)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, t) if t % chunk else chunk
+    t_pad = -(-t // c) * c
+    qf = _pad_to(q.reshape(b * h, t, dk), t_pad)
+    kf = _pad_to(k.reshape(b * h, t, dk), t_pad)
+    vf = _pad_to(v.reshape(b * h, t, dv), t_pad)
+    o, s = _k.fwd(qf, kf, vf, chunk=c, interpret=interpret)
+    return o[:, :t].reshape(b, h, t, dv), s.reshape(b, h, dk, dv)

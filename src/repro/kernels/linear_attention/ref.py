@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the chunked causal linear attention kernel."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def linear_attention_ref(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    initial_state: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+    """Causal linear attention, quadratic-time direct form.
+
+    q, k: (BH, T, Dk); v: (BH, T, Dv). Returns (o: (BH,T,Dv), s: (BH,Dk,Dv)).
+    o_t = Σ_{s≤t} (q_t·k_s) v_s (+ q_t S₀);  S = S₀ + Σ_t k_t v_tᵀ.
+    """
+    t = q.shape[1]
+    acc = jnp.float32
+    qf, kf, vf = q.astype(acc), k.astype(acc), v.astype(acc)
+    mask = jnp.tril(jnp.ones((t, t), acc))
+    scores = jnp.einsum("btk,bsk->bts", qf, kf) * mask
+    o = jnp.einsum("bts,bsv->btv", scores, vf)
+    if initial_state is not None:
+        o = o + jnp.einsum("btk,bkv->btv", qf, initial_state.astype(acc))
+        s = initial_state.astype(acc) + jnp.einsum("btk,btv->bkv", kf, vf)
+    else:
+        s = jnp.einsum("btk,btv->bkv", kf, vf)
+    return o.astype(v.dtype), s
+
+
+def linear_attention_grads_ref(q, k, v, do):
+    """Closed-form gradients (paper §3.3 generalised): reference for bwd."""
+    t = q.shape[1]
+    acc = jnp.float32
+    qf, kf, vf, dof = (x.astype(acc) for x in (q, k, v, do))
+    mask = jnp.tril(jnp.ones((t, t), acc))          # s <= t
+    mask_rev = jnp.triu(jnp.ones((t, t), acc))      # s >= t
+    vdo = jnp.einsum("bsv,btv->bts", vf, dof) * mask
+    dq = jnp.einsum("bts,bsk->btk", vdo, kf)
+    dov = jnp.einsum("bsv,btv->bts", dof, vf) * mask_rev
+    dk = jnp.einsum("bts,bsk->btk", dov, qf)
+    qk = jnp.einsum("bsk,btk->bts", qf, kf) * mask_rev
+    dv = jnp.einsum("bts,bsv->btv", qk, dof)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)

@@ -1,0 +1,2 @@
+"""lookup kernel package."""
+from repro.kernels.lookup import ops, ref  # noqa: F401

@@ -1,0 +1,31 @@
+"""Jit'd wrappers for the fast-lookup kernels."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.kernels.lookup import kernel as _k
+
+Array = jax.Array
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def mass_lookup(c: Array, q: Array, *, interpret: bool | None = None
+                ) -> Array:
+    """Answer q: (N, M, K) against document states c: (N, K, K)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    return _k.mass_lookup(c, q, interpret=interpret)
+
+
+def fused_decode(s: Array, q: Array, k: Array, v: Array,
+                 *, interpret: bool | None = None) -> Tuple[Array, Array]:
+    """One fused O(k²) decode step (paper's fast lookup at generation)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    return _k.decode(s, q, k, v, interpret=interpret)

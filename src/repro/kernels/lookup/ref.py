@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the fused fast-lookup / decode kernel."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def mass_lookup_ref(c: Array, q: Array, z: Optional[Array] = None,
+                    eps: float = 1e-6) -> Array:
+    """R = C q for m queries. c: (N,K,K); q: (N,M,K) -> (N,M,K)."""
+    out = jnp.einsum("nkl,nml->nmk", c.astype(jnp.float32),
+                     q.astype(jnp.float32))
+    if z is not None:
+        denom = jnp.einsum("nk,nmk->nm", z.astype(jnp.float32),
+                           q.astype(jnp.float32))
+        out = out / (denom[..., None] + eps)
+    return out.astype(q.dtype)
+
+
+def decode_ref(s: Array, q: Array, k: Array, v: Array
+               ) -> Tuple[Array, Array]:
+    """Fused decode: S += k vᵀ; o = Sᵀ q. s: (N,Dk,Dv); q,k: (N,Dk);
+    v: (N,Dv)."""
+    sf = s.astype(jnp.float32)
+    sf = sf + jnp.einsum("nk,nv->nkv", k.astype(jnp.float32),
+                         v.astype(jnp.float32))
+    o = jnp.einsum("nkv,nk->nv", sf, q.astype(jnp.float32))
+    return o.astype(v.dtype), sf.astype(s.dtype)

@@ -1,0 +1,406 @@
+"""Post-SPMD HLO analysis: trip-count-aware FLOP / byte / collective
+accounting.
+
+Why not just ``compiled.cost_analysis()``:
+  1. XLA's cost analysis counts a ``while`` body ONCE — the scan over
+     layers (and any grad-accumulation loop) would be under-counted by
+     the trip count (verified in tests/test_hlo_parse.py).
+  2. The CPU backend's float-normalization pass rewrites bf16 compute to
+     f32 AFTER partitioning, inflating byte counts 2× relative to the
+     TPU target. The dump taken right after the ``spmd-partitioning``
+     pass still has true dtypes.
+
+So the dry-run compiles with ``--xla_dump_hlo_pass_re=spmd.*`` and this
+module parses
+
+  * the **post-SPMD dump** for dot-FLOPs and collective bytes (true
+    dtypes, pre-fusion, while-structure intact), and
+  * the **final executable text** for fusion-boundary HBM traffic (the
+    only fusion-aware source; f32-inflation caveat documented in
+    EXPERIMENTS.md §Roofline).
+
+Both walks multiply by while-loop trip counts extracted from each loop
+condition (``compare(induction, constant(N)), direction=LT``).
+
+Per-collective wire bytes use ring-algorithm payloads with group size S
+from ``replica_groups=[G,S]<=[N]``:
+
+    all-reduce         2 · bytes · (S−1)/S     (reduce-scatter + all-gather)
+    all-gather         bytes · (S−1)/S         (bytes = gathered result)
+    reduce-scatter     bytes_result · (S−1)
+    all-to-all         bytes · (S−1)/S
+    collective-permute bytes
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(
+    r"\b([a-z]+[0-9]+(?:e[0-9]+m[0-9]+(?:fn)?)?|pred)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[^\s(]+)\s+([\w\-]+)")
+# computation header: `%name (args...) -> rettype {` — args may contain
+# nested parens (tuple types), so match greedily to the trailing `{`.
+_HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+
+# ops that move no HBM bytes themselves
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "reshape", "while", "conditional", "call",
+    "partition-id", "replica-id", "rng-get-and-update-state", "domain",
+    "opt-barrier", "custom-call",
+}
+
+
+def _shape_bytes(type_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_text: str) -> List[int]:
+    m = _SHAPE_RE.search(type_text)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+def _is_score_block(type_text: str) -> bool:
+    """Float tensor with equal trailing dims ≥ 256 — an attention score
+    block (f32 scores/probabilities or bf16 ds blocks), VMEM-resident
+    under the Pallas kernels."""
+    if not (type_text.startswith("f32[") or type_text.startswith("bf16[")):
+        return False
+    dims = _shape_dims(type_text)
+    return len(dims) >= 2 and dims[-1] == dims[-2] and dims[-1] >= 256
+
+
+def _is_attn_accum(type_text: str) -> bool:
+    """f32 (…, block≥256, d) tensors in read-modify-write slices — the
+    pair-scan's (acc, dq, dk, dv) accumulators. A Pallas flash kernel
+    keeps them in VMEM scratch; decode KV caches are bf16 and state
+    matrices have dims[-2] ≤ 128, so neither matches."""
+    if not type_text.startswith("f32["):
+        return False
+    dims = _shape_dims(type_text)
+    return len(dims) >= 3 and dims[-2] >= 256
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group_size: int
+    computation: str
+    multiplicity: int = 1
+
+    @property
+    def wire_bytes(self) -> float:
+        s = max(self.group_size, 1)
+        frac = (s - 1) / s if s > 1 else 0.0
+        if self.kind == "all-reduce":
+            return 2.0 * self.result_bytes * frac
+        if self.kind == "all-gather":
+            return self.result_bytes * frac
+        if self.kind == "reduce-scatter":
+            return float(self.result_bytes) * (s - 1)
+        if self.kind == "all-to-all":
+            return self.result_bytes * frac
+        return float(self.result_bytes)
+
+
+@dataclasses.dataclass
+class ModuleAnalysis:
+    """Trip-count-aware per-device totals for one HLO module."""
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    # HBM bytes of f32 square "score blocks" (trailing dims equal, ≥256):
+    # the blocked-attention intermediates that a Pallas flash kernel keeps
+    # in VMEM. memory term is reported with and without them.
+    score_bytes: float = 0.0
+    collectives: List[CollectiveOp] = dataclasses.field(default_factory=list)
+
+    @property
+    def collective_wire_bytes(self) -> float:
+        return sum(o.wire_bytes * o.multiplicity for o in self.collectives)
+
+    @property
+    def collective_payload_bytes(self) -> float:
+        return sum(o.result_bytes * o.multiplicity for o in self.collectives)
+
+    def collective_by_kind(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for o in self.collectives:
+            out[o.kind] = out.get(o.kind, 0.0) + \
+                o.wire_bytes * o.multiplicity
+        return out
+
+    def collective_count(self) -> int:
+        return sum(o.multiplicity for o in self.collectives)
+
+
+# ---------------------------------------------------------------------------
+# module structure
+# ---------------------------------------------------------------------------
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    current: Optional[str] = None
+    for line in text.splitlines():
+        if current is None:
+            m = _HEADER_RE.match(line)
+            if m:
+                current = m.group(1)
+                comps[current] = []
+        else:
+            if line.strip() == "}":
+                current = None
+            else:
+                comps[current].append(line)
+    return comps
+
+
+def _find_trip_count(cond_lines: List[str]) -> int:
+    constants: Dict[str, int] = {}
+    for line in cond_lines:
+        m = re.match(r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*\S+\s+constant\((\d+)\)",
+                     line)
+        if m:
+            constants[m.group(1)] = int(m.group(2))
+    for line in cond_lines:
+        if " compare(" in line and "direction=LT" in line:
+            m = re.search(r"compare\(([^)]*)\)", line)
+            if m:
+                for operand in m.group(1).split(","):
+                    name = operand.strip().lstrip("%")
+                    if name in constants:
+                        return constants[name]
+    return max(constants.values(), default=1)
+
+
+def _multiplicities(text: str, comps: Dict[str, List[str]]) -> Dict[str, int]:
+    edges: Dict[str, List[Tuple[str, int]]] = {c: [] for c in comps}
+    for name, lines in comps.items():
+        for line in lines:
+            wm = re.search(r"while\(.*?\)\s*,\s*condition=%?([\w.\-]+)\s*,"
+                           r"\s*body=%?([\w.\-]+)", line)
+            if wm:
+                trips = _find_trip_count(comps.get(wm.group(1), []))
+                edges[name].append((wm.group(2), trips))
+                edges[name].append((wm.group(1), trips))  # cond also runs
+                continue
+            for cm in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", line):
+                if cm.group(1) in comps:
+                    edges[name].append((cm.group(1), 1))
+            bm = re.search(r"(?:true_computation|false_computation)="
+                           r"%?([\w.\-]+)", line)
+            if bm and bm.group(1) in comps:
+                edges[name].append((bm.group(1), 1))
+
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+                break
+    mult: Dict[str, int] = {}
+
+    def visit(comp: str, m: int, depth: int = 0):
+        if depth > 60 or comp not in comps:
+            return
+        mult[comp] = mult.get(comp, 0) + m
+        for child, w in edges.get(comp, []):
+            visit(child, m * w, depth + 1)
+
+    if entry:
+        visit(entry, 1)
+    else:
+        mult = {c: 1 for c in comps}
+    return mult
+
+
+# ---------------------------------------------------------------------------
+# the analyzer
+# ---------------------------------------------------------------------------
+
+# "major" byte model (for the pre-fusion post-SPMD graph): ops that
+# always touch HBM on TPU. Elementwise/convert chains, broadcasts, pads,
+# slices, transposes and concats are assumed fused into their consumers
+# (XLA:TPU fusion + Mosaic layout handling); dots read operands + write
+# results; reductions read their data operand. Validated against an
+# analytic per-layer traffic model for yi-34b in EXPERIMENTS.md §Roofline.
+_MAJOR_READ_WRITE = {"dot", "convolution", "gather", "scatter", "copy"}
+_MAJOR_RESULT_ONLY = {"reduce", "reduce-window", "sort"}
+
+
+def analyze_module(
+    text: str,
+    *,
+    count_flops: bool = True,
+    count_bytes: bool = True,
+    count_collectives: bool = True,
+    bytes_model: str = "boundary",
+) -> ModuleAnalysis:
+    comps = _split_computations(text)
+    mult = _multiplicities(text, comps)
+    out = ModuleAnalysis()
+
+    coll_re = re.compile(
+        r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVES) + r")(?:-start)?\(")
+
+    for name, lines in comps.items():
+        m_comp = mult.get(name, 0)
+        if m_comp == 0:
+            continue
+        # local shape table: instruction name -> type text
+        shapes: Dict[str, str] = {}
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if dm:
+                shapes[dm.group(1)] = dm.group(2)
+
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            iname, itype, opcode = dm.group(1), dm.group(2), dm.group(3)
+
+            if count_collectives and opcode in _COLLECTIVES:
+                if "-done(" in line:
+                    continue
+                om = coll_re.search(line)
+                if om:
+                    gm = _GROUPS_RE.search(line)
+                    if gm:
+                        gsize = int(gm.group(2))
+                    else:
+                        gl = _GROUPS_LIST_RE.search(line)
+                        gsize = len(gl.group(1).split(",")) if gl else 1
+                    out.collectives.append(CollectiveOp(
+                        kind=opcode, result_bytes=_shape_bytes(itype),
+                        group_size=gsize, computation=name,
+                        multiplicity=m_comp))
+
+            if count_flops and opcode == "dot":
+                fm = re.search(r"dot\((?:%?([\w.\-]+))\s*,", line)
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                if fm and cm and fm.group(1) in shapes:
+                    lhs_dims = _shape_dims(shapes[fm.group(1)])
+                    contracted = 1
+                    if cm.group(1):
+                        for d in cm.group(1).split(","):
+                            di = int(d)
+                            if di < len(lhs_dims):
+                                contracted *= lhs_dims[di]
+                    result_elems = 1
+                    for d in _shape_dims(itype):
+                        result_elems *= d
+                    out.dot_flops += 2.0 * result_elems * contracted * m_comp
+
+            if count_bytes and bytes_model == "major":
+                b = 0.0
+                sb = 0.0
+                if itype.startswith("pred["):
+                    # 1-byte masks: regenerated from iota in-register on
+                    # TPU (never HBM-resident) — a CPU-lowering artifact
+                    continue
+                if opcode in ("dynamic-slice",):
+                    # read of the sliced window; the write side is
+                    # elided on TPU (scan-input slices alias/fuse into
+                    # their consumers, which are counted separately)
+                    b = 1.0 * _shape_bytes(itype)
+                    if _is_score_block(itype) or _is_attn_accum(itype):
+                        sb += b
+                elif opcode == "dynamic-update-slice":
+                    om = re.search(r"dynamic-update-slice\(([^)]*)\)", line)
+                    if om:
+                        ops_ = [o.strip().lstrip("%")
+                                for o in om.group(1).split(",")]
+                        if len(ops_) >= 2 and ops_[1] in shapes:
+                            b = 2.0 * _shape_bytes(shapes[ops_[1]])
+                            if (_is_score_block(shapes[ops_[1]])
+                                    or _is_attn_accum(shapes[ops_[1]])):
+                                sb += b
+                elif opcode in _MAJOR_RESULT_ONLY:
+                    b = float(_shape_bytes(itype))
+                    if _is_score_block(itype):
+                        sb += b
+                    om = re.search(re.escape(opcode) + r"\(([^)]*)\)", line)
+                    if om and opcode.startswith("reduce"):
+                        for operand in om.group(1).split(","):
+                            oname = operand.strip().lstrip("%")
+                            if oname in shapes:
+                                b += _shape_bytes(shapes[oname])
+                                if _is_score_block(shapes[oname]):
+                                    sb += _shape_bytes(shapes[oname])
+                                break  # first (data) operand only
+                elif opcode in _MAJOR_READ_WRITE:
+                    b = float(_shape_bytes(itype))
+                    if _is_score_block(itype):
+                        sb += b
+                    om = re.search(re.escape(opcode) + r"\(([^)]*)\)", line)
+                    if om:
+                        for operand in om.group(1).split(","):
+                            oname = operand.strip().lstrip("%")
+                            if oname in shapes:
+                                b += _shape_bytes(shapes[oname])
+                                if _is_score_block(shapes[oname]):
+                                    sb += _shape_bytes(shapes[oname])
+                elif opcode in _COLLECTIVES:
+                    b = 2.0 * _shape_bytes(itype)  # HBM in + out
+                out.hbm_bytes += b * m_comp
+                out.score_bytes += sb * m_comp
+                continue
+
+            if count_bytes and opcode not in _FREE_OPS:
+                if opcode == "dynamic-slice":
+                    # reads+writes only the sliced window, not the operand
+                    out.hbm_bytes += 2.0 * _shape_bytes(itype) * m_comp
+                    continue
+                if opcode == "dynamic-update-slice":
+                    # in-place update: traffic ≈ read+write of the update
+                    om = re.search(r"dynamic-update-slice\(([^)]*)\)", line)
+                    upd = 0
+                    if om:
+                        ops_ = [o.strip().lstrip("%")
+                                for o in om.group(1).split(",")]
+                        if len(ops_) >= 2 and ops_[1] in shapes:
+                            upd = _shape_bytes(shapes[ops_[1]])
+                    out.hbm_bytes += 2.0 * upd * m_comp
+                    continue
+                b = _shape_bytes(itype)
+                om = re.search(re.escape(opcode) + r"\(([^)]*)\)", line)
+                if om:
+                    for operand in om.group(1).split(","):
+                        oname = operand.strip().lstrip("%")
+                        if oname in shapes:
+                            b += _shape_bytes(shapes[oname])
+                out.hbm_bytes += float(b) * m_comp
+    return out
+
+
+# backwards-compatible collective-only entry point
+def parse_collectives(text: str) -> ModuleAnalysis:
+    return analyze_module(text, count_flops=False, count_bytes=False)

@@ -1,0 +1,123 @@
+"""Roofline-term computation (TPU v5e targets).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = wire_bytes_per_device / link_bw_effective
+
+``cost_analysis()`` of an SPMD-partitioned executable reports the
+PER-DEVICE program (verified empirically in tests/test_hlo_parse.py), so
+no further division by chip count is needed; the EXPERIMENTS.md table
+reports the equivalent global quantities alongside.
+
+Hardware constants (TPU v5e):
+  197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI. A v5e chip
+  has 4 ICI links on the 2D torus; ring reductions sustain roughly
+  2 links of useful reduce bandwidth, so the default effective collective
+  bandwidth is ICI_LINKS_EFFECTIVE · 50 GB/s = 100 GB/s. Per-link maths
+  is kept explicit so the assumption is auditable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_LINK_BW = 50e9              # bytes/s per link
+ICI_LINKS_EFFECTIVE = 2.0       # usable links for ring collectives
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    wire_bytes_per_device: float
+    n_devices: int
+    model_flops_global: float = 0.0
+    # HBM traffic of attention score blocks — VMEM-resident under the
+    # Pallas flash/linear kernels; the "pallas" memory term excludes it.
+    score_bytes_per_device: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def t_memory_pallas(self) -> float:
+        return max(self.hbm_bytes_per_device
+                   - self.score_bytes_per_device, 0.0) / HBM_BW
+
+    @property
+    def t_bound_pallas(self) -> float:
+        return max(self.t_compute, self.t_memory_pallas, self.t_collective)
+
+    @property
+    def mfu_bound_pallas(self) -> float:
+        denom = self.n_devices * PEAK_FLOPS_BF16 * self.t_bound_pallas
+        return self.model_flops_global / denom if denom else 0.0
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes_per_device / (
+            ICI_LINK_BW * ICI_LINKS_EFFECTIVE)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Lower-bound step time if compute/memory/comm fully overlap."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def model_flops_ratio(self) -> float:
+        """MODEL_FLOPS / compiled HLO FLOPs (global): how much of the
+        compiled compute is useful model math (catches remat/dispatch
+        waste; >1 would mean XLA found savings below 6ND)."""
+        hlo_global = self.flops_per_device * self.n_devices
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on achievable MFU: useful FLOPs / (chips × peak ×
+        bound step time)."""
+        denom = self.n_devices * PEAK_FLOPS_BF16 * self.t_bound
+        return self.model_flops_global / denom if denom else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "score_bytes_per_device": self.score_bytes_per_device,
+            "wire_bytes_per_device": self.wire_bytes_per_device,
+            "n_devices": self.n_devices,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_memory_pallas_s": self.t_memory_pallas,
+            "t_collective_s": self.t_collective,
+            "t_bound_s": self.t_bound,
+            "t_bound_pallas_s": self.t_bound_pallas,
+            "bottleneck": self.bottleneck,
+            "model_flops_global": self.model_flops_global,
+            "model_flops_ratio": self.model_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+            "mfu_bound_pallas": self.mfu_bound_pallas,
+        }
+
+
+def terms_from_artifact(art: Dict) -> RooflineTerms:
+    return RooflineTerms(
+        flops_per_device=art["cost"]["flops"],
+        hbm_bytes_per_device=art["cost"].get("bytes accessed", 0.0),
+        wire_bytes_per_device=art["collectives"]["wire_bytes"],
+        n_devices=art["n_devices"],
+        model_flops_global=art.get("model_flops", 0.0),
+    )

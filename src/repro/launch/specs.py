@@ -1,0 +1,122 @@
+"""Abstract (ShapeDtypeStruct) stand-ins for every model input/state —
+the dry-run lowers against these; nothing is ever allocated.
+
+``input_specs(cfg, shape)`` follows the assignment:
+  train_*    {tokens (B,T), labels (B,T)}           → train_step
+  prefill_*  {tokens (B,T)}                         → prefill_step
+  decode_* / long_*  {token (B,), pos ()} + decode state with a
+             seq_len-sized KV cache (softmax) or fixed-size matrix
+             states (linear family / SSM)           → serve_step
+
+[audio]/[vlm] archs additionally get the stubbed modality frontend input:
+precomputed patch embeddings (B, n_img, d_model) for cross-attention.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.optim import Optimizer
+
+Abstract = jax.ShapeDtypeStruct
+
+
+def _key_spec() -> Abstract:
+    return Abstract((2,), jnp.uint32)
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(
+        functools.partial(lm.init_params, cfg=cfg), _key_spec())
+
+
+def abstract_params_serving(cfg: ModelConfig) -> Any:
+    """Serving checkpoints hold bf16 matrices (fp32 masters stay with the
+    trainer) — halves the per-step weight reads on the decode path."""
+    from repro.models.lm import cast_params
+    return jax.eval_shape(
+        lambda k: cast_params(lm.init_params(k, cfg), jnp.bfloat16),
+        _key_spec())
+
+
+def abstract_opt_state(cfg: ModelConfig, optimizer: Optimizer) -> Any:
+    return jax.eval_shape(optimizer.init, abstract_params(cfg))
+
+
+def abstract_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                          rules=None) -> Any:
+    return jax.eval_shape(
+        functools.partial(lm.init_decode_state, cfg, batch, max_len,
+                          rules))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                rules=None) -> Dict[str, Any]:
+    b, t = shape.global_batch, shape.seq_len
+    tok = lambda *s: Abstract(s, jnp.int32)  # noqa: E731
+    if shape.kind == "train":
+        specs = {"tokens": tok(b, t), "labels": tok(b, t)}
+        if cfg.n_img_tokens:
+            specs["memory"] = Abstract(
+                (b, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": tok(b, t)}
+        if cfg.n_img_tokens:
+            specs["memory"] = Abstract(
+                (b, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "decode":
+        return {
+            "token": tok(b),
+            "pos": Abstract((), jnp.int32),
+            "state": abstract_decode_state(cfg, b, t, rules),
+        }
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# parameter / FLOP accounting (roofline MODEL_FLOPS terms)
+# ---------------------------------------------------------------------------
+
+def count_params(cfg: ModelConfig) -> Tuple[int, int]:
+    """(total, active) parameter counts from the abstract tree.
+
+    ``active`` discounts routed-expert weights by top_k/n_experts (the
+    MoE per-token activation fraction); used for MODEL_FLOPS = 6·N_active·D.
+    """
+    import math
+    params = abstract_params(cfg)
+    total = sum(math.prod(x.shape) for x in jax.tree.leaves(params))
+    active = total
+    if cfg.moe is not None:
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        routed = sum(
+            math.prod(leaf.shape)
+            for path, leaf in flat
+            if any(getattr(p, "key", None) in ("w_gate", "w_up", "w_down")
+                   and "moe" in str(path) for p in path))
+        active = total - routed + int(
+            routed * cfg.moe.top_k / cfg.moe.n_experts)
+    return total, active
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Useful-model FLOPs for one step of this (cfg, shape) cell.
+
+    train:   6·N_active·(B·T)  (fwd 2 + bwd 4)
+    prefill: 2·N_active·(B·T)
+    decode:  2·N_active·B      (one token per sequence)
+    """
+    _, active = count_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * active * shape.global_batch * shape.seq_len
+    return 2.0 * active * shape.global_batch

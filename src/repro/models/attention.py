@@ -1,0 +1,602 @@
+"""GQA attention with pluggable backend — the paper's technique as a
+first-class feature of every transformer layer.
+
+``attention_backend`` selects:
+
+* ``softmax``      — classic attention (paper §2): O(T²) compute, O(T·k)
+                     decode state (the KV cache).
+* ``linear``       — the paper's §3 mechanism in untied (q, k, v) form:
+                     chunk-parallel causal linear attention, O(T·k²)
+                     compute, **fixed-size (k×k per head) decode state**.
+* ``gated_linear`` — the paper's §4 generalisation C ← αC + βffᵀ with
+                     data-dependent decay α (per-channel "vector" mode =
+                     GLA/RWKV-6 family; per-head "scalar" mode =
+                     RetNet/Mamba-2 family) and optionally the paper's
+                     exact sigmoid feature gate f = σ(Wh+b)⊙h.
+
+All three backends share the projection/RoPE/GQA plumbing, so switching
+the backend swaps only the O(T²)-vs-O(T·k²) core — exactly the paper's
+"remove the softmax" ablation, at framework scale.
+
+Decode state (``AttnState``) is a tagged union: KV cache for softmax,
+(Dk, Dv) matrix state + key-sum normaliser for the linear family. The
+linear decode step is O(k²) per token independent of context length —
+the paper's fast-lookup property — which is what makes the ``long_500k``
+shape lowerable for every arch under the linear backends.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import xla_attention as xattn
+from repro.sharding import Rules, constrain
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+# ---------------------------------------------------------------------------
+# feature maps (linear backends)
+# ---------------------------------------------------------------------------
+
+def feature_map(x: Array, kind: str) -> Array:
+    """φ applied to q/k before the linear-attention inner product.
+
+    ``identity`` is the paper's exact formulation (φ(h) = h); ``elu1``
+    (ELU+1, Katharopoulos et al.) keeps features positive so the key-sum
+    normaliser is well conditioned — the documented deviation used by the
+    LM backends.
+    """
+    if kind == "identity":
+        return x
+    if kind == "elu1":
+        return jax.nn.elu(x) + 1.0
+    if kind == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(f"unknown feature map {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def attention_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": L.dense_init(ks[0], d, h * dh, dtype),
+        "wk": L.dense_init(ks[1], d, hkv * dh, dtype),
+        "wv": L.dense_init(ks[2], d, hkv * dh, dtype),
+        "wo": L.dense_init(ks[3], h * dh, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    if cfg.attention_backend == "gated_linear":
+        # decay projection (paper §4 α_t as a data-dependent gate)
+        gd = dh if cfg.decay_mode == "vector" else 1
+        p["w_gate"] = L.dense_init(ks[4], d, h * gd, dtype, scale=0.01)
+        p["b_gate"] = jnp.full((h * gd,), 4.0, dtype)  # init: slow decay
+        p["gn_scale"] = jnp.ones((h, dh), dtype)
+        p["gn_bias"] = jnp.zeros((h, dh), dtype)
+    if cfg.attention_backend in ("linear", "gated_linear") and \
+            cfg.feature_gate:
+        # the paper's exact gate f = σ(W h + b) ⊙ h applied to keys/values
+        p["w_fgate"] = L.dense_init(ks[5], d, hkv * dh, dtype)
+        p["b_fgate"] = jnp.zeros((hkv * dh,), dtype)
+    return p
+
+
+def attention_param_specs(cfg: ModelConfig) -> Dict[str, tuple]:
+    """Logical sharding names, same tree structure as attention_params.
+
+    Projections are stored flat (d, h·dh); the flat output dim shards
+    over the model axis (always divisible for the assigned archs even
+    when the head *count* is not — e.g. yi-34b's 56×128 = 7168 = 16·448).
+    Activation-side head sharding is chosen at apply time
+    (:func:`softmax_shard_mode`).
+    """
+    p = {
+        "wq": ("fsdp", "heads"),
+        "wk": ("fsdp", "kv_heads_flat"),
+        "wv": ("fsdp", "kv_heads_flat"),
+        "wo": ("heads", "fsdp"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = (None,)
+        p["k_norm"] = (None,)
+    if cfg.attention_backend == "gated_linear":
+        p["w_gate"] = ("fsdp", "heads")
+        p["b_gate"] = ("heads",)
+        p["gn_scale"] = ("heads", None)
+        p["gn_bias"] = ("heads", None)
+    if cfg.attention_backend in ("linear", "gated_linear") and \
+            cfg.feature_gate:
+        p["w_fgate"] = ("fsdp", "kv_heads_flat")
+        p["b_fgate"] = ("kv_heads_flat",)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# decode state
+# ---------------------------------------------------------------------------
+
+class AttnState(NamedTuple):
+    """Tagged decode state. Exactly one family of fields is used:
+
+    softmax:  k_cache, v_cache (B, S, Hkv, Dh) + pos
+    linear:   s (B, H, Dk, Dv) matrix state [+ z (B, H, Dk) normaliser]
+              — the paper's fixed-size representation; O(1) in context.
+    """
+    k_cache: Optional[Array]
+    v_cache: Optional[Array]
+    s: Optional[Array]
+    z: Optional[Array]
+
+
+def init_attn_state(cfg: ModelConfig, batch: int, max_len: int,
+                    dtype=jnp.bfloat16, rules: Optional[Rules] = None
+                    ) -> AttnState:
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.attention_backend == "softmax":
+        return AttnState(
+            k_cache=jnp.zeros((batch, max_len, hkv, dh), dtype),
+            v_cache=jnp.zeros((batch, max_len, hkv, dh), dtype),
+            s=None, z=None,
+        )
+    # linear family: pad the state head dim to the model-axis size so the
+    # per-step state read-modify-write shards instead of replicating
+    # (yi-34b: 56 heads on 16 → 28 GB/dev/step replicated; §Perf cell C)
+    hp = padded_head_count(rules, h) if rules is not None else h
+    z = (jnp.zeros((batch, hp, dh), jnp.float32)
+         if cfg.attention_backend == "linear" else None)
+    return AttnState(
+        k_cache=None, v_cache=None,
+        s=jnp.zeros((batch, hp, dh, dh), jnp.float32), z=z,
+    )
+
+
+def attn_state_specs(cfg: ModelConfig) -> AttnState:
+    """Logical names for the decode state (same structure)."""
+    if cfg.attention_backend == "softmax":
+        return AttnState(
+            k_cache=("batch", None, "kv_heads_state", "head_dim_state"),
+            v_cache=("batch", None, "kv_heads_state", "head_dim_state"),
+            s=None, z=None,
+        )
+    z = (("batch", "heads_state", None)
+         if cfg.attention_backend == "linear" else None)
+    return AttnState(k_cache=None, v_cache=None,
+                     s=("batch", "heads_state", None, None), z=z)
+
+
+# ---------------------------------------------------------------------------
+# shared projection plumbing
+# ---------------------------------------------------------------------------
+
+def softmax_shard_mode(cfg: ModelConfig, rules: Rules) -> str:
+    """Pick the softmax-attention TP dim with the best utilisation.
+
+    The model axis (size m) can shard the kv-head dim or the GQA group
+    dim; neither need divide m — GSPMD pads uneven shards, costing
+    ceil(n/m)·m/n waste. We pick whichever of Hkv / G wastes least
+    (perfect division preferred). E.g. deepseek (Hkv=16) → "kv" at 1.0,
+    qwen3-moe (G=16) → "group" at 1.0, yi-34b (Hkv=8, G=7, m=16) → "kv"
+    at 0.5 — documented in DESIGN.md §5 as the 2×-waste fallback that a
+    ring-attention shard_map path would remove.
+    """
+    m = rules.model_size
+    if m <= 1:
+        return "kv"
+
+    def util(n: int) -> float:
+        return n / (-(-n // m) * m)
+
+    g = cfg.n_heads // cfg.n_kv_heads
+    return "kv" if util(cfg.n_kv_heads) >= util(g) else "group"
+
+
+def _project_qkv(p: Params, x: Array, cfg: ModelConfig, rules: Rules
+                 ) -> Tuple[Array, Array, Array]:
+    """x: (B, T, D) → q (B, G, Hkv, T, Dh), k/v (B, Hkv, T, Dh)."""
+    b, t, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // hkv
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, t, g, hkv, dh)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, t, hkv, dh)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, t, hkv, dh)
+    q = jnp.transpose(q, (0, 2, 3, 1, 4))      # (B, G, Hkv, T, Dh)
+    k = jnp.transpose(k, (0, 2, 1, 3))         # (B, Hkv, T, Dh)
+    v = jnp.transpose(v, (0, 2, 1, 3))
+    if cfg.qk_norm:
+        q = _head_rmsnorm(q, p["q_norm"])
+        k = _head_rmsnorm(k, p["k_norm"])
+    # all backends are constrained on the flattened-H view downstream:
+    # the flat head dim shards over `model` (uneven allowed), which keeps
+    # every loop-carried attention tensor on ONE consistent sharding —
+    # group/kv-dim sharding churned inside scan carries (§Perf iter 2).
+    return q, k, v
+
+
+def padded_head_count(rules: Rules, h: int) -> int:
+    """Round the flat head count up to a multiple of the model-axis size.
+
+    GSPMD handles uneven dims by *resharding them inside loop bodies*
+    (e.g. yi-34b's 56 heads on a 16-way axis → per-pair 896 MiB
+    all-gathers, §Perf iteration 6). Explicit zero-padding keeps one even
+    16-way layout through every scan; the pad heads cost ≤ (m−1)/h extra
+    attention FLOPs and are sliced off before the output projection.
+    """
+    m = rules.model_size
+    return -(-h // m) * m if m > 1 else h
+
+
+def _pad_head_dim(x: Array, h_pad: int, axis: int = 1) -> Array:
+    pad = h_pad - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _head_rmsnorm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def _merge_heads(p: Params, o: Array, cfg: ModelConfig, x_dtype) -> Array:
+    """o: (B, G, Hkv, T, Dh) → (B, T, D) through wo."""
+    b, g, hkv, t, dh = o.shape
+    o = jnp.transpose(o, (0, 3, 1, 2, 4)).reshape(b, t, g * hkv * dh)
+    return o.astype(x_dtype) @ p["wo"].astype(x_dtype)
+
+
+def _rope(q: Array, k: Array, positions: Array, cfg: ModelConfig
+          ) -> Tuple[Array, Array]:
+    """positions: (T,) or (B,) for decode; q (B,G,Hkv,T,D), k (B,Hkv,T,D)."""
+    cos, sin = L.rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+    if positions.ndim == 1 and q.shape[3] == positions.shape[0]:
+        c = cos[None, None, None]                        # (1,1,1,T,D/2)
+        s = sin[None, None, None]
+    else:                                                # decode: (B,)
+        c = cos[:, None, None, None]
+        s = sin[:, None, None, None]
+    q = _apply_rot(q, c, s)
+    k = _apply_rot(k, c[:, :, 0] if c.ndim == 5 else c,
+                   s[:, :, 0] if s.ndim == 5 else s)
+    return q, k
+
+
+def _apply_rot(x: Array, c: Array, s: Array) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    x1, x2 = jnp.split(xf, 2, axis=-1)
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
+                           axis=-1).astype(dt)
+
+
+def _gate_kv(p: Params, x: Array, k: Array, v: Array, cfg: ModelConfig
+             ) -> Tuple[Array, Array]:
+    """Paper §4 sigmoid feature gate: f = σ(W h + b) ⊙ h, applied to the
+    key/value features that enter the state update C ← C + f fᵀ."""
+    b, t, _ = x.shape
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    gate = jax.nn.sigmoid(x @ p["w_fgate"].astype(x.dtype)
+                          + p["b_fgate"].astype(x.dtype))
+    gate = jnp.transpose(gate.reshape(b, t, hkv, dh), (0, 2, 1, 3))
+    return k * gate, v * gate
+
+
+def _decay(p: Params, x: Array, cfg: ModelConfig) -> Array:
+    """Data-dependent log-decay g_t ≤ 0 (the paper's α_t = exp(g_t)).
+
+    Returns (B, H, T, Dk) for vector mode, (B, H, T, 1) for scalar.
+    """
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    gd = cfg.head_dim if cfg.decay_mode == "vector" else 1
+    raw = x @ p["w_gate"].astype(x.dtype) + p["b_gate"].astype(x.dtype)
+    raw = jnp.transpose(raw.reshape(b, t, h, gd), (0, 2, 1, 3))
+    # log α = −softplus(−raw)·scale: raw→+∞ ⇒ α→1 (remember);
+    # raw→−∞ ⇒ α→0 (forget). Clamped in the chunked kernel.
+    return -jax.nn.softplus(-raw.astype(jnp.float32)) * (
+        1.0 / cfg.decay_temp)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def attention_apply(
+    p: Params,
+    x: Array,
+    cfg: ModelConfig,
+    rules: Rules,
+    *,
+    positions: Optional[Array] = None,
+    want_state: bool = False,
+) -> Tuple[Array, Optional[AttnState]]:
+    """Full-sequence attention. x: (B, T, D) → (B, T, D).
+
+    ``want_state=True`` additionally returns the decode state after the
+    last position (prefill → decode handoff). For the linear backends the
+    state is the paper's fixed-size k×k representation of the prefix.
+    """
+    b, t, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // hkv
+    if positions is None:
+        positions = jnp.arange(t)
+
+    q, k, v = _project_qkv(p, x, cfg, rules)
+    if cfg.rope:
+        q, k = _rope(q, k, positions, cfg)
+
+    backend = cfg.attention_backend
+    state: Optional[AttnState] = None
+
+    if backend == "softmax":
+        # flash custom-VJP: O(T) residuals (vs O(T²) through scan-AD —
+        # EXPERIMENTS.md §Perf iteration 1). K/V broadcast to the flat
+        # q-head dim so train/prefill attention runs on ONE evenly
+        # shardable layout (§Perf iteration 2); decode keeps the compact
+        # (B, S, Hkv, D) GQA cache.
+        hp = padded_head_count(rules, h)
+        qh = constrain(
+            _pad_head_dim(q.reshape(b, h, t, dh), hp), rules,
+            "batch", "heads_lin", None, None)
+        kh = constrain(_pad_head_dim(jnp.broadcast_to(
+            k[:, None], (b, g, hkv, t, dh)).reshape(b, h, t, dh), hp),
+            rules, "batch", "heads_lin", None, None)
+        vh = constrain(_pad_head_dim(jnp.broadcast_to(
+            v[:, None], (b, g, hkv, t, dh)).reshape(b, h, t, dh), hp),
+            rules, "batch", "heads_lin", None, None)
+        block_spec = (rules.spec(None, "batch", "heads_lin", None, None)
+                      if rules.mesh_axes else None)
+        o_h = xattn.flash_attention(qh, kh, vh, None, cfg.attn_block_q, 0,
+                                    block_spec)
+        o = o_h[:, :h].reshape(b, g, hkv, t, dh)
+        if want_state:
+            state = AttnState(
+                k_cache=jnp.transpose(k, (0, 2, 1, 3)),
+                v_cache=jnp.transpose(v, (0, 2, 1, 3)),
+                s=None, z=None,
+            )
+    else:
+        qf = feature_map(q, cfg.feature_map)
+        kf = feature_map(k, cfg.feature_map)
+        if cfg.feature_gate:
+            kf, v = _gate_kv(p, x, kf, v, cfg)
+        # expand GQA: per-q-head view (B, H, T, D) with k/v broadcast;
+        # flat head dim padded to the model-axis size and sharded evenly
+        # (§Perf iteration 6).
+        hp = padded_head_count(rules, h)
+        qh = constrain(
+            _pad_head_dim(qf.reshape(b, h, t, dh), hp), rules,
+            "batch", "heads_lin", None, None)
+        kh = constrain(_pad_head_dim(jnp.broadcast_to(
+            kf[:, None], (b, g, hkv, t, dh)).reshape(b, h, t, dh), hp),
+            rules, "batch", "heads_lin", None, None)
+        vh = constrain(_pad_head_dim(jnp.broadcast_to(
+            v[:, None], (b, g, hkv, t, dh)).reshape(b, h, t, dh), hp),
+            rules, "batch", "heads_lin", None, None)
+
+        if backend == "linear":
+            from repro.core.linear_attention import (
+                causal_linear_attention, causal_linear_attention_chunked)
+            if want_state:
+                o_h, s_f = causal_linear_attention_chunked(
+                    qh, kh, vh, chunk_size=cfg.linear_chunk,
+                    normalize=cfg.linear_normalize,
+                )
+            else:  # training: the paper's §3.3 backward (recompute)
+                o_h = causal_linear_attention(
+                    qh, kh, vh, chunk_size=cfg.linear_chunk,
+                    normalize=cfg.linear_normalize,
+                )
+                s_f = None
+            if want_state:
+                # state stays head-padded: decode consumes it directly
+                zf = jnp.cumsum(kh.astype(jnp.float32), axis=2)[:, :, -1]
+                state = AttnState(k_cache=None, v_cache=None,
+                                  s=s_f, z=zf if cfg.linear_normalize
+                                  else None)
+        else:  # gated_linear
+            from repro.core.gated import chunked_gla, \
+                gated_linear_attention
+            gd = _pad_head_dim(_decay(p, x, cfg), hp)
+            if want_state:
+                o_h, s_f = chunked_gla(
+                    qh, kh, vh, gd, chunk_size=cfg.linear_chunk,
+                )
+            else:  # training: §3.3 recompute backward
+                o_h = gated_linear_attention(
+                    qh, kh, vh, gd, chunk_size=cfg.linear_chunk)
+                s_f = None
+            o_h = o_h[:, :h]
+            o_h = L.groupnorm_heads(
+                jnp.transpose(o_h, (0, 2, 1, 3)),
+                p["gn_scale"].astype(jnp.float32),
+                p["gn_bias"].astype(jnp.float32),
+            )
+            o_h = jnp.transpose(o_h, (0, 2, 1, 3))
+            if want_state:
+                state = AttnState(k_cache=None, v_cache=None,
+                                  s=s_f, z=None)
+        o = o_h[:, :h].reshape(b, g, hkv, t, dh)
+
+    y = _merge_heads(p, o, cfg, x.dtype)
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# single-token decode
+# ---------------------------------------------------------------------------
+
+def attention_decode(
+    p: Params,
+    x: Array,
+    state: AttnState,
+    pos: Array,
+    cfg: ModelConfig,
+    rules: Rules,
+) -> Tuple[Array, AttnState]:
+    """One decode step. x: (B, D); pos: () current position.
+
+    softmax: O(pos) cache read. linear family: O(k²) — independent of pos
+    (the paper's constant-time lookup).
+    """
+    b, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // hkv
+    xt = x[:, None, :]  # (B, 1, D)
+    q, k, v = _project_qkv(p, xt, cfg, rules)
+    if cfg.rope:
+        posb = jnp.broadcast_to(pos, (b,))
+        q, k = _rope(q, k, posb, cfg)
+
+    backend = cfg.attention_backend
+    if backend == "softmax":
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            state.k_cache, jnp.transpose(k, (0, 2, 1, 3)).astype(
+                state.k_cache.dtype), pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            state.v_cache, jnp.transpose(v, (0, 2, 1, 3)).astype(
+                state.v_cache.dtype), pos, axis=1)
+        kc = jnp.transpose(k_cache, (0, 2, 1, 3))
+        vc = jnp.transpose(v_cache, (0, 2, 1, 3))
+        o = xattn.decode_attention(q[:, :, :, 0], kc, vc, pos + 1)
+        new_state = AttnState(k_cache=k_cache, v_cache=v_cache,
+                              s=None, z=None)
+    else:
+        qf = feature_map(q[:, :, :, 0], cfg.feature_map)   # (B,G,Hkv,Dh)
+        kf = feature_map(k[:, :, 0], cfg.feature_map)      # (B,Hkv,Dh)
+        vt = v[:, :, 0]
+        if cfg.feature_gate:
+            k2, v2 = _gate_kv(p, xt, kf[:, :, None], vt[:, :, None], cfg)
+            kf, vt = k2[:, :, 0], v2[:, :, 0]
+        hp = state.s.shape[1]          # padded head count (≥ h)
+        qh = _pad_head_dim(qf.reshape(b, h, dh), hp)
+        kh = _pad_head_dim(jnp.broadcast_to(
+            kf[:, None], (b, g, hkv, dh)).reshape(b, h, dh), hp)
+        vh = _pad_head_dim(jnp.broadcast_to(
+            vt[:, None], (b, g, hkv, dh)).reshape(b, h, dh), hp)
+
+        if backend == "linear":
+            from repro.core.linear_attention import decode_step
+            o_h, s_new, z_new = decode_step(
+                state.s, qh, kh, vh, z=state.z,
+                normalize=cfg.linear_normalize,
+            )
+            new_state = AttnState(k_cache=None, v_cache=None,
+                                  s=s_new, z=z_new)
+        else:
+            from repro.core.gated import gated_decode_step
+            gd = _decay(p, xt, cfg)[:, :, 0]               # (B, H, gd)
+            gd = jnp.broadcast_to(gd, (b, h, dh)) if gd.shape[-1] == 1 \
+                else gd
+            gd = _pad_head_dim(gd, hp)
+            o_h, s_new = gated_decode_step(state.s, qh, kh, vh, gd)
+            o_h = L.groupnorm_heads(
+                o_h[:, :h][:, None], p["gn_scale"].astype(jnp.float32),
+                p["gn_bias"].astype(jnp.float32))[:, 0]
+            new_state = AttnState(k_cache=None, v_cache=None,
+                                  s=s_new, z=None)
+        o = o_h[:, :h].reshape(b, g, hkv, dh)
+
+    y = _merge_heads(p, o[:, :, :, None], cfg, x.dtype)[:, 0]
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# cross attention (VLM) — the paper's document/query setting verbatim
+# ---------------------------------------------------------------------------
+
+def cross_attention_params(key, cfg: ModelConfig, dtype=jnp.float32
+                           ) -> Params:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(ks[0], d, h * dh, dtype),
+        "wk": L.dense_init(ks[1], d, hkv * dh, dtype),
+        "wv": L.dense_init(ks[2], d, hkv * dh, dtype),
+        "wo": L.dense_init(ks[3], h * dh, d, dtype),
+    }
+
+
+def cross_attention_param_specs(cfg: ModelConfig) -> Dict[str, tuple]:
+    return {
+        "wq": ("fsdp", "heads"),
+        "wk": ("fsdp", "kv_heads_flat"),
+        "wv": ("fsdp", "kv_heads_flat"),
+        "wo": ("heads", "fsdp"),
+    }
+
+
+class CrossMemory(NamedTuple):
+    """Pre-encoded modality memory. softmax keeps (k, v) — O(n_img·k)
+    per layer; linear keeps the paper's C = KᵀV fixed-size state —
+    O(k²) per layer regardless of image-token count."""
+    k: Optional[Array]
+    v: Optional[Array]
+    c: Optional[Array]
+    z: Optional[Array]
+
+
+def encode_cross_memory(p: Params, memory: Array, cfg: ModelConfig
+                        ) -> CrossMemory:
+    """memory: (B, N_img, D) precomputed patch embeddings (frontend stub).
+
+    This is exactly the paper's encode-once document compression: for the
+    linear backend the N_img×k key/value matrices collapse into C = KᵀV.
+    """
+    b, n, _ = memory.shape
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    k = jnp.transpose((memory @ p["wk"].astype(memory.dtype))
+                      .reshape(b, n, hkv, dh), (0, 2, 1, 3))
+    v = jnp.transpose((memory @ p["wv"].astype(memory.dtype))
+                      .reshape(b, n, hkv, dh), (0, 2, 1, 3))
+    if cfg.attention_backend == "softmax":
+        return CrossMemory(k=k, v=v, c=None, z=None)
+    kf = feature_map(k, cfg.feature_map)
+    c = jnp.einsum("bhnk,bhnv->bhkv", kf.astype(jnp.float32),
+                   v.astype(jnp.float32))
+    z = jnp.sum(kf.astype(jnp.float32), axis=2)
+    return CrossMemory(k=None, v=None, c=c, z=z)
+
+
+def cross_attention_apply(p: Params, x: Array, mem: CrossMemory,
+                          cfg: ModelConfig, rules: Rules) -> Array:
+    """x: (B, T, D) queries against the encoded memory → (B, T, D)."""
+    b, t, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // hkv
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, t, g, hkv, dh)
+    q = jnp.transpose(q, (0, 2, 3, 1, 4))
+    if cfg.attention_backend == "softmax":
+        n = mem.k.shape[2]
+        scores = jnp.einsum(
+            "bghtd,bhnd->bghtn", q.astype(jnp.float32) * dh ** -0.5,
+            mem.k.astype(jnp.float32))
+        pr = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bghtn,bhnd->bghtd", pr,
+                       mem.v.astype(jnp.float32)).astype(x.dtype)
+    else:
+        qf = feature_map(q, cfg.feature_map).astype(jnp.float32)
+        o = jnp.einsum("bghtk,bhkv->bghtv", qf, mem.c)
+        if cfg.linear_normalize:
+            denom = jnp.einsum("bghtk,bhk->bght", qf, mem.z)
+            o = o / (denom[..., None] + 1e-6)
+        o = o.astype(x.dtype)
+    return _merge_heads(p, o, cfg, x.dtype)

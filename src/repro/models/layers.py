@@ -1,0 +1,160 @@
+"""Basic neural-net layers in pure JAX (no flax): norms, RoPE, MLPs.
+
+Parameters are plain nested dicts of jnp arrays; initialisers take a PRNG
+key and return the dict. Stacked (scan-over-layers) parameters are built
+by vmapping the initialisers in lm.py.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: Optional[float] = None) -> Array:
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_params(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_params(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: Params, x: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32)
+    out = out + params["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def norm_params(kind: str, d: int, dtype=jnp.float32) -> Params:
+    return rmsnorm_params(d, dtype) if kind == "rmsnorm" else \
+        layernorm_params(d, dtype)
+
+
+def apply_norm(kind: str, params: Params, x: Array) -> Array:
+    return rmsnorm(params, x) if kind == "rmsnorm" else layernorm(params, x)
+
+
+def groupnorm_heads(x: Array, scale: Array, bias: Array,
+                    eps: float = 1e-5) -> Array:
+    """Per-head groupnorm over (B, T, H, D) head outputs (RWKV style)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions: Array, head_dim: int, theta: float
+                 ) -> Tuple[Array, Array]:
+    """positions: (...,) int -> cos/sin of shape (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x: (B, H, T, D); cos/sin: (T, D/2) or (B, D/2) for decode."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    x1, x2 = jnp.split(xf, 2, axis=-1)
+    if cos.ndim == 2 and cos.shape[0] == x.shape[2]:      # (T, D/2)
+        c = cos[None, None, :, :]
+        s = sin[None, None, :, :]
+    else:                                                  # (B, D/2) decode
+        c = cos[:, None, None, :]
+        s = sin[:, None, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_params(key, d_model: int, d_ff: int, act: str,
+               dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype),
+    }
+    if act == "swiglu":
+        p["w_gate"] = dense_init(k3, d_model, d_ff, dtype)
+    return p
+
+
+def mlp(params: Params, x: Array, act: str) -> Array:
+    up = x @ params["w_up"].astype(x.dtype)
+    if act == "swiglu":
+        gate = x @ params["w_gate"].astype(x.dtype)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ params["w_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv (Mamba)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: Array, w: Array, cache: Optional[Array] = None
+                  ) -> Tuple[Array, Array]:
+    """Depthwise causal conv. x: (B, T, C); w: (K, C).
+
+    Returns (y, new_cache) with new_cache = last (K-1) inputs (B, K-1, C).
+    """
+    k = w.shape[0]
+    if cache is None:
+        cache = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xx = jnp.concatenate([cache, x], axis=1)
+    new_cache = xx[:, -(k - 1):, :] if k > 1 else cache
+    # unfold: y_t = Σ_j w[j] * xx[t + j]
+    t = x.shape[1]
+    y = jnp.zeros_like(x)
+    for j in range(k):
+        y = y + xx[:, j:j + t, :] * w[j].astype(x.dtype)
+    return y, new_cache

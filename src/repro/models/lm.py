@@ -1,0 +1,413 @@
+"""Unified language model over heterogeneous block stacks.
+
+One ``TransformerLM`` definition serves all 10 assigned architectures:
+the layer stack is a repeating ``layer_pattern`` unit (e.g. ``("attn",)``
+for dense transformers, ``("mamba",)*5 + ("shared_attn",)`` for Zamba-2,
+``("attn",)*4 + ("cross",)`` for the vision model) scanned with stacked
+parameters — HLO size stays O(pattern), which is what lets 100-layer
+models lower in seconds during the 40-cell dry-run.
+
+The paper's technique enters through ``cfg.attention_backend`` on every
+attention block (softmax | linear | gated_linear); for the linear family
+the decode state of the whole model is a stack of fixed-size k×k matrices
+— O(1) in context length — which is what makes the 500k-token decode
+shape lowerable.
+
+Cross-entropy is computed against vocab-sharded logits without ever
+gathering them (per-shard max/sum + psum via GSPMD), the standard
+large-vocab trick.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.sharding import Rules, constrain
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    """Build the full parameter tree.
+
+    Structure:
+      embed:      (V, D) token embedding
+      stack:      tuple (one per pattern position) of block param trees
+                  stacked over the repeat dim R (leading axis)
+      tail:       tuple of unstacked block param trees
+      shared:     one "shared_attn" block param set (Zamba) or None
+      final_norm: norm params
+      lm_head:    (D, V) unless cfg.tie_embeddings
+    """
+    pdt = _dtype(cfg.param_dtype)
+    pattern, reps, tail = cfg.pattern_and_repeats
+    k_embed, k_stack, k_tail, k_shared, k_head = jax.random.split(key, 5)
+
+    params: Params = {
+        "embed": L.embed_init(k_embed, cfg.vocab_size, cfg.d_model, pdt),
+        "final_norm": L.norm_params(cfg.norm, cfg.d_model, pdt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(
+            k_head, cfg.d_model, cfg.vocab_size, pdt)
+
+    stack = []
+    pos_keys = jax.random.split(k_stack, len(pattern))
+    for pos, kind in enumerate(pattern):
+        if kind == "shared_attn":
+            stack.append({})  # parameters live in params["shared"]
+            continue
+        rep_keys = jax.random.split(pos_keys[pos], reps)
+        stack.append(jax.vmap(
+            lambda kk: B.block_params(kind, kk, cfg, pdt))(rep_keys))
+    params["stack"] = tuple(stack)
+
+    tail_params = []
+    tail_keys = jax.random.split(k_tail, max(len(tail), 1))
+    for i, kind in enumerate(tail):
+        tail_params.append(
+            {} if kind == "shared_attn"
+            else B.block_params(kind, tail_keys[i], cfg, pdt))
+    params["tail"] = tuple(tail_params)
+
+    needs_shared = "shared_attn" in pattern or "shared_attn" in tail
+    params["shared"] = (B.block_params("attn", k_shared, cfg, pdt)
+                        if needs_shared else {})
+    return params
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    """Logical sharding names, same tree structure as init_params."""
+    pattern, _, tail = cfg.pattern_and_repeats
+
+    from repro.sharding import is_logical_spec
+
+    def stacked(tree):
+        # prepend the scan ("layers") axis to every leaf spec
+        return jax.tree.map(
+            lambda names: ("layers",) + tuple(names),
+            tree, is_leaf=is_logical_spec)
+
+    specs: Params = {
+        "embed": ("vocab", "embed"),
+        "final_norm": ({"scale": (None,)} if cfg.norm == "rmsnorm"
+                       else {"scale": (None,), "bias": (None,)}),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ("embed", "vocab")
+    specs["stack"] = tuple(
+        {} if kind == "shared_attn"
+        else stacked(B.block_param_specs(kind, cfg))
+        for kind in pattern)
+    specs["tail"] = tuple(
+        {} if kind == "shared_attn" else B.block_param_specs(kind, cfg)
+        for kind in tail)
+    needs_shared = "shared_attn" in pattern or "shared_attn" in tail
+    specs["shared"] = (B.block_param_specs("attn", cfg)
+                       if needs_shared else {})
+    return specs
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def cast_params(params: Params, dtype) -> Params:
+    """Cast float matrices to the compute dtype.
+
+    Only ndim ≥ 2 leaves are cast — those carry ~all FSDP all-gather
+    bytes; small vectors (norm scales, decay logits ``a_log``, biases)
+    stay fp32 for numerical headroom.
+    """
+    def cast(x):
+        if x.ndim >= 2 and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(cast, params)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(
+    params: Params,
+    tokens: Array,
+    cfg: ModelConfig,
+    rules: Rules,
+    *,
+    memory: Optional[Array] = None,
+    want_state: bool = False,
+) -> Tuple[Array, Array, Any]:
+    """tokens: (B, T) int32 → (logits (B, T, V), aux_loss, states|None).
+
+    ``memory``: (B, N_img, D) precomputed modality embeddings for "cross"
+    blocks (frontend stub per the assignment).
+    """
+    adt = _dtype(cfg.dtype)
+    pattern, reps, tail = cfg.pattern_and_repeats
+
+    # Cast float params to the compute dtype ONCE, outside the layer scan:
+    # the per-layer FSDP all-gathers then move bf16, not fp32 — half the
+    # wire bytes (§Perf iteration 5). Gradients flow through the cast, so
+    # the data-parallel gradient reduction is bf16 too (the documented
+    # compression lever); the fp32 master copy only meets Adam.
+    params = cast_params(params, adt)
+
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, rules, "batch", "seq_sp", "embed")
+    mem = None if memory is None else memory.astype(adt)
+    shared = params["shared"]
+
+    # Sequence parallelism (§Perf iteration 4): the residual stream is
+    # sharded over (batch, seq); remat then saves T/model_size of each
+    # unit input per device instead of a model-axis-replicated copy.
+    # GSPMD turns the TP all-reduces at block outputs into
+    # reduce-scatter(seq) + all-gather(seq) around the block — Megatron-SP
+    # derived from sharding constraints alone.
+    def unit(carry, unit_params):
+        x, aux = carry
+        states = []
+        for pos, kind in enumerate(pattern):
+            x, st, a = B.block_apply(
+                kind, unit_params[pos] if kind != "shared_attn" else None,
+                x, cfg, rules, shared=shared, memory=mem,
+                want_state=want_state)
+            x = constrain(x, rules, "batch", "seq_sp", "embed")
+            aux = aux + a
+            states.append(st)
+        return (x, aux), tuple(states) if want_state else None
+
+    body = unit
+    if cfg.remat == "unit":
+        body = jax.checkpoint(
+            unit, policy=jax.checkpoint_policies.nothing_saveable)
+
+    (x, aux), stack_states = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params["stack"],
+        length=reps)
+
+    tail_states = []
+    for i, kind in enumerate(tail):
+        x, st, a = B.block_apply(
+            kind, params["tail"][i] if kind != "shared_attn" else None,
+            x, cfg, rules, shared=shared, memory=mem,
+            want_state=want_state)
+        x = constrain(x, rules, "batch", "seq_sp", "embed")
+        aux = aux + a
+        tail_states.append(st)
+
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    # Logits stay sequence-sharded: the (small) head matrix is gathered
+    # instead of the (huge) logits, and the cross-entropy reductions are
+    # then fully local — no (B, T, V)-sized collective anywhere.
+    logits = x.astype(adt) @ head.astype(adt)
+    logits = constrain(logits, rules, "batch", "seq_sp", None)
+
+    states = None
+    if want_state:
+        states = {"stack": stack_states, "tail": tuple(tail_states)}
+    return logits, aux, states
+
+
+# ---------------------------------------------------------------------------
+# loss (vocab-sharded cross entropy — logits never gathered)
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: Array, labels: Array, rules: Rules,
+                  z_loss: float = 0.0) -> Array:
+    """Mean token cross-entropy over vocab-sharded logits.
+
+    max / sum-exp / label-select all reduce over the sharded vocab axis,
+    so GSPMD lowers them to (B, T)-sized all-reduces instead of gathering
+    the (B, T, V) logits — the large-vocab TP trick.
+    """
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    shifted = lf - m
+    sum_exp = jnp.sum(jnp.exp(shifted), axis=-1)
+    lse = jnp.log(sum_exp) + m[..., 0]
+    col = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    label_logit = jnp.sum(
+        jnp.where(col == labels[..., None], lf, 0.0), axis=-1)
+    nll = lse - label_logit
+    if z_loss:
+        nll = nll + z_loss * jnp.square(jnp.log(sum_exp) + m[..., 0])
+    return jnp.mean(nll)
+
+
+def lm_loss(params: Params, batch: Dict[str, Array], cfg: ModelConfig,
+            rules: Rules) -> Tuple[Array, Dict[str, Array]]:
+    """batch: {"tokens": (B,T), "labels": (B,T) [, "memory": (B,N,D)]}."""
+    logits, aux, _ = forward(
+        params, batch["tokens"], cfg, rules, memory=batch.get("memory"))
+    xent = cross_entropy(logits, batch["labels"], rules)
+    aux_w = cfg.moe.router_aux_weight if cfg.moe is not None else 0.0
+    loss = xent + aux_w * aux
+    return loss, {"xent": xent, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      rules: Optional[Rules] = None) -> Any:
+    """Zero decode state for the whole stack.
+
+    softmax backend: per-layer KV caches, O(max_len) memory.
+    linear family / SSM / RWKV: fixed-size matrix states, O(1) in
+    max_len — the paper's property, and why long_500k decode states fit.
+    """
+    adt = _dtype(cfg.dtype)
+    pattern, reps, tail = cfg.pattern_and_repeats
+
+    def stacked_state(kind):
+        st = B.block_state_init(kind, cfg, batch, max_len, adt, rules)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (reps,) + x.shape), st)
+
+    return {
+        "stack": tuple(stacked_state(k) for k in pattern),
+        "tail": tuple(B.block_state_init(k, cfg, batch, max_len, adt,
+                                         rules)
+                      for k in tail),
+    }
+
+
+def decode_state_specs(cfg: ModelConfig) -> Any:
+    pattern, _, tail = cfg.pattern_and_repeats
+
+    from repro.sharding import is_logical_spec
+
+    def stacked(tree):
+        return jax.tree.map(
+            lambda names: ("layers",) + tuple(names),
+            tree, is_leaf=is_logical_spec)
+
+    return {
+        "stack": tuple(stacked(B.block_state_specs(k, cfg))
+                       for k in pattern),
+        "tail": tuple(B.block_state_specs(k, cfg) for k in tail),
+    }
+
+
+def decode_step(
+    params: Params,
+    state: Any,
+    token: Array,
+    pos: Array,
+    cfg: ModelConfig,
+    rules: Rules,
+) -> Tuple[Array, Any]:
+    """One autoregressive step. token: (B,) int32; pos: () int32.
+
+    Returns (logits (B, V), new_state). For the linear backends the cost
+    is O(k²) per layer — independent of pos (paper's fast lookup).
+    """
+    adt = _dtype(cfg.dtype)
+    pattern, reps, tail = cfg.pattern_and_repeats
+
+    params = cast_params(params, adt)
+    if rules.model_size > 1:
+        # one-hot contraction against the vocab-sharded table: a (B, V/16)
+        # local matmul + tiny psum instead of all-gathering the whole
+        # embedding every generated token (§Perf cell C iteration 2).
+        onehot = jax.nn.one_hot(token, cfg.vocab_size, dtype=adt)
+        onehot = constrain(onehot, rules, "batch", "vocab")
+        x = onehot @ params["embed"].astype(adt)
+    else:
+        x = jnp.take(params["embed"], token, axis=0).astype(adt)
+    x = constrain(x, rules, "batch", "embed")
+    shared = params["shared"]
+
+    def unit(x, scanned):
+        unit_params, unit_state = scanned
+        new_states = []
+        for p_i, kind in enumerate(pattern):
+            x, st = B.block_decode(
+                kind, unit_params[p_i] if kind != "shared_attn" else None,
+                x, unit_state[p_i], pos, cfg, rules, shared=shared)
+            new_states.append(st)
+        return x, tuple(new_states)
+
+    x, new_stack = jax.lax.scan(
+        unit, x, (params["stack"], state["stack"]), length=reps)
+
+    new_tail = []
+    for i, kind in enumerate(tail):
+        x, st = B.block_decode(
+            kind, params["tail"][i] if kind != "shared_attn" else None,
+            x, state["tail"][i], pos, cfg, rules, shared=shared)
+        new_tail.append(st)
+
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(adt)
+    logits = constrain(logits, rules, "batch", "vocab")
+    return logits, {"stack": new_stack, "tail": tuple(new_tail)}
+
+
+def pad_decode_state(states: Any, cfg: ModelConfig, max_len: int) -> Any:
+    """Grow prefill KV caches to ``max_len`` (softmax backend only — the
+    linear-family states are already fixed-size, nothing to pad).
+
+    Prefill returns caches of the prompt length; decode wants room for
+    generated tokens. Cache layout (B, S, Hkv, Dh), stacked variants have
+    a leading repeat dim.
+    """
+    from repro.models.attention import AttnState
+
+    def fix(st):
+        if not isinstance(st, AttnState) or st.k_cache is None:
+            return st
+        axis = st.k_cache.ndim - 3  # the S dim of (..., S, Hkv, Dh)
+        pad = max_len - st.k_cache.shape[axis]
+        if pad <= 0:
+            return st
+        widths = [(0, 0)] * st.k_cache.ndim
+        widths[axis] = (0, pad)
+        return AttnState(
+            k_cache=jnp.pad(st.k_cache, widths),
+            v_cache=jnp.pad(st.v_cache, widths),
+            s=st.s, z=st.z)
+
+    return jax.tree.map(fix, states,
+                        is_leaf=lambda x: isinstance(x, AttnState))
+
+
+def prefill(
+    params: Params,
+    tokens: Array,
+    cfg: ModelConfig,
+    rules: Rules,
+    *,
+    memory: Optional[Array] = None,
+) -> Tuple[Array, Any]:
+    """Encode a prompt, returning (last-position logits, decode states).
+
+    This is the paper's encode-once phase: for the linear backends the
+    whole prompt is compressed into fixed-size per-layer states.
+    """
+    logits, _, states = forward(
+        params, tokens, cfg, rules, memory=memory, want_state=True)
+    return logits[:, -1], states

@@ -1,0 +1,203 @@
+"""Mamba-2 (SSD) block — the paper's gated update with scalar decay.
+
+The SSD recurrence  S_t = exp(−Δ_t·a_h)·S_{t−1} + Δ_t·B_t x_tᵀ,
+y_t = C_tᵀ S_t  is exactly the paper's eq. 4 with a per-head scalar
+α_t = exp(g_t): we therefore run it on the same chunk-parallel machinery
+(:func:`repro.core.gated.chunked_gla`) as the gated-linear attention
+backend — one kernel family serves the whole family of mechanisms, which
+is the point of reproducing this 2016 paper in 2026.
+
+Mapping onto chunked_gla's (q, k, v, log_decay):
+    q = C (broadcast over heads),  k = B (broadcast),  v = Δ·x,
+    log_decay g = −Δ_t·exp(A_log_h)  (B, H, T, 1) scalar per head.
+
+Block structure (Mamba-2, n_groups = 1):
+    in_proj → [z | x | B | C | Δ] → causal depthwise conv on [x|B|C]
+    → SiLU → SSD → +D·x skip → RMSNorm gated by SiLU(z) → out_proj.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.gated import (chunked_gla, gated_decode_step,
+                              gated_linear_attention)
+from repro.models import layers as L
+from repro.sharding import Rules, constrain
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.d_state     # x | B | C (n_groups = 1)
+    return d_inner, n_heads, conv_dim
+
+
+def mamba2_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * s.d_state + n_heads
+    return {
+        "in_proj": L.dense_init(ks[0], d, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_kernel, conv_dim))
+                   * 0.1).astype(dtype),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": L.dense_init(ks[2], d_inner, d, dtype),
+    }
+
+
+def mamba2_param_specs(cfg: ModelConfig) -> Dict[str, tuple]:
+    return {
+        "in_proj": ("fsdp", "d_inner"),   # uneven tail (B,C,dt) replicated
+        "conv_w": (None, "conv_dim"),
+        "dt_bias": (None,),
+        "a_log": (None,),
+        "d_skip": (None,),
+        "norm_scale": ("d_inner",),
+        "out_proj": ("d_inner", "fsdp"),
+    }
+
+
+class MambaState(NamedTuple):
+    """Decode state: conv ring + the paper's fixed-size SSD state."""
+    conv: Array     # (B, K-1, conv_dim)
+    ssd: Array      # (B, H, d_state, head_dim) — k×k-style, O(1) in T
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16
+                     ) -> MambaState:
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    return MambaState(
+        conv=jnp.zeros((batch, s.conv_kernel - 1, conv_dim), dtype),
+        ssd=jnp.zeros((batch, n_heads, s.d_state, s.head_dim), jnp.float32),
+    )
+
+
+def mamba_state_specs(cfg: ModelConfig) -> MambaState:
+    # state specs are jit ARGUMENT shardings: must divide evenly, so use
+    # the divisibility-checked "heads" axis, not the uneven-ok one.
+    return MambaState(
+        conv=("batch", None, "conv_dim"),
+        ssd=("batch", "heads", None, None),
+    )
+
+
+def _split_proj(proj: Array, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, n_heads, _ = _dims(cfg)
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * s.d_state], axis=-1)
+    return z, xbc, dt
+
+
+def _ssd_inputs(xbc: Array, dt_raw: Array, p: Params, cfg: ModelConfig):
+    """xbc: (B, T, conv_dim) post-conv; dt_raw: (B, T, H)."""
+    s = cfg.ssm
+    d_inner, n_heads, _ = _dims(cfg)
+    b, t, _ = xbc.shape
+    x, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"])                       # (B,T,H)
+    a = -jnp.exp(p["a_log"])                                   # (H,) < 0
+    g = (dt * a).transpose(0, 2, 1)[..., None]                 # (B,H,T,1)
+
+    xh = x.reshape(b, t, n_heads, s.head_dim).transpose(0, 2, 1, 3)
+    v = xh * dt.transpose(0, 2, 1)[..., None].astype(xh.dtype)
+    # n_groups = 1: B/C shared across heads
+    k = jnp.broadcast_to(bmat[:, None], (b, n_heads, t, s.d_state))
+    q = jnp.broadcast_to(cmat[:, None], (b, n_heads, t, s.d_state))
+    return q, k, v, g, xh
+
+
+def mamba2_apply(
+    p: Params,
+    x: Array,
+    cfg: ModelConfig,
+    rules: Rules,
+    *,
+    want_state: bool = False,
+) -> Tuple[Array, Optional[MambaState]]:
+    """Full-sequence Mamba-2. x: (B, T, D) → (B, T, D)."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    b, t, _ = x.shape
+
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc = constrain(xbc, rules, "batch", None, "conv_dim")
+    xbc_conv, conv_cache = L.causal_conv1d(xbc, p["conv_w"])
+    xbc_conv = jax.nn.silu(xbc_conv)
+
+    q, k, v, g, xh = _ssd_inputs(xbc_conv, dt_raw, p, cfg)
+    q = constrain(q, rules, "batch", "heads_lin", None, None)
+    k = constrain(k, rules, "batch", "heads_lin", None, None)
+    v = constrain(v, rules, "batch", "heads_lin", None, None)
+
+    if want_state:
+        y, s_f = chunked_gla(q, k, v, g, chunk_size=cfg.linear_chunk)
+    else:
+        # training path: the paper's §3.3 memory-efficient backward —
+        # chunk states are recomputed, not stored by scan-AD
+        # (§Perf iteration 13: zamba2 peak 28.2 → fits)
+        y = gated_linear_attention(q, k, v, g,
+                                   chunk_size=cfg.linear_chunk)
+        s_f = None
+    y = y + p["d_skip"][None, :, None, None].astype(y.dtype) * xh
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, d_inner)
+
+    # gated RMSNorm (Mamba-2): norm(y) ⊙ SiLU(z)
+    y = L.rmsnorm({"scale": p["norm_scale"]}, y) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+
+    state = None
+    if want_state:
+        state = MambaState(conv=conv_cache, ssd=s_f)
+    return out, state
+
+
+def mamba2_decode(
+    p: Params,
+    x: Array,
+    state: MambaState,
+    cfg: ModelConfig,
+    rules: Rules,
+) -> Tuple[Array, MambaState]:
+    """One decode step. x: (B, D). O(d_state·head_dim) per head — the
+    paper's constant-time lookup property (no conv/attn over history)."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    b, _ = x.shape
+
+    proj = x[:, None, :] @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+
+    xx = jnp.concatenate([state.conv.astype(x.dtype), xbc],
+                         axis=1)                      # (B, K, conv_dim)
+    y_conv = jnp.einsum("bkc,kc->bc", xx, p["conv_w"].astype(x.dtype))
+    new_conv = xx[:, 1:, :]
+    xbc_t = jax.nn.silu(y_conv)[:, None, :]
+
+    q, k, v, g, xh = _ssd_inputs(xbc_t, dt_raw, p, cfg)
+    o, ssd_new = gated_decode_step(
+        state.ssd, q[:, :, 0], k[:, :, 0], v[:, :, 0], g[:, :, 0])
+    o = o + p["d_skip"][None, :, None].astype(o.dtype) * xh[:, :, 0]
+    y = o.reshape(b, d_inner)
+
+    y = L.rmsnorm({"scale": p["norm_scale"]}, y) * jax.nn.silu(z[:, 0])
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, MambaState(conv=new_conv, ssd=ssd_new)

@@ -1,0 +1,257 @@
+"""RWKV-6 "Finch" block — the paper's eq. 4 with data-dependent
+per-channel decay, plus the bonus-u (current-token) term.
+
+Time-mix recurrence (per head, Dk = Dv = head_dim N):
+
+    S_t = diag(w_t) S_{t−1} + k_t v_tᵀ          (paper's C update, α = w_t)
+    o_t = (S_{t−1} + diag(u) k_t v_tᵀ)ᵀ r_t     (exclusive + bonus)
+
+which is the ``exclusive=True`` convention of
+:func:`repro.core.gated.chunked_gla`. The decay w_t = exp(−exp(w̃_t)) is a
+function of the shifted input — "data-dependent decay" is the paper's
+α_t(h_t) instantiated per channel.
+
+Simplifications vs the reference implementation (documented in DESIGN.md):
+token-shift interpolation coefficients are direct learned vectors (the
+LoRA decomposition of the μ's is an optimisation for parameter count, not
+semantics); receptance/key/value/gate projections are full matrices.
+
+Channel-mix: out = σ(W_r x_r) ⊙ W_v relu(W_k x_k)² (squared-ReLU FFN).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.gated import chunked_gla, gla_scan, gated_decode_step
+from repro.models import layers as L
+from repro.sharding import Rules, constrain
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+def _dims(cfg: ModelConfig):
+    n = cfg.rwkv.head_dim
+    h = cfg.d_model // n
+    return h, n
+
+
+def rwkv6_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    h, n = _dims(cfg)
+    ks = jax.random.split(key, 12)
+    decay_init = jnp.log(
+        jnp.linspace(0.3, 0.9, d).reshape(h, n))  # w̃ init spread
+    return {
+        # time-mix
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "w_r": L.dense_init(ks[0], d, d, dtype),
+        "w_k": L.dense_init(ks[1], d, d, dtype),
+        "w_v": L.dense_init(ks[2], d, d, dtype),
+        "w_g": L.dense_init(ks[3], d, d, dtype),
+        "w_o": L.dense_init(ks[4], d, d, dtype),
+        # data-dependent decay: w̃ = w0 + tanh(x W1) W2
+        "w_decay0": decay_init.reshape(d).astype(jnp.float32),
+        "w_decay1": L.dense_init(ks[5], d, 64, dtype, scale=0.01),
+        "w_decay2": L.dense_init(ks[6], 64, d, dtype, scale=0.01),
+        "u_bonus": jnp.zeros((h, n), jnp.float32),
+        "gn_scale": jnp.ones((h, n), dtype),
+        "gn_bias": jnp.zeros((h, n), dtype),
+        # channel-mix
+        "mu_ck": jnp.full((d,), 0.5, dtype),
+        "mu_cr": jnp.full((d,), 0.5, dtype),
+        "w_ck": L.dense_init(ks[7], d, cfg.d_ff, dtype),
+        "w_cv": L.dense_init(ks[8], cfg.d_ff, d, dtype),
+        "w_cr": L.dense_init(ks[9], d, d, dtype),
+        # norms (RWKV uses LN twice per block)
+        "ln1": L.layernorm_params(d, dtype),
+        "ln2": L.layernorm_params(d, dtype),
+    }
+
+
+def rwkv6_param_specs(cfg: ModelConfig) -> Dict[str, tuple]:
+    vec = (None,)
+    return {
+        "mu_r": vec, "mu_k": vec, "mu_v": vec, "mu_w": vec, "mu_g": vec,
+        "w_r": ("fsdp", "heads"),
+        "w_k": ("fsdp", "heads"),
+        "w_v": ("fsdp", "heads"),
+        "w_g": ("fsdp", "heads"),
+        "w_o": ("heads", "fsdp"),
+        "w_decay0": vec,
+        "w_decay1": ("fsdp", None),
+        "w_decay2": (None, "heads"),
+        "u_bonus": ("heads_lin", None),
+        "gn_scale": ("heads_lin", None),
+        "gn_bias": ("heads_lin", None),
+        "mu_ck": vec, "mu_cr": vec,
+        "w_ck": ("fsdp", "ffn"),
+        "w_cv": ("ffn", "fsdp"),
+        "w_cr": ("fsdp", "heads"),
+        "ln1": {"scale": vec, "bias": vec},
+        "ln2": {"scale": vec, "bias": vec},
+    }
+
+
+class RWKVState(NamedTuple):
+    """Decode state: two one-token shift registers + the paper's k×k
+    (head_dim × head_dim per head) wkv matrix state."""
+    shift_att: Array   # (B, D) previous token input to time-mix
+    shift_ffn: Array   # (B, D) previous token input to channel-mix
+    wkv: Array         # (B, H, N, N)
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16
+                    ) -> RWKVState:
+    d = cfg.d_model
+    h, n = _dims(cfg)
+    return RWKVState(
+        shift_att=jnp.zeros((batch, d), dtype),
+        shift_ffn=jnp.zeros((batch, d), dtype),
+        wkv=jnp.zeros((batch, h, n, n), jnp.float32),
+    )
+
+
+def rwkv_state_specs(cfg: ModelConfig) -> RWKVState:
+    # jit-argument shardings must divide evenly → "heads", not uneven-ok
+    return RWKVState(
+        shift_att=("batch", None),
+        shift_ffn=("batch", None),
+        wkv=("batch", "heads", None, None),
+    )
+
+
+def _token_shift(x: Array, last: Optional[Array] = None) -> Array:
+    """Previous-token stream: shift(x)_t = x_{t−1} (0 / `last` at t=0)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    else:
+        last = last[:, None, :]
+    return jnp.concatenate([last, x[:, :-1, :]], axis=1)
+
+
+def _mix(x: Array, prev: Array, mu: Array) -> Array:
+    return x + (prev - x) * mu.astype(x.dtype)
+
+
+def _decay_log(p: Params, xw: Array) -> Array:
+    """log w_t = −exp(w̃_t) ≤ 0; w̃ = w0 + tanh(x W1) W2. (B,T,D)."""
+    lora = jnp.tanh(xw @ p["w_decay1"].astype(xw.dtype)) \
+        @ p["w_decay2"].astype(xw.dtype)
+    w_tilde = p["w_decay0"] + lora.astype(jnp.float32)
+    return -jnp.exp(w_tilde)
+
+
+def _time_mix(p: Params, x: Array, cfg: ModelConfig, rules: Rules,
+              shift: Optional[Array], wkv: Optional[Array],
+              single: bool):
+    """Shared between full-seq (single=False) and decode (single=True)."""
+    b = x.shape[0]
+    d = cfg.d_model
+    h, n = _dims(cfg)
+
+    if single:
+        prev = shift[:, None, :].astype(x.dtype)
+        xs = x[:, None, :]
+    else:
+        xs = x
+        prev = _token_shift(x, shift)
+
+    xr = _mix(xs, prev, p["mu_r"])
+    xk = _mix(xs, prev, p["mu_k"])
+    xv = _mix(xs, prev, p["mu_v"])
+    xw = _mix(xs, prev, p["mu_w"])
+    xg = _mix(xs, prev, p["mu_g"])
+
+    t = xs.shape[1]
+    r = (xr @ p["w_r"].astype(x.dtype)).reshape(b, t, h, n)
+    k = (xk @ p["w_k"].astype(x.dtype)).reshape(b, t, h, n)
+    v = (xv @ p["w_v"].astype(x.dtype)).reshape(b, t, h, n)
+    g = jax.nn.silu(xg @ p["w_g"].astype(x.dtype))
+    log_w = _decay_log(p, xw).reshape(b, t, h, n)
+
+    r_, k_, v_ = (a.transpose(0, 2, 1, 3) for a in (r, k, v))
+    lw = log_w.transpose(0, 2, 1, 3)
+    r_ = constrain(r_, rules, "batch", "heads_lin", None, None)
+    k_ = constrain(k_, rules, "batch", "heads_lin", None, None)
+    v_ = constrain(v_, rules, "batch", "heads_lin", None, None)
+
+    if single:
+        o, wkv_new = gated_decode_step(
+            wkv, r_[:, :, 0], k_[:, :, 0], v_[:, :, 0], lw[:, :, 0],
+            exclusive=True, u=p["u_bonus"])
+        o = o[:, None]                                    # (B, 1, H, N)
+    else:
+        o, wkv_new = chunked_gla(
+            r_, k_, v_, lw, chunk_size=cfg.linear_chunk,
+            exclusive=True, u=p["u_bonus"])
+        o = o.transpose(0, 2, 1, 3)                       # (B,T,H,N)
+
+    o = L.groupnorm_heads(o, p["gn_scale"].astype(jnp.float32),
+                          p["gn_bias"].astype(jnp.float32))
+    o = (o.reshape(b, t, d) * g).astype(x.dtype)
+    out = o @ p["w_o"].astype(x.dtype)
+    return (out[:, 0] if single else out), wkv_new
+
+
+def _channel_mix(p: Params, x: Array, shift: Optional[Array],
+                 single: bool) -> Array:
+    if single:
+        prev = shift[:, None, :].astype(x.dtype)
+        xs = x[:, None, :]
+    else:
+        xs = x
+        prev = _token_shift(x, shift)
+    xk = _mix(xs, prev, p["mu_ck"])
+    xr = _mix(xs, prev, p["mu_cr"])
+    kk = jnp.square(jax.nn.relu(xk @ p["w_ck"].astype(x.dtype)))
+    vv = kk @ p["w_cv"].astype(x.dtype)
+    out = jax.nn.sigmoid(xr @ p["w_cr"].astype(x.dtype)) * vv
+    return out[:, 0] if single else out
+
+
+def rwkv6_apply(
+    p: Params,
+    x: Array,
+    cfg: ModelConfig,
+    rules: Rules,
+    *,
+    want_state: bool = False,
+) -> Tuple[Array, Optional[RWKVState]]:
+    """Full RWKV-6 block (time-mix + channel-mix, LN residual)."""
+    h1 = L.layernorm(p["ln1"], x)
+    att, wkv_new = _time_mix(p, h1, cfg, rules, None, None, single=False)
+    x = x + att
+    h2 = L.layernorm(p["ln2"], x)
+    x = x + _channel_mix(p, h2, None, single=False)
+    state = None
+    if want_state:
+        state = RWKVState(shift_att=h1[:, -1, :], shift_ffn=h2[:, -1, :],
+                          wkv=wkv_new)
+    return x, state
+
+
+def rwkv6_decode(
+    p: Params,
+    x: Array,
+    state: RWKVState,
+    cfg: ModelConfig,
+    rules: Rules,
+) -> Tuple[Array, RWKVState]:
+    """One decode step — O(head_dim²) per head, O(1) in context length."""
+    h1 = L.layernorm(p["ln1"], x)
+    att, wkv_new = _time_mix(p, h1, cfg, rules, state.shift_att,
+                             state.wkv, single=True)
+    x = x + att
+    h2 = L.layernorm(p["ln2"], x)
+    x = x + _channel_mix(p, h2, state.shift_ffn, single=True)
+    return x, RWKVState(shift_att=h1, shift_ffn=h2, wkv=wkv_new)

@@ -1,0 +1,379 @@
+"""Blocked causal softmax attention in pure XLA (no Pallas).
+
+The dry-run container lowers for a CPU-device mesh, where Pallas TPU
+kernels cannot compile; and XLA's own dot-general fusion on TPU is the
+natural baseline to hillclimb against. This module provides a
+flash-attention-equivalent computation (online softmax over KV blocks,
+``lax.scan`` over query blocks) that never materialises the (T, S) score
+matrix — so 32k-token prefill lowers with bounded live memory while the
+HLO FLOP count stays the true O(T²) cost for the roofline analysis.
+
+Layout convention: q (B, G, Hkv, T, D); k, v (B, Hkv, S, D) — the GQA
+group dim G = n_heads // n_kv_heads stays explicit so grouped attention
+never materialises repeated K/V.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def blocked_causal_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    scale: Optional[float] = None,
+    q_block: int = 512,
+    kv_block: int = 1024,
+    q_offset: Optional[int] = None,
+    kv_len: Optional[Array] = None,
+) -> Array:
+    """Causal softmax attention with GQA grouping, O(block) live memory.
+
+    q: (B, G, Hkv, T, D); k, v: (B, Hkv, S, D). Query position i attends
+    key positions j with ``j <= i + q_offset`` (default S − T: queries are
+    the last T of the S keys) and, if ``kv_len`` is given, ``j < kv_len``.
+    Returns (B, G, Hkv, T, D).
+
+    NOTE: differentiating THIS function via autodiff stacks the per-block
+    score residuals of the inner scans — O(T·S) memory. Training paths
+    must use :func:`flash_attention` (custom VJP, O(T) residuals) —
+    measured in EXPERIMENTS.md §Perf iteration 1.
+    """
+    b, g, hkv, t, d = q.shape
+    s = k.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    off = s - t if q_offset is None else q_offset
+
+    bq = min(q_block, t)
+    bkv = min(kv_block, s)
+    t_pad, s_pad = _ceil_to(t, bq), _ceil_to(s, bkv)
+    if t_pad != t:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+    if s_pad != s:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+
+    nq, nkv = t_pad // bq, s_pad // bkv
+    # (nq, B, G, Hkv, bq, D)
+    qb = jnp.moveaxis(
+        q.reshape(b, g, hkv, nq, bq, d), 3, 0
+    ).astype(jnp.float32) * scale
+    kb = jnp.moveaxis(k.reshape(b, hkv, nkv, bkv, d), 2, 0)
+    vb = jnp.moveaxis(v.reshape(b, hkv, nkv, bkv, d), 2, 0)
+
+    valid_len = jnp.asarray(s if kv_len is None else kv_len, jnp.int32)
+
+    def q_step(_, qi_and_idx):
+        q_i, iq = qi_and_idx
+        m0 = jnp.full((b, g, hkv, bq, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, g, hkv, bq, 1), jnp.float32)
+        a0 = jnp.zeros((b, g, hkv, bq, d), jnp.float32)
+
+        def kv_step(carry, kv_and_idx):
+            m_p, l_p, acc = carry
+            k_j, v_j, jk = kv_and_idx
+            scores = jnp.einsum(
+                "bghtd,bhsd->bghts", q_i, k_j.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            rows = iq * bq + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bkv), 0) + off
+            cols = jk * bkv + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bkv), 1)
+            ok = (rows >= cols) & (cols < valid_len)
+            scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+            m_n = jnp.maximum(m_p, jnp.max(scores, axis=-1, keepdims=True))
+            p = jnp.exp(scores - m_n)
+            alpha = jnp.exp(m_p - m_n)
+            l_n = alpha * l_p + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum(
+                "bghts,bhsd->bghtd", p, v_j.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            return (m_n, l_n, acc), None
+
+        (m_f, l_f, acc_f), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kb, vb, jnp.arange(nkv))
+        )
+        l_f = jnp.where(l_f == 0.0, 1.0, l_f)
+        return None, (acc_f / l_f).astype(v.dtype)
+
+    _, ob = jax.lax.scan(q_step, None, (qb, jnp.arange(nq)))
+    o = jnp.moveaxis(ob, 0, 3).reshape(b, g, hkv, t_pad, d)
+    return o[..., :t, :]
+
+
+def _causal_pairs(nq: int, nkv: int, block: int, off: int):
+    """Static list of (q-block, kv-block) pairs with any unmasked entry.
+
+    Fully-masked future blocks are never visited — at T=4k this removes
+    ~40% of blocked-attention compute and HBM traffic, ~50% at 32k
+    (§Perf iteration 3). Returned as an (P, 2) int32 array scanned over.
+    """
+    import numpy as np
+    pairs = [(i, j) for i in range(nq) for j in range(nkv)
+             if j * block <= i * block + block - 1 + off]
+    return np.asarray(pairs, dtype=np.int32)
+
+
+def _pin(x, block_spec):
+    """Pin a stacked (n, B, H, bq, *) tensor's sharding.
+
+    Without this, GSPMD propagates the sequence-parallel residual
+    sharding into the pair-scan's stacked block dim, and every per-pair
+    dynamic-slice becomes an all-to-all (§Perf iteration 7).
+    """
+    if block_spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, block_spec)
+
+
+def _prep_blocks(q, k, v, block, scale, block_spec=None):
+    """(B,H,T,D)/(B,H,S,D) → padded (nq,B,H,bq,D), (nkv,B,H,bk,D)."""
+    b, h, t, d = q.shape
+    s = k.shape[2]
+    bq = min(block, t)
+    t_pad, s_pad = _ceil_to(t, bq), _ceil_to(s, bq)
+    if t_pad != t:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+    if s_pad != s:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+    nq, nkv = t_pad // bq, s_pad // bq
+    qb = jnp.moveaxis(q.reshape(b, h, nq, bq, d), 2, 0)
+    # blocks stay in the input dtype (bf16 on TPU): the MXU consumes
+    # bf16 operands with f32 accumulation, halving HBM block reads
+    # (§Perf iteration 9)
+    qb = _pin(qb * jnp.asarray(scale, q.dtype), block_spec)
+    kb = _pin(jnp.moveaxis(k.reshape(b, h, nkv, bq, d), 2, 0), block_spec)
+    vb = _pin(jnp.moveaxis(v.reshape(b, h, nkv, bq, d), 2, 0), block_spec)
+    return qb, kb, vb, bq, nq, nkv, t_pad, s_pad
+
+
+def _block_mask(i, j, block, off, s_real):
+    rows = i * block + jax.lax.broadcasted_iota(jnp.int32, (block, block),
+                                                0) + off
+    cols = j * block + jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+    return (rows >= cols) & (cols < s_real)
+
+
+def _flash_fwd_impl(q, k, v, *, scale, block, off, block_spec=None):
+    """Pair-list flash forward. q,k,v: (B,H,T,D)/(B,H,S,D).
+
+    Returns (o, lse). Only causally-live (q-block, kv-block) pairs are
+    visited; the per-q-block online-softmax state is carried stacked and
+    updated in place per pair.
+    """
+    b, h, t, d = q.shape
+    s = k.shape[2]
+    qb, kb, vb, bq, nq, nkv, t_pad, _ = _prep_blocks(
+        q, k, v, block, scale, block_spec)
+    pairs = jnp.asarray(_causal_pairs(nq, nkv, bq, off))
+
+    m0 = _pin(jnp.full((nq, b, h, bq, 1), NEG_INF, jnp.float32), block_spec)
+    l0 = _pin(jnp.zeros((nq, b, h, bq, 1), jnp.float32), block_spec)
+    a0 = _pin(jnp.zeros((nq, b, h, bq, d), jnp.float32), block_spec)
+
+    def step(carry, pair):
+        m, l, acc = carry
+        i, j = pair[0], pair[1]
+        q_i = jax.lax.dynamic_index_in_dim(qb, i, 0, keepdims=False)
+        k_j = jax.lax.dynamic_index_in_dim(kb, j, 0, keepdims=False)
+        v_j = jax.lax.dynamic_index_in_dim(vb, j, 0, keepdims=False)
+        scores = jnp.einsum("bhtd,bhsd->bhts", q_i, k_j,
+                            preferred_element_type=jnp.float32)
+        ok = _block_mask(i, j, bq, off, s)
+        scores = jnp.where(ok[None, None], scores, NEG_INF)
+        m_p = jax.lax.dynamic_index_in_dim(m, i, 0, keepdims=False)
+        l_p = jax.lax.dynamic_index_in_dim(l, i, 0, keepdims=False)
+        a_p = jax.lax.dynamic_index_in_dim(acc, i, 0, keepdims=False)
+        m_n = jnp.maximum(m_p, jnp.max(scores, -1, keepdims=True))
+        p = jnp.exp(scores - m_n)
+        alpha = jnp.exp(m_p - m_n)
+        l_n = alpha * l_p + jnp.sum(p, -1, keepdims=True)
+        a_n = a_p * alpha + jnp.einsum(
+            "bhts,bhsd->bhtd", p, v_j.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_n, i, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_n, i, 0)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_n, i, 0)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), pairs)
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o = (acc / l_safe).astype(v.dtype)
+    lse = (m + jnp.log(l_safe))[..., 0]
+    o = jnp.moveaxis(o, 0, 2).reshape(b, h, t_pad, d)[..., :t, :]
+    lse = jnp.moveaxis(lse, 0, 2).reshape(b, h, t_pad)[..., :t]
+    return o, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, scale=None, block=512, q_offset=None,
+                    block_spec=None):
+    """Causal flash attention for train/prefill, flat-head layout.
+
+    q: (B, H, T, D); k, v: (B, H, S, D) (GQA callers broadcast K/V to the
+    flat q-head dim first — one evenly-shardable layout, §Perf iter 2).
+    Custom VJP saves only (q, k, v, o, lse) — O(T·D) residuals — and
+    recomputes scores blockwise (§Perf iter 1); only causally-live block
+    pairs are visited (§Perf iter 3).
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    off = k.shape[2] - q.shape[2] if q_offset is None else q_offset
+    o, _ = _flash_fwd_impl(q, k, v, scale=scale, block=block, off=off,
+                           block_spec=block_spec)
+    return o
+
+
+def _flash_fwd(q, k, v, scale, block, q_offset, block_spec):
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    off = k.shape[2] - q.shape[2] if q_offset is None else q_offset
+    o, lse = _flash_fwd_impl(q, k, v, scale=scale, block=block, off=off,
+                             block_spec=block_spec)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(scale, block, q_offset, block_spec, res, do):
+    q, k, v, o, lse = res
+    b, h, t, d = q.shape
+    s = k.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    off = s - t if q_offset is None else q_offset
+
+    qb, kb, vb, bq, nq, nkv, t_pad, s_pad = _prep_blocks(
+        q, k, v, block, 1.0, block_spec)  # unscaled; scaled below
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), -1)
+
+    def pad_t(x):
+        widths = [(0, 0)] * x.ndim
+        widths[2] = (0, t_pad - t)
+        return jnp.pad(x, widths) if t_pad != t else x
+
+    dob = _pin(jnp.moveaxis(pad_t(do).reshape(b, h, nq, bq, d), 2, 0),
+               block_spec)
+    lseb = jnp.moveaxis(pad_t(lse[..., None]).reshape(b, h, nq, bq), 2, 0)
+    deltab = jnp.moveaxis(pad_t(delta[..., None]).reshape(b, h, nq, bq),
+                          2, 0)
+    pairs = jnp.asarray(_causal_pairs(nq, nkv, bq, off))
+
+    dq0 = _pin(jnp.zeros((nq, b, h, bq, d), jnp.float32), block_spec)
+    dk0 = _pin(jnp.zeros((nkv, b, h, bq, d), jnp.float32), block_spec)
+    dv0 = _pin(jnp.zeros((nkv, b, h, bq, d), jnp.float32), block_spec)
+
+    def step(carry, pair):
+        dq, dk, dv = carry
+        i, j = pair[0], pair[1]
+        q_i = jax.lax.dynamic_index_in_dim(qb, i, 0, keepdims=False)
+        do_i = jax.lax.dynamic_index_in_dim(dob, i, 0, keepdims=False)
+        lse_i = jax.lax.dynamic_index_in_dim(lseb, i, 0, keepdims=False)
+        dlt_i = jax.lax.dynamic_index_in_dim(deltab, i, 0, keepdims=False)
+        k_j = jax.lax.dynamic_index_in_dim(kb, j, 0, keepdims=False)
+        v_j = jax.lax.dynamic_index_in_dim(vb, j, 0, keepdims=False)
+        scores = jnp.einsum(
+            "bhtd,bhsd->bhts", q_i * jnp.asarray(scale, q_i.dtype), k_j,
+            preferred_element_type=jnp.float32)
+        ok = _block_mask(i, j, bq, off, s)[None, None]
+        p = jnp.where(ok, jnp.exp(scores - lse_i[..., None]), 0.0)
+        dp = jnp.einsum("bhtd,bhsd->bhts", do_i, v_j,
+                        preferred_element_type=jnp.float32)
+        ds = (p * (dp - dlt_i[..., None]) * scale).astype(k_j.dtype)
+        dq_i = jax.lax.dynamic_index_in_dim(dq, i, 0, keepdims=False)
+        dq_i = dq_i + jnp.einsum("bhts,bhsd->bhtd", ds, k_j,
+                                 preferred_element_type=jnp.float32)
+        dq = jax.lax.dynamic_update_index_in_dim(dq, dq_i, i, 0)
+        dk_j = jax.lax.dynamic_index_in_dim(dk, j, 0, keepdims=False)
+        dk_j = dk_j + jnp.einsum("bhts,bhtd->bhsd", ds, q_i,
+                                 preferred_element_type=jnp.float32)
+        dk = jax.lax.dynamic_update_index_in_dim(dk, dk_j, j, 0)
+        dv_j = jax.lax.dynamic_index_in_dim(dv, j, 0, keepdims=False)
+        dv_j = dv_j + jnp.einsum("bhts,bhtd->bhsd", p.astype(do_i.dtype),
+                                 do_i, preferred_element_type=jnp.float32)
+        dv = jax.lax.dynamic_update_index_in_dim(dv, dv_j, j, 0)
+        return (dq, dk, dv), None
+
+    (dqb, dkb, dvb), _ = jax.lax.scan(step, (dq0, dk0, dv0), pairs)
+    dq = jnp.moveaxis(dqb, 0, 2).reshape(b, h, t_pad, d)[..., :t, :]
+    dk = jnp.moveaxis(dkb, 0, 2).reshape(b, h, s_pad, d)[..., :s, :]
+    dv = jnp.moveaxis(dvb, 0, 2).reshape(b, h, s_pad, d)[..., :s, :]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def full_causal_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    scale: Optional[float] = None,
+    q_offset: Optional[int] = None,
+) -> Array:
+    """Unblocked reference (materialises (T,S) scores). Short-seq path and
+    test oracle for :func:`blocked_causal_attention`."""
+    b, g, hkv, t, d = q.shape
+    s = k.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    off = s - t if q_offset is None else q_offset
+    scores = jnp.einsum(
+        "bghtd,bhsd->bghts", q.astype(jnp.float32) * scale,
+        k.astype(jnp.float32),
+    )
+    rows = jnp.arange(t)[:, None] + off
+    cols = jnp.arange(s)[None, :]
+    scores = jnp.where((rows >= cols)[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum(
+        "bghts,bhsd->bghtd", p, v.astype(jnp.float32)
+    ).astype(v.dtype)
+
+
+def decode_attention(
+    q: Array,
+    k_cache: Array,
+    v_cache: Array,
+    cache_len: Array,
+    *,
+    scale: Optional[float] = None,
+) -> Array:
+    """Single-token decode against a KV cache.
+
+    q: (B, G, Hkv, D); k_cache, v_cache: (B, Hkv, S, D); cache_len: ()
+    number of valid cache entries. Returns (B, G, Hkv, D). This is the
+    O(n)-per-token lookup the paper's linear mechanism replaces with an
+    O(k²) state read.
+    """
+    d = q.shape[-1]
+    s = k_cache.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    scores = jnp.einsum(
+        "bghd,bhsd->bghs", q.astype(jnp.float32) * scale,
+        k_cache.astype(jnp.float32),
+    )
+    valid = jnp.arange(s) < cache_len
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum(
+        "bghs,bhsd->bghd", p, v_cache.astype(jnp.float32)
+    ).astype(v_cache.dtype)

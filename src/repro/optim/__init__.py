@@ -1,0 +1,14 @@
+"""Optimizer substrate: Adam/AdamW, schedules, clipping, accumulation,
+gradient compression, ZeRO-1 sharding."""
+
+from repro.optim.adamw import (  # noqa: F401
+    Optimizer, adam, adamw, apply_updates, global_norm,
+    clip_by_global_norm, opt_state_specs,
+)
+from repro.optim.schedule import (  # noqa: F401
+    constant, cosine_warmup, linear_warmup,
+)
+from repro.optim.accumulate import GradAccumulator  # noqa: F401
+from repro.optim.compress import (  # noqa: F401
+    compress_bf16, decompress_bf16, ErrorFeedback,
+)

@@ -1,0 +1,55 @@
+"""Gradient accumulation over microbatches.
+
+``GradAccumulator.run`` scans the loss function over ``n_micro`` slices
+of the batch's leading dim, summing gradients in fp32 — the standard way
+to hit a large global batch without holding its activations, and one of
+the §Perf levers (microbatch size trades activation memory against
+pipeline efficiency).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GradAccumulator:
+    n_micro: int
+
+    def run(self, loss_fn: Callable, params, batch: Dict[str, Any]
+            ) -> Tuple[jax.Array, Any, Any]:
+        """loss_fn(params, microbatch) -> (loss, metrics).
+
+        Returns (mean loss, mean metrics, summed-then-averaged grads).
+        """
+        if self.n_micro <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        def micro(b):
+            return jax.tree.map(
+                lambda x: x.reshape(self.n_micro, -1, *x.shape[1:]), b)
+
+        micro_batch = micro(batch)
+        g0 = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            loss_acc, grads_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            grads_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), grads_acc, grads)
+            return (loss_acc + loss, grads_acc), metrics
+
+        (loss_sum, grads), metrics = jax.lax.scan(
+            body, (jnp.zeros(()), g0), micro_batch)
+        inv = 1.0 / self.n_micro
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics)
+        return loss_sum * inv, metrics, grads

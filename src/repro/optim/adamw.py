@@ -1,0 +1,116 @@
+"""Adam / AdamW as pure pytree transforms (no optax dependency).
+
+The paper trains with ADAM (§5); the LM framework defaults to AdamW.
+``opt_state_specs`` mirrors the parameter sharding tree for the moment
+buffers — with parameters already sharded over (pod, data) via the
+"fsdp" logical axis this IS ZeRO-1/2: optimizer state lives fully
+sharded and no device holds a replicated copy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Schedule = Callable[[Array], Array]
+
+
+class AdamState(NamedTuple):
+    step: Array     # () int32
+    mu: Any         # first moment, same tree as params
+    nu: Any         # second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], AdamState]
+    update: Callable[[Any, AdamState, Any], Tuple[Any, AdamState]]
+
+
+def _cast_tree(tree, dtype):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype), tree)
+
+
+def adamw(
+    lr: Schedule | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    clip_norm: Optional[float] = 1.0,
+    moment_dtype=jnp.float32,
+) -> Optimizer:
+    lr_fn: Schedule = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params) -> AdamState:
+        return AdamState(
+            step=jnp.zeros((), jnp.int32),
+            mu=_cast_tree(params, moment_dtype),
+            nu=_cast_tree(params, moment_dtype),
+        )
+
+    def update(grads, state: AdamState, params):
+        step = state.step + 1
+        if clip_norm is not None:
+            grads = clip_by_global_norm(grads, clip_norm)
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(moment_dtype)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * jnp.square(gf)
+            mhat = m / c1
+            vhat = v / c2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(moment_dtype)
+            new_p = p.astype(moment_dtype) - lr_t * delta
+            return new_p.astype(p.dtype), m, v
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        flat_v = tdef.flatten_up_to(state.nu)
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, AdamState(step=step, mu=new_m, nu=new_v)
+
+    return Optimizer(init=init, update=update)
+
+
+def adam(lr, **kw) -> Optimizer:
+    """Paper §5: plain ADAM (no weight decay)."""
+    kw.setdefault("weight_decay", 0.0)
+    return adamw(lr, **kw)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree)
+
+
+def opt_state_specs(param_spec_tree) -> AdamState:
+    """Sharding specs for AdamState, mirroring the param specs (ZeRO-1:
+    moments shard exactly like their parameters)."""
+    return AdamState(step=(), mu=param_spec_tree, nu=param_spec_tree)

@@ -1,0 +1,42 @@
+"""Gradient compression with error feedback.
+
+On slow inter-pod links the gradient all-reduce dominates; casting
+gradients to bf16 before the reduction halves the bytes on the wire. The
+rounding error is kept in a per-parameter residual and added back next
+step (error feedback, Seide et al. 2014-style), which keeps convergence
+unaffected to first order. Plumbs into the train step as a tree→tree
+transform applied before ``psum``-inducing sharding boundaries.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_bf16(grads: Any) -> Any:
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def decompress_bf16(grads: Any) -> Any:
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+
+class ErrorFeedback(NamedTuple):
+    residual: Any  # fp32 tree, same structure as grads
+
+    @classmethod
+    def init(cls, params) -> "ErrorFeedback":
+        return cls(residual=jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def compress(self, grads) -> Tuple[Any, "ErrorFeedback"]:
+        """Returns (bf16 grads to all-reduce, updated residual)."""
+        corrected = jax.tree.map(
+            lambda g, r: g.astype(jnp.float32) + r, grads, self.residual)
+        compressed = compress_bf16(corrected)
+        new_residual = jax.tree.map(
+            lambda c, q: c - q.astype(jnp.float32), corrected, compressed)
+        return compressed, ErrorFeedback(residual=new_residual)

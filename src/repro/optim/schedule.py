@@ -1,0 +1,28 @@
+"""Learning-rate schedules (step → lr)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def linear_warmup(lr: float, warmup: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        return jnp.float32(lr) * jnp.minimum(1.0, s / max(warmup, 1))
+    return fn
+
+
+def cosine_warmup(lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, s / max(warmup, 1))
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return jnp.float32(lr) * warm * cos
+    return fn

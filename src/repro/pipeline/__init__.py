@@ -1,0 +1,5 @@
+"""Pipeline parallelism (GPipe schedule over a ``stage`` mesh axis)."""
+
+from repro.pipeline.gpipe import (  # noqa: F401
+    gpipe_loss_fn, make_pipeline_mesh, pipeline_compatible,
+)

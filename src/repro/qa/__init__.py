@@ -1,0 +1,5 @@
+"""The paper's own experiment (§5): cloze QA with GRU encoders and the
+four attention variants (none | linear | gated_linear | softmax)."""
+
+from repro.qa.model import QAModel  # noqa: F401
+from repro.qa.train import train_qa, TrainResult  # noqa: F401

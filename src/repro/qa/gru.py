@@ -1,0 +1,53 @@
+"""Single-layer GRU in pure JAX (the paper's encoder, §5)."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+def gru_params(key, d_in: int, d_hidden: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_i = 1.0 / (d_in ** 0.5)
+    scale_h = 1.0 / (d_hidden ** 0.5)
+    return {
+        # gates: reset | update (stacked), candidate separate
+        "w_i": (jax.random.normal(k1, (d_in, 3 * d_hidden)) * scale_i
+                ).astype(dtype),
+        "w_h": (jax.random.normal(k2, (d_hidden, 3 * d_hidden)) * scale_h
+                ).astype(dtype),
+        "b": jnp.zeros((3 * d_hidden,), dtype),
+    }
+
+
+def gru_cell(p: Params, h: Array, x: Array) -> Array:
+    """h: (B, K); x: (B, D) → new h."""
+    k = h.shape[-1]
+    gi = x @ p["w_i"] + p["b"]
+    gh = h @ p["w_h"]
+    i_r, i_z, i_n = jnp.split(gi, 3, axis=-1)
+    h_r, h_z, h_n = jnp.split(gh, 3, axis=-1)
+    r = jax.nn.sigmoid(i_r + h_r)
+    z = jax.nn.sigmoid(i_z + h_z)
+    n = jnp.tanh(i_n + r * h_n)
+    return (1.0 - z) * n + z * h
+
+
+def gru_scan(p: Params, xs: Array, h0: Optional[Array] = None
+             ) -> Tuple[Array, Array]:
+    """xs: (B, T, D) → (hidden states (B, T, K), last state (B, K))."""
+    b, t, _ = xs.shape
+    k = p["w_h"].shape[0]
+    h0 = jnp.zeros((b, k), xs.dtype) if h0 is None else h0
+
+    def step(h, x):
+        h = gru_cell(p, h, x)
+        return h, h
+
+    h_last, hs = jax.lax.scan(step, h0, jnp.moveaxis(xs, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), h_last

@@ -1,0 +1,131 @@
+"""The paper's QA architecture (§5), faithful to the text:
+
+* a single-layer GRU encodes the document (hidden size k = 100),
+* a SEPARATE single-layer GRU encodes the query (footnote 3: unlike
+  Hermann et al.'s no-attention baseline, document and query encoders
+  are independent so the document representation is query-agnostic),
+* word embeddings of size 100, ADAM training,
+* four attention variants over the document states H (B, n, k):
+
+    none          answer from [h_last; q] only
+    linear        R(D,Q) = HᵀH q = C q          (paper §3)
+    gated_linear  C = Σ f fᵀ, f = σ(Wh+b) ⊙ h   (paper §4, α=β=1)
+    softmax       R(D,Q) = Hᵀ softmax(Hq)       (paper §2 baseline)
+
+The linear variants store ONLY the k×k matrix C per document
+(``encode_document`` → ``DocumentState``) — the fixed-size representation
+— and answer queries in O(k²) via ``lookup`` (the paper's fast lookup).
+The answer head scores the R(D,Q) representation against entity
+embeddings (cloze over anonymised entities).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_qa import QAConfig
+from repro.core.linear_attention import encode_document, lookup
+from repro.core.gated import paper_gate
+from repro.core.softmax_attention import softmax_lookup
+from repro.qa.gru import gru_params, gru_scan
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+ATTENTION_VARIANTS = ("none", "linear", "gated_linear", "softmax",
+                      "second_order")
+
+
+class QAModel:
+    def __init__(self, cfg: QAConfig):
+        assert cfg.attention in ATTENTION_VARIANTS
+        self.cfg = cfg
+
+    # -- params ----------------------------------------------------------------
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        p: Params = {
+            "embed": (jax.random.normal(ks[0], (cfg.vocab_size,
+                                                cfg.embed_dim)) * 0.1),
+            "doc_gru": gru_params(ks[1], cfg.embed_dim, cfg.hidden),
+            "query_gru": gru_params(ks[2], cfg.embed_dim, cfg.hidden),
+            "w_out": (jax.random.normal(ks[3], (2 * cfg.hidden,
+                                                cfg.hidden)) * 0.05),
+            "b_out": jnp.zeros((cfg.hidden,)),
+            "ans_embed": (jax.random.normal(ks[4], (cfg.n_entities,
+                                                    cfg.hidden)) * 0.1),
+        }
+        if cfg.attention == "gated_linear":
+            # the paper's gate f = σ(W h + b) ⊙ h
+            p["w_gate"] = (jax.random.normal(ks[5], (cfg.hidden,
+                                                     cfg.hidden)) * 0.05)
+            p["b_gate"] = jnp.zeros((cfg.hidden,))
+        if cfg.attention == "second_order":
+            # the paper's §6 proposal: C and h updates interleaved
+            from repro.core.second_order import second_order_params
+            p["so"] = second_order_params(ks[6], cfg.embed_dim,
+                                          cfg.hidden)
+            del p["doc_gru"]
+        return p
+
+    # -- document encoding (the paper's "encode once") -------------------------
+
+    def encode_doc(self, p: Params, doc: Array) -> Tuple[Array, Array]:
+        """doc: (B, n) → (H (B, n, k) or C (B, k, k), h_last (B, k)).
+
+        For the linear variants the n×k states collapse into the k×k
+        fixed-size representation; softmax must keep all of H (the
+        paper's Table-1 memory row, measured in benchmarks/table1.py).
+        """
+        emb = jnp.take(p["embed"], doc, axis=0)
+        att = self.cfg.attention
+        if att == "second_order":
+            from repro.core.second_order import second_order_scan
+            _, h_last, c = second_order_scan(p["so"], emb)
+            return c, h_last
+        hs, h_last = gru_scan(p["doc_gru"], emb)
+        if att == "none":
+            return h_last, h_last          # nothing else retained
+        if att == "linear":
+            return encode_document(hs), h_last
+        if att == "gated_linear":
+            f = paper_gate(hs, p["w_gate"], p["b_gate"])
+            return encode_document(f), h_last
+        return hs, h_last                  # softmax keeps H
+
+    def encode_query(self, p: Params, query: Array) -> Array:
+        emb = jnp.take(p["embed"], query, axis=0)
+        _, q = gru_scan(p["query_gru"], emb)
+        return q
+
+    # -- lookup + answer --------------------------------------------------------
+
+    def answer_logits(self, p: Params, doc_repr: Array, h_last: Array,
+                      q: Array) -> Array:
+        att = self.cfg.attention
+        if att == "none":
+            r = h_last
+        elif att in ("linear", "gated_linear", "second_order"):
+            r = lookup(doc_repr, q)        # O(k²) — the paper's claim
+            r = r / (jnp.linalg.norm(r, axis=-1, keepdims=True) + 1e-6) \
+                * jnp.sqrt(jnp.float32(self.cfg.hidden))
+        else:
+            r = softmax_lookup(doc_repr, q)
+        feats = jnp.concatenate([r, q], axis=-1)
+        hidden = jnp.tanh(feats @ p["w_out"] + p["b_out"])
+        return hidden @ p["ans_embed"].T
+
+    def loss_and_acc(self, p: Params, batch) -> Tuple[Array, Array]:
+        doc_repr, h_last = self.encode_doc(p, batch.doc)
+        q = self.encode_query(p, batch.query)
+        logits = self.answer_logits(p, doc_repr, h_last, q)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(
+            logp, batch.answer[:, None], axis=-1).mean()
+        acc = jnp.mean(jnp.argmax(logits, -1) == batch.answer)
+        return nll, acc

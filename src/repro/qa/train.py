@@ -1,0 +1,101 @@
+"""Training driver for the paper's QA experiment (Figure 1)."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_qa import QAConfig
+from repro.data.cloze import ClozeTask
+from repro.optim import adam
+from repro.qa.model import QAModel
+
+
+@dataclasses.dataclass
+class TrainResult:
+    attention: str
+    steps: List[int]
+    val_acc: List[float]
+    val_loss: List[float]
+
+    @property
+    def final_acc(self) -> float:
+        return self.val_acc[-1]
+
+    @property
+    def best_acc(self) -> float:
+        return max(self.val_acc)
+
+    def steps_to_acc(self, target: float) -> int:
+        """First step at which validation accuracy ≥ target (-1 if never)
+        — the convergence-speed claim of Figure 1."""
+        for s, a in zip(self.steps, self.val_acc):
+            if a >= target:
+                return s
+        return -1
+
+
+def train_qa(
+    attention: str,
+    *,
+    steps: int = 400,
+    eval_every: int = 40,
+    seed: int = 0,
+    cfg: QAConfig = None,
+    task: ClozeTask = None,
+) -> TrainResult:
+    cfg = cfg or QAConfig(attention=attention)
+    cfg = dataclasses.replace(cfg, attention=attention)
+    task = task or ClozeTask(seed=seed + 1)
+
+    model = QAModel(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    optimizer = adam(cfg.lr)
+    opt_state = optimizer.init(params)
+
+    @jax.jit
+    def step_fn(params, opt_state, doc, query, answer):
+        from repro.data.cloze import ClozeBatch
+        batch = ClozeBatch(doc=doc, query=query, answer=answer)
+
+        def loss_fn(p):
+            loss, acc = model.loss_and_acc(p, batch)
+            return loss, acc
+
+        (loss, acc), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, loss, acc
+
+    @jax.jit
+    def eval_fn(params, doc, query, answer):
+        from repro.data.cloze import ClozeBatch
+        return model.loss_and_acc(
+            params, ClozeBatch(doc=doc, query=query, answer=answer))
+
+    val = task.batch(256, step=10_000_000)  # held-out seed region
+    result = TrainResult(attention=attention, steps=[], val_acc=[],
+                         val_loss=[])
+    for i in range(steps):
+        b = task.batch(cfg.batch_size, step=i)
+        params, opt_state, loss, acc = step_fn(
+            params, opt_state, b.doc, b.query, b.answer)
+        if (i + 1) % eval_every == 0 or i == 0:
+            vloss, vacc = eval_fn(params, val.doc, val.query, val.answer)
+            result.steps.append(i + 1)
+            result.val_acc.append(float(vacc))
+            result.val_loss.append(float(vloss))
+    return result
+
+
+def run_figure1(steps: int = 400, seed: int = 0) -> Dict[str, TrainResult]:
+    """Train all four variants on the same data (the Figure-1 sweep)."""
+    out = {}
+    for att in ("none", "linear", "gated_linear", "softmax"):
+        out[att] = train_qa(att, steps=steps, seed=seed)
+    return out

@@ -1,0 +1,9 @@
+"""Distributed runtime: step builders, fault-tolerant training loop,
+straggler detection, elastic re-mesh planning."""
+
+from repro.runtime.steps import (  # noqa: F401
+    make_train_step, make_prefill_step, make_decode_step, make_eval_step,
+)
+from repro.runtime.train_loop import TrainLoop, TrainLoopConfig  # noqa: F401
+from repro.runtime.straggler import StragglerDetector  # noqa: F401
+from repro.runtime.elastic import plan_mesh_shape  # noqa: F401

@@ -1,0 +1,43 @@
+"""Elastic re-mesh planning: map a surviving chip count to a mesh shape.
+
+When nodes fail, the job restarts on the surviving topology. The planner
+keeps the model axis fixed (TP degree is baked into layouts and must
+divide head/ffn dims) and shrinks the data axis — DP degree is the
+elastic dimension. Checkpoints restore via
+:func:`repro.checkpoint.elastic.restore_on_mesh`; global batch is held
+constant by raising gradient-accumulation steps, preserving training
+semantics across the re-mesh (tested in tests/test_runtime_elastic.py).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+
+def plan_mesh_shape(
+    n_chips: int,
+    *,
+    model: int = 16,
+    prefer_pods: Optional[int] = None,
+) -> Dict[str, int]:
+    """Largest (pod, data, model) grid fitting ``n_chips`` with the given
+    TP degree. Returns {"pod": P, "data": D, "model": model}."""
+    if n_chips < model:
+        raise ValueError(f"{n_chips} chips cannot host model={model} TP")
+    slots = n_chips // model
+    if prefer_pods and slots % prefer_pods == 0:
+        return {"pod": prefer_pods, "data": slots // prefer_pods,
+                "model": model}
+    return {"pod": 1, "data": slots, "model": model}
+
+
+def accum_for_batch(global_batch: int, data_parallel: int,
+                    per_device_batch: int = 1) -> Tuple[int, int]:
+    """(microbatch per step, accumulation steps) that keep the global
+    batch constant after DP shrinks."""
+    per_step = data_parallel * per_device_batch
+    if global_batch % per_step != 0:
+        # fall back to the largest divisor ≤ per_step
+        while global_batch % per_step != 0:
+            per_step -= 1
+    return per_step, global_batch // per_step

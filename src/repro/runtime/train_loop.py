@@ -1,0 +1,134 @@
+"""Fault-tolerant training loop.
+
+Responsibilities beyond "call the step in a loop":
+
+* **auto-resume** — on construction, restore the newest checkpoint if one
+  exists (params + optimizer state + data-iterator position), so a
+  preempted/killed job relaunches into the exact step it lost.
+* **periodic + preemption checkpointing** — async saves every
+  ``ckpt_every`` steps; ``request_preemption()`` (wired to SIGTERM by the
+  launcher) forces a synchronous save at the next step boundary, the
+  behaviour TPU maintenance events require.
+* **failure injection** — ``fail_at_step`` raises mid-run (after the
+  optimizer update, before the checkpoint), letting tests prove that a
+  crash + relaunch reproduces the uninterrupted loss curve bit-exactly.
+* **straggler telemetry** — every step time feeds the EWMA detector.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.runtime.straggler import StragglerDetector
+
+log = logging.getLogger(__name__)
+
+
+class InjectedFailure(RuntimeError):
+    """Raised by the failure-injection hook (tests / chaos drills)."""
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep: int = 3
+    log_every: int = 10
+    fail_at_step: Optional[int] = None   # failure injection
+    async_ckpt: bool = True
+
+
+class TrainLoop:
+    def __init__(
+        self,
+        step_fn: Callable,                   # (params, opt, batch) -> ...
+        params: Any,
+        opt_state: Any,
+        dataset: Any,                        # has .batch_at(step)
+        config: TrainLoopConfig,
+        put_batch: Optional[Callable] = None,  # host batch -> device batch
+    ):
+        self.step_fn = step_fn
+        self.params = params
+        self.opt_state = opt_state
+        self.dataset = dataset
+        self.config = config
+        self.put_batch = put_batch or (lambda b: b)
+        self.step = 0
+        self.metrics_history: List[Dict[str, float]] = []
+        self.detector = StragglerDetector()
+        self._preempted = False
+
+        self.ckpt: Optional[CheckpointManager] = None
+        if config.ckpt_dir:
+            self.ckpt = CheckpointManager(config.ckpt_dir, keep=config.keep)
+            if self.ckpt.has_checkpoint():
+                state = {"params": self.params, "opt": self.opt_state}
+                restored, extra, step = self.ckpt.restore(state)
+                self.params = restored["params"]
+                self.opt_state = restored["opt"]
+                self.step = int(extra.get("step", step))
+                log.info("auto-resumed from step %d", self.step)
+
+    # -- external controls ---------------------------------------------------
+
+    def request_preemption(self) -> None:
+        """SIGTERM handler target: checkpoint at the next boundary."""
+        self._preempted = True
+
+    # -- main loop -------------------------------------------------------------
+
+    def run(self) -> Dict[str, Any]:
+        cfg = self.config
+        while self.step < cfg.total_steps:
+            batch = self.put_batch(self.dataset.batch_at(self.step))
+            self.detector.start()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = self.detector.stop(self.step)
+            self.step += 1
+
+            host = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            host["step_time"] = dt
+            self.metrics_history.append(host)
+            if self.step % cfg.log_every == 0:
+                log.info("step %d loss %.4f (%.0f ms)",
+                         self.step, host.get("loss", float("nan")),
+                         dt * 1e3)
+
+            want_ckpt = self.ckpt and (
+                self.step % cfg.ckpt_every == 0
+                or self.step == cfg.total_steps
+                or self._preempted)
+            if want_ckpt:
+                self._save(blocking=self._preempted
+                           or self.step == cfg.total_steps)
+            if self._preempted:
+                log.warning("preemption checkpoint at step %d", self.step)
+                break
+            if cfg.fail_at_step is not None and self.step == cfg.fail_at_step:
+                raise InjectedFailure(f"injected failure at {self.step}")
+        if self.ckpt:
+            self.ckpt.wait()
+        return {
+            "params": self.params,
+            "opt_state": self.opt_state,
+            "step": self.step,
+            "metrics": self.metrics_history,
+            "straggler_events": self.detector.events,
+        }
+
+    def _save(self, blocking: bool) -> None:
+        self.ckpt.save(
+            self.step,
+            {"params": self.params, "opt": self.opt_state},
+            extra={"step": self.step},
+            blocking=blocking or not self.config.async_ckpt)

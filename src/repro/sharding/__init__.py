@@ -1,0 +1,217 @@
+"""Logical-axis sharding rules (GSPMD / pjit distribution layer).
+
+Every parameter and activation in the framework is annotated with *logical*
+axis names ("embed", "heads", "ffn", ...). A :class:`Rules` table maps
+logical names to physical mesh axes; :func:`logical_spec` resolves a tuple
+of logical names into a ``PartitionSpec``. This indirection is what lets
+one model definition run on the single-pod (data=16, model=16) mesh, the
+multi-pod (pod=2, data=16, model=16) mesh, smoke-test meshes, and a single
+CPU device without touching model code — the MaxText/"logical axis rules"
+pattern.
+
+Default physical mapping (see DESIGN.md §5):
+
+===============  =======================  =====================================
+logical axis     physical axes            carried by
+===============  =======================  =====================================
+batch            ("pod", "data")          activations' batch dim (DP)
+fsdp             ("pod", "data")          params' d_model dim (ZeRO-3 / FSDP)
+vocab            "model"                  embedding + logits (TP)
+heads            "model"                  q heads (TP) — if divisible
+kv_heads         "model"                  kv heads (TP) — if divisible
+head_dim         None | "model"           per-arch: "head_dim" shard mode
+ffn              "model"                  MLP hidden (TP)
+experts          "model"                  MoE experts (EP)
+d_inner          "model"                  Mamba inner dim (TP)
+seq              None                     sequence (dense compute)
+seq_sp           "model"                  sequence-parallel residual stream
+state_k/state_v  None                     the paper's k×k state dims (tiny)
+===============  =======================  =====================================
+
+All rules degrade gracefully: a physical axis absent from the mesh resolves
+to ``None`` (replicated), and a logical dim whose size does not divide the
+mesh axis falls back to replicated rather than failing to compile.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),
+    "vocab": "model",
+    "heads": "model",            # flattened h*dh projection dims (params)
+    "kv_heads_flat": "model",    # flattened hkv*dh projection dims
+    "kv_heads": "model",         # activation Hkv dim (uneven allowed)
+    "kv_heads_state": "model",   # decode-state Hkv dim (MUST divide —
+                                 # jit argument shardings cannot pad; the
+                                 # divisibility fallback drops to None and
+                                 # head_dim_state takes the model axis)
+    "group": "model",            # activation GQA group dim (uneven allowed)
+    "heads_lin": "model",        # linear-backend flat head dim (uneven ok)
+    "heads_state": "model",      # matrix-state head dim (must divide)
+    "head_dim": None,
+    "head_dim_state": "model",   # KV-cache head_dim (decode fallback TP)
+    "ffn": "model",
+    "experts": "model",
+    "d_inner": "model",
+    "conv_dim": "model",
+    "seq": None,
+    "seq_sp": "model",
+    "state_k": None,
+    "state_v": None,
+    "embed": None,        # activations' d_model dim (replicated; TP is on
+                          # the contracting param dims)
+    "layers": None,       # stacked scan-over-layers leading dim
+    "img_tokens": None,
+}
+
+# Logical axes that may shard unevenly (GSPMD pads): activation head dims
+# where the head count need not divide the mesh — e.g. 8 kv heads on a
+# 16-way model axis run at 2× attention-core waste rather than 16×
+# replication. Parameter dims are never allowed to shard unevenly.
+UNEVEN_OK = {"kv_heads", "group", "heads_lin"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Logical→physical axis mapping, specialised to a concrete mesh."""
+
+    table: Dict[str, Axis]
+    mesh_axes: Tuple[str, ...]
+    mesh_shape: Dict[str, int]
+
+    @classmethod
+    def for_mesh(cls, mesh: Mesh, overrides: Optional[Dict[str, Axis]] = None
+                 ) -> "Rules":
+        table = dict(DEFAULT_RULES)
+        if overrides:
+            table.update(overrides)
+        return cls(
+            table=table,
+            mesh_axes=tuple(mesh.axis_names),
+            mesh_shape={a: int(s) for a, s in
+                        zip(mesh.axis_names, mesh.devices.shape)},
+        )
+
+    @classmethod
+    def null(cls) -> "Rules":
+        """Rules for un-meshed (single device) execution: everything
+        replicated. Used by smoke tests and the QA reproduction."""
+        return cls(table={}, mesh_axes=(), mesh_shape={})
+
+    # -- resolution ----------------------------------------------------------
+
+    def axis_size(self, name: str) -> int:
+        return self.mesh_shape.get(name, 1)
+
+    @property
+    def model_size(self) -> int:
+        return self.axis_size("model")
+
+    @property
+    def data_size(self) -> int:
+        return self.axis_size("data") * self.axis_size("pod")
+
+    def _resolve_axis(self, logical: Optional[str], dim_size: Optional[int]
+                      ) -> Axis:
+        if logical is None:
+            return None
+        phys = self.table.get(logical, None)
+        if phys is None:
+            return None
+        if isinstance(phys, str):
+            phys = (phys,)
+        # keep only axes present in the mesh
+        phys = tuple(a for a in phys if a in self.mesh_axes)
+        if not phys:
+            return None
+        if dim_size is not None and logical not in UNEVEN_OK:
+            total = 1
+            for a in phys:
+                total *= self.mesh_shape[a]
+            if dim_size % total != 0:
+                # divisibility fallback: drop axes from the left until the
+                # remaining product divides (pod first, then data).
+                while phys and dim_size % _prod(self.mesh_shape, phys) != 0:
+                    phys = phys[1:]
+                if not phys:
+                    return None
+        return phys if len(phys) > 1 else phys[0]
+
+    def spec(self, *logical: Optional[str],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """Resolve logical names (one per array dim) to a PartitionSpec.
+
+        ``shape``, when given, enables the divisibility fallback per dim.
+        """
+        out = []
+        for i, name in enumerate(logical):
+            size = None if shape is None else shape[i]
+            out.append(self._resolve_axis(name, size))
+        # PartitionSpec forbids using one mesh axis twice; detect + drop.
+        seen = set()
+        cleaned = []
+        for ax in out:
+            axes = (ax,) if isinstance(ax, str) else (ax or ())
+            if any(a in seen for a in axes):
+                cleaned.append(None)
+                continue
+            seen.update(axes)
+            cleaned.append(ax)
+        return P(*cleaned)
+
+    def sharding(self, mesh: Mesh, *logical: Optional[str],
+                 shape: Optional[Sequence[int]] = None) -> NamedSharding:
+        return NamedSharding(mesh, self.spec(*logical, shape=shape))
+
+
+def _prod(shape: Dict[str, int], axes: Tuple[str, ...]) -> int:
+    total = 1
+    for a in axes:
+        total *= shape[a]
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Tree-level helpers
+# ---------------------------------------------------------------------------
+
+def is_logical_spec(x) -> bool:
+    """A tuple of logical axis names (str | None) — NOT a NamedTuple
+    (AttnState etc. are tuples too; they must be descended into)."""
+    return (isinstance(x, tuple) and not hasattr(x, "_fields")
+            and all(e is None or isinstance(e, str) for e in x))
+
+
+def tree_specs(logical_tree, rules: Rules, shape_tree=None):
+    """Map a pytree of logical-name-tuples to a pytree of PartitionSpecs.
+
+    ``logical_tree`` leaves are tuples of logical axis names (or None).
+    ``shape_tree`` (optional, matching structure) provides shapes for the
+    divisibility fallback.
+    """
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda names: rules.spec(*names),
+            logical_tree, is_leaf=is_logical_spec)
+    return jax.tree.map(
+        lambda names, shp: rules.spec(*names, shape=shp),
+        logical_tree, shape_tree, is_leaf=is_logical_spec)
+
+
+def constrain(x, rules: Rules, *logical: Optional[str]):
+    """`with_sharding_constraint` in logical names; no-op off-mesh."""
+    if not rules.mesh_axes:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, rules.spec(*logical, shape=x.shape)
+    )

@@ -1,0 +1,18 @@
+import jax
+import pytest
+
+# Tests run on the default single CPU device; the 512-device dry-run
+# environment is exercised ONLY by repro.launch.dryrun (per the
+# assignment, smoke tests must see 1 device).
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def requires_multi_device():
+    return pytest.mark.skipif(
+        jax.device_count() < 2, reason="needs >1 device")

@@ -1,0 +1,162 @@
+"""Paper §4: gated linear attention — equivalences, inversion, VJP."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gated import (
+    chunked_gla,
+    gated_decode_step,
+    gated_linear_attention,
+    gla_scan,
+    invert_update,
+    paper_gate,
+    reconstruct_states_backward,
+)
+
+
+def _inputs(key, b=2, h=2, t=48, dk=12, dv=12, scalar=False):
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, h, t, dk))
+    k = jax.random.normal(ks[1], (b, h, t, dk))
+    v = jax.random.normal(ks[2], (b, h, t, dv))
+    gd = 1 if scalar else dk
+    # interior decay, away from the clamp boundary
+    g = -0.05 - 0.6 * jax.nn.sigmoid(jax.random.normal(ks[3], (b, h, t, gd)))
+    return q, k, v, g
+
+
+class TestPaperGate:
+    def test_gate_formula(self, key):
+        """f = σ(Wh + b) ⊙ h verbatim."""
+        h = jax.random.normal(key, (5, 8))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (8, 8))
+        b = jax.random.normal(jax.random.fold_in(key, 2), (8,))
+        f = paper_gate(h, w, b)
+        np.testing.assert_allclose(
+            f, jax.nn.sigmoid(h @ w.T + b) * h, rtol=1e-6, atol=1e-6)
+
+    def test_gate_bounds(self, key):
+        """|f| ≤ |h| elementwise (σ ∈ (0,1)) — gating only attenuates."""
+        h = jax.random.normal(key, (20, 8))
+        w = jnp.eye(8)
+        f = paper_gate(h, w, jnp.zeros(8))
+        assert bool(jnp.all(jnp.abs(f) <= jnp.abs(h) + 1e-7))
+
+
+class TestInversion:
+    def test_invert_single_update(self, key):
+        """Paper §4: C_t = (C_{t+1} − β f fᵀ)/α."""
+        c = jax.random.normal(key, (6, 6))
+        f = jax.random.normal(jax.random.fold_in(key, 1), (6,))
+        c_next = 0.9 * c + 1.1 * jnp.outer(f, f)
+        rec = invert_update(c_next, f, alpha=0.9, beta=1.1)
+        np.testing.assert_allclose(rec, c, rtol=1e-5, atol=1e-5)
+
+    def test_reconstruct_full_trajectory(self, key):
+        """Recover EVERY intermediate C_t from the final state — the
+        paper's storage-free backward pass."""
+        n, kd = 10, 5
+        f_seq = jax.random.normal(key, (n, kd))
+        # forward: C_{t+1} = C_t + f fᵀ
+        cs = [jnp.zeros((kd, kd))]
+        for t in range(n):
+            cs.append(cs[-1] + jnp.outer(f_seq[t], f_seq[t]))
+        rec = reconstruct_states_backward(cs[-1], f_seq)
+        for t in range(n + 1):
+            np.testing.assert_allclose(rec[t], cs[t], rtol=1e-4, atol=1e-4)
+
+
+class TestGLAEquivalence:
+    @pytest.mark.parametrize("chunk", [1, 8, 48])
+    @pytest.mark.parametrize("scalar", [False, True])
+    def test_chunked_matches_scan(self, key, chunk, scalar):
+        q, k, v, g = _inputs(key, scalar=scalar)
+        o1, s1 = gla_scan(q, k, v, g)
+        o2, s2 = chunked_gla(q, k, v, g, chunk_size=chunk)
+        np.testing.assert_allclose(o1, o2, rtol=3e-3, atol=3e-3)
+        np.testing.assert_allclose(s1, s2, rtol=3e-3, atol=3e-3)
+
+    def test_zero_decay_equals_ungated(self, key):
+        """g = 0 (α = 1) reduces to the paper's basic linear attention."""
+        from repro.core.linear_attention import (
+            causal_linear_attention_chunked)
+        q, k, v, _ = _inputs(key)
+        g = jnp.zeros_like(q)
+        o1, s1 = chunked_gla(q, k, v, g, chunk_size=16)
+        o2, s2 = causal_linear_attention_chunked(q, k, v, chunk_size=16)
+        np.testing.assert_allclose(o1, o2, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(s1, s2, rtol=2e-4, atol=2e-4)
+
+    def test_exclusive_rwkv_mode(self, key):
+        """Exclusive + bonus-u (RWKV-6) convention, chunked vs scan."""
+        q, k, v, g = _inputs(key, t=32)
+        u = jax.random.normal(jax.random.fold_in(key, 5), (q.shape[-1],))
+        o1, s1 = gla_scan(q, k, v, g, exclusive=True, u=u)
+        o2, s2 = chunked_gla(q, k, v, g, chunk_size=8, exclusive=True, u=u)
+        np.testing.assert_allclose(o1, o2, rtol=3e-3, atol=3e-3)
+        np.testing.assert_allclose(s1, s2, rtol=3e-3, atol=3e-3)
+
+    def test_state_continuation(self, key):
+        q, k, v, g = _inputs(key, t=32)
+        o_full, s_full = chunked_gla(q, k, v, g, chunk_size=8)
+        _, s1 = chunked_gla(q[:, :, :16], k[:, :, :16], v[:, :, :16],
+                            g[:, :, :16], chunk_size=8)
+        o2, s2 = chunked_gla(q[:, :, 16:], k[:, :, 16:], v[:, :, 16:],
+                             g[:, :, 16:], chunk_size=8, initial_state=s1)
+        np.testing.assert_allclose(o_full[:, :, 16:], o2, rtol=3e-3,
+                                   atol=3e-3)
+        np.testing.assert_allclose(s_full, s2, rtol=3e-3, atol=3e-3)
+
+
+class TestGLAVJP:
+    def test_grads_match_autodiff(self, key):
+        q, k, v, g = _inputs(key)
+        do = jax.random.normal(jax.random.fold_in(key, 9), v.shape)
+
+        def f_custom(q, k, v, g):
+            return (gated_linear_attention(q, k, v, g, chunk_size=16)
+                    * do).sum()
+
+        def f_auto(q, k, v, g):
+            o, _ = chunked_gla(q, k, v, g, chunk_size=16)
+            return (o * do).sum()
+
+        g1 = jax.grad(f_custom, argnums=(0, 1, 2, 3))(q, k, v, g)
+        g2 = jax.grad(f_auto, argnums=(0, 1, 2, 3))(q, k, v, g)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(a, b, rtol=6e-3, atol=6e-3)
+
+    def test_grads_scalar_decay_broadcast(self, key):
+        q, k, v, g = _inputs(key, scalar=True)
+
+        def f_custom(g):
+            return gated_linear_attention(q, k, v, g, chunk_size=16).sum()
+
+        def f_auto(g):
+            return chunked_gla(q, k, v, g, chunk_size=16)[0].sum()
+
+        g1 = jax.grad(f_custom)(g)
+        g2 = jax.grad(f_auto)(g)
+        assert g1.shape == g.shape
+        np.testing.assert_allclose(g1, g2, rtol=6e-3, atol=6e-3)
+
+
+class TestGatedDecode:
+    @pytest.mark.parametrize("exclusive", [False, True])
+    def test_decode_matches_scan(self, key, exclusive):
+        q, k, v, g = _inputs(key, t=12)
+        u = (jax.random.normal(jax.random.fold_in(key, 3), (q.shape[-1],))
+             if exclusive else None)
+        o_full, _ = gla_scan(q, k, v, g, exclusive=exclusive, u=u)
+        b, h, t, dk = q.shape
+        s = jnp.zeros((b, h, dk, v.shape[-1]))
+        outs = []
+        for i in range(t):
+            o, s = gated_decode_step(
+                s, q[:, :, i], k[:, :, i], v[:, :, i], g[:, :, i],
+                exclusive=exclusive, u=u)
+            outs.append(o)
+        np.testing.assert_allclose(
+            o_full, jnp.stack(outs, 2), rtol=1e-3, atol=1e-3)

@@ -1,0 +1,229 @@
+"""E4: the paper's core equivalences and invariants (§3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.linear_attention import (
+    causal_linear_attention,
+    causal_linear_attention_chunked,
+    causal_linear_attention_scan,
+    decode_step,
+    encode_document,
+    encode_document_streaming,
+    lookup,
+    softmax_lookup,
+)
+
+
+def _qkv(key, b=2, h=3, t=64, dk=16, dv=16, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, t, dk), dtype)
+    k = jax.random.normal(ks[1], (b, h, t, dk), dtype)
+    v = jax.random.normal(ks[2], (b, h, t, dv), dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# document / query form (paper §3.1–3.2)
+# ---------------------------------------------------------------------------
+
+class TestDocumentForm:
+    def test_c_equals_hth(self, key):
+        h = jax.random.normal(key, (4, 50, 12))
+        c = encode_document(h)
+        np.testing.assert_allclose(
+            c, jnp.einsum("bnk,bnl->bkl", h, h), rtol=1e-5, atol=1e-5)
+
+    def test_streaming_matches_batch(self, key):
+        """Paper §3.2: the O(k²)-memory recurrence computes the same C."""
+        h = jax.random.normal(key, (2, 37, 8))
+        np.testing.assert_allclose(
+            encode_document_streaming(h), encode_document(h),
+            rtol=1e-4, atol=1e-4)
+
+    def test_lookup_is_cq(self, key):
+        h = jax.random.normal(key, (2, 30, 8))
+        q = jax.random.normal(jax.random.fold_in(key, 1), (2, 8))
+        r = lookup(encode_document(h), q)
+        # R(D,Q) = HᵀH q directly
+        ref = jnp.einsum("bnk,bn->bk", h, jnp.einsum("bnk,bk->bn", h, q))
+        np.testing.assert_allclose(r, ref, rtol=1e-4, atol=1e-4)
+
+    def test_fixed_size_independent_of_n(self, key):
+        """The k×k representation size does not grow with n (the paper's
+        headline property)."""
+        k_dim = 16
+        sizes = []
+        for n in (10, 100, 1000):
+            h = jax.random.normal(key, (1, n, k_dim))
+            c = encode_document(h)
+            sizes.append(c.size)
+        assert sizes[0] == sizes[1] == sizes[2] == k_dim * k_dim
+
+    def test_merge_additivity(self, key):
+        """C of concatenated documents = sum of Cs (shardable encoding)."""
+        h1 = jax.random.normal(key, (2, 20, 8))
+        h2 = jax.random.normal(jax.random.fold_in(key, 1), (2, 30, 8))
+        c_cat = encode_document(jnp.concatenate([h1, h2], axis=1))
+        np.testing.assert_allclose(
+            c_cat, encode_document(h1) + encode_document(h2),
+            rtol=1e-4, atol=1e-4)
+
+    def test_multi_query_lookup(self, key):
+        h = jax.random.normal(key, (2, 25, 8))
+        qs = jax.random.normal(jax.random.fold_in(key, 1), (2, 5, 8))
+        c = encode_document(h)
+        batched = lookup(c, qs)
+        for m in range(5):
+            np.testing.assert_allclose(
+                batched[:, m], lookup(c, qs[:, m]), rtol=1e-5, atol=1e-5)
+
+    def test_softmax_lookup_shape(self, key):
+        h = jax.random.normal(key, (2, 25, 8))
+        q = jax.random.normal(jax.random.fold_in(key, 1), (2, 8))
+        assert softmax_lookup(h, q).shape == (2, 8)
+
+
+# ---------------------------------------------------------------------------
+# causal form: scan ≡ chunked ≡ quadratic
+# ---------------------------------------------------------------------------
+
+class TestCausalEquivalence:
+    @pytest.mark.parametrize("chunk", [1, 8, 16, 64])
+    def test_chunked_matches_scan(self, key, chunk):
+        q, k, v = _qkv(key)
+        o1, s1 = causal_linear_attention_scan(q, k, v)
+        o2, s2 = causal_linear_attention_chunked(q, k, v, chunk_size=chunk)
+        np.testing.assert_allclose(o1, o2, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(s1, s2, rtol=2e-4, atol=2e-4)
+
+    def test_chunked_matches_scan_normalized(self, key):
+        q, k, v = _qkv(key)
+        q, k = jax.nn.elu(q) + 1, jax.nn.elu(k) + 1
+        o1, _ = causal_linear_attention_scan(q, k, v, normalize=True)
+        o2, _ = causal_linear_attention_chunked(
+            q, k, v, chunk_size=16, normalize=True)
+        np.testing.assert_allclose(o1, o2, rtol=2e-4, atol=2e-4)
+
+    def test_quadratic_direct_form(self, key):
+        """o_t = Σ_{s≤t}(q_t·k_s)v_s — the definition, O(T²) memory."""
+        q, k, v = _qkv(key, t=32)
+        mask = jnp.tril(jnp.ones((32, 32)))
+        scores = jnp.einsum("bhtk,bhsk->bhts", q, k) * mask
+        ref = jnp.einsum("bhts,bhsv->bhtv", scores, v)
+        o, _ = causal_linear_attention_chunked(q, k, v, chunk_size=8)
+        np.testing.assert_allclose(o, ref, rtol=2e-4, atol=2e-4)
+
+    def test_initial_state_continuation(self, key):
+        """Splitting a sequence and carrying S is exact — the paper's
+        streaming/prefill-decode property."""
+        q, k, v = _qkv(key, t=64)
+        o_full, s_full = causal_linear_attention_chunked(
+            q, k, v, chunk_size=16)
+        o1, s1 = causal_linear_attention_chunked(
+            q[:, :, :32], k[:, :, :32], v[:, :, :32], chunk_size=16)
+        o2, s2 = causal_linear_attention_chunked(
+            q[:, :, 32:], k[:, :, 32:], v[:, :, 32:], chunk_size=16,
+            initial_state=s1)
+        np.testing.assert_allclose(o_full[:, :, :32], o1, rtol=2e-4,
+                                   atol=2e-4)
+        np.testing.assert_allclose(o_full[:, :, 32:], o2, rtol=2e-4,
+                                   atol=2e-4)
+        np.testing.assert_allclose(s_full, s2, rtol=2e-4, atol=2e-4)
+
+    def test_causality(self, key):
+        """Output at position t is unaffected by future-token edits."""
+        q, k, v = _qkv(key, t=32)
+        o1, _ = causal_linear_attention_chunked(q, k, v, chunk_size=8)
+        k2 = k.at[:, :, 20:].set(99.0)
+        v2 = v.at[:, :, 20:].set(-99.0)
+        o2, _ = causal_linear_attention_chunked(q, k2, v2, chunk_size=8)
+        np.testing.assert_allclose(o1[:, :, :20], o2[:, :, :20],
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# paper §3.3: memory-efficient backward
+# ---------------------------------------------------------------------------
+
+class TestMemoryEfficientVJP:
+    def test_grads_match_autodiff(self, key):
+        q, k, v = _qkv(key)
+        do = jax.random.normal(jax.random.fold_in(key, 9), v.shape)
+
+        def loss_custom(q, k, v):
+            return (causal_linear_attention(q, k, v, chunk_size=16)
+                    * do).sum()
+
+        def loss_auto(q, k, v):
+            o, _ = causal_linear_attention_chunked(q, k, v, chunk_size=16)
+            return (o * do).sum()
+
+        g1 = jax.grad(loss_custom, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(loss_auto, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+
+    def test_paper_gradient_identity(self, key):
+        """∇h_t = q (h_tᵀ ∇c_t) + ∇c_t (h_tᵀ q) — eq. of §3.3, tied case."""
+        n, kd = 12, 6
+        h = jax.random.normal(key, (n, kd))
+        q = jax.random.normal(jax.random.fold_in(key, 1), (kd,))
+        dc = jax.random.normal(jax.random.fold_in(key, 2), (kd,))
+
+        # loss = dc · Σ_t h_t (h_t·q)  (sum of c_t = C q contributions)
+        def loss(h):
+            return jnp.einsum("k,nk,n->", dc, h, h @ q)
+
+        grad = jax.grad(loss)(h)
+        manual = (q[None, :] * (h @ dc)[:, None]
+                  + dc[None, :] * (h @ q)[:, None])
+        np.testing.assert_allclose(grad, manual, rtol=1e-5, atol=1e-5)
+
+    def test_normalized_wrapper_grads(self, key):
+        q, k, v = _qkv(key, t=32)
+        q, k = jax.nn.elu(q) + 1, jax.nn.elu(k) + 1
+
+        def f(q, k, v):
+            return causal_linear_attention(
+                q, k, v, chunk_size=8, normalize=True).sum()
+
+        def g(q, k, v):
+            o, _ = causal_linear_attention_chunked(
+                q, k, v, chunk_size=8, normalize=True)
+            return o.sum()
+
+        g1 = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(g, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(a, b, rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# decode (the paper's fast lookup)
+# ---------------------------------------------------------------------------
+
+class TestDecode:
+    def test_decode_matches_full(self, key):
+        q, k, v = _qkv(key, t=16)
+        o_full, _ = causal_linear_attention_scan(q, k, v)
+        b, h, t, dk = q.shape
+        s = jnp.zeros((b, h, dk, v.shape[-1]))
+        outs = []
+        for i in range(t):
+            o, s, _ = decode_step(s, q[:, :, i], k[:, :, i], v[:, :, i])
+            outs.append(o)
+        o_dec = jnp.stack(outs, axis=2)
+        np.testing.assert_allclose(o_full, o_dec, rtol=2e-4, atol=2e-4)
+
+    def test_decode_state_is_fixed_size(self, key):
+        """State size after 1 token == after 100 tokens (O(1) in n)."""
+        b, h, dk, dv = 1, 2, 8, 8
+        s = jnp.zeros((b, h, dk, dv))
+        nbytes0 = s.nbytes
+        for i in range(100):
+            kk = jax.random.normal(jax.random.fold_in(key, i), (b, h, dk))
+            _, s, _ = decode_step(s, kk, kk, kk)
+        assert s.nbytes == nbytes0

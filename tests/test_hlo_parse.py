@@ -1,0 +1,94 @@
+"""HLO analyzer: trip counts, collectives, dot FLOPs on synthetic text."""
+
+import numpy as np
+
+from repro.launch.hlo import analyze_module, parse_collectives
+from repro.launch.roofline import RooflineTerms
+
+MODULE = """\
+HloModule jit_step, num_partitions=8
+
+%region_body.1 (arg.0: (s32[], f32[16,32])) -> (s32[], f32[16,32]) {
+  %arg.0 = (s32[], f32[16,32]{1,0}) parameter(0)
+  %gte.0 = s32[] get-tuple-element(%arg.0), index=0
+  %c1 = s32[] constant(1)
+  %add.0 = s32[] add(%gte.0, %c1)
+  %gte.1 = f32[16,32]{1,0} get-tuple-element(%arg.0), index=1
+  %p.0 = f32[32,32]{1,0} parameter(1)
+  %dot.0 = f32[16,32]{1,0} dot(%gte.1, %p.0), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar.0 = f32[16,32]{1,0} all-reduce(%dot.0), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%sum
+  ROOT %tuple.0 = (s32[], f32[16,32]{1,0}) tuple(%add.0, %ar.0)
+}
+
+%region_cond.2 (arg.1: (s32[], f32[16,32])) -> pred[] {
+  %arg.1 = (s32[], f32[16,32]{1,0}) parameter(0)
+  %gte.2 = s32[] get-tuple-element(%arg.1), index=0
+  %c10 = s32[] constant(10)
+  ROOT %lt.0 = pred[] compare(%gte.2, %c10), direction=LT
+}
+
+%sum (a.0: f32[], b.0: f32[]) -> f32[] {
+  %a.0 = f32[] parameter(0)
+  %b.0 = f32[] parameter(1)
+  ROOT %add.1 = f32[] add(%a.0, %b.0)
+}
+
+ENTRY %main.3 (x.0: f32[16,32]) -> f32[16,32] {
+  %x.0 = f32[16,32]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %t.0 = (s32[], f32[16,32]{1,0}) tuple(%c0, %x.0)
+  %w.0 = (s32[], f32[16,32]{1,0}) while(%t.0), condition=%region_cond.2, body=%region_body.1
+  %gte.3 = f32[16,32]{1,0} get-tuple-element(%w.0), index=1
+  %ag.0 = f32[64,32]{1,0} all-gather(%gte.3), channel_id=2, replica_groups=[2,4]<=[8], dimensions={0}
+  %slice.0 = f32[16,32]{1,0} slice(%ag.0), slice={[0:16], [0:32]}
+  ROOT %dot.1 = f32[16,32]{1,0} dot(%slice.0, %x.0), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+}
+"""
+
+
+class TestTripCounts:
+    def test_while_body_multiplied(self):
+        an = analyze_module(MODULE)
+        # body dot: 2*16*32*32 flops × 10 trips; entry dot: 2*16*32*32 ×1
+        body = 2 * 16 * 32 * 32
+        assert an.dot_flops == body * 10 + body
+
+    def test_collectives_multiplied(self):
+        an = parse_collectives(MODULE)
+        kinds = an.collective_by_kind()
+        # all-reduce inside loop: 16*32*4 bytes, S=4 → wire 2·b·(3/4) ×10
+        ar = 16 * 32 * 4
+        np.testing.assert_allclose(kinds["all-reduce"],
+                                   2 * ar * 0.75 * 10)
+        # all-gather once: result 64*32*4, S=4 → (3/4)·result
+        ag = 64 * 32 * 4
+        np.testing.assert_allclose(kinds["all-gather"], ag * 0.75)
+
+    def test_counts(self):
+        an = parse_collectives(MODULE)
+        assert an.collective_count() == 11  # 10 ar + 1 ag
+
+
+class TestRooflineTerms:
+    def test_bottleneck_selection(self):
+        t = RooflineTerms(flops_per_device=197e12,        # 1 s compute
+                          hbm_bytes_per_device=819e9 / 2,  # 0.5 s memory
+                          wire_bytes_per_device=100e9 * 2,  # 2 s collective
+                          n_devices=256)
+        assert t.bottleneck == "collective"
+        np.testing.assert_allclose(t.t_bound, 2.0)
+
+    def test_mfu_bound(self):
+        t = RooflineTerms(flops_per_device=197e12,
+                          hbm_bytes_per_device=0.0,
+                          wire_bytes_per_device=0.0, n_devices=2,
+                          model_flops_global=2 * 197e12)
+        np.testing.assert_allclose(t.mfu_bound, 1.0)
+
+    def test_pallas_adjustment(self):
+        t = RooflineTerms(flops_per_device=1.0,
+                          hbm_bytes_per_device=819e9,
+                          score_bytes_per_device=819e9 / 2,
+                          wire_bytes_per_device=0.0, n_devices=1)
+        np.testing.assert_allclose(t.t_memory, 1.0)
+        np.testing.assert_allclose(t.t_memory_pallas, 0.5)

@@ -1,0 +1,204 @@
+"""E5: Pallas kernels vs pure-jnp oracles — shape/dtype sweeps under
+interpret=True (the CPU validation mode; TPU is the deployment target)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import kernel as flash_k
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.gated_linear_attention import kernel as gla_k
+from repro.kernels.gated_linear_attention.ref import (
+    gated_linear_attention_ref)
+from repro.kernels.linear_attention import kernel as lin_k
+from repro.kernels.linear_attention import ops as lin_ops
+from repro.kernels.linear_attention.ref import (
+    linear_attention_grads_ref, linear_attention_ref)
+from repro.kernels.lookup import kernel as lu_k
+from repro.kernels.lookup.ref import decode_ref, mass_lookup_ref
+
+
+def _data(key, bh, t, dk, dv, dtype):
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (bh, t, dk)).astype(dtype)
+    k = jax.random.normal(ks[1], (bh, t, dk)).astype(dtype)
+    v = jax.random.normal(ks[2], (bh, t, dv)).astype(dtype)
+    do = jax.random.normal(ks[3], (bh, t, dv)).astype(dtype)
+    return q, k, v, do
+
+
+SHAPES = [(2, 128, 64, 64), (4, 256, 64, 64), (1, 256, 128, 128),
+          (3, 512, 32, 32)]
+
+
+class TestLinearAttentionKernel:
+    @pytest.mark.parametrize("bh,t,dk,dv", SHAPES)
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_fwd(self, key, bh, t, dk, dv, dtype):
+        q, k, v, _ = _data(key, bh, t, dk, dv, dtype)
+        chunk = min(128, t)
+        o, s = lin_k.fwd(q, k, v, chunk=chunk, interpret=True)
+        o_ref, s_ref = linear_attention_ref(q, k, v)
+        tol = 1e-3 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(
+            o.astype(jnp.float32), o_ref.astype(jnp.float32),
+            rtol=tol, atol=tol * 10)
+        np.testing.assert_allclose(s, s_ref, rtol=tol, atol=tol * 10)
+
+    @pytest.mark.parametrize("bh,t,dk,dv", SHAPES[:2])
+    def test_bwd(self, key, bh, t, dk, dv):
+        q, k, v, do = _data(key, bh, t, dk, dv, jnp.float32)
+        chunk = min(128, t)
+        dq, dk_, dv_ = lin_k.bwd(q, k, v, do, chunk=chunk, interpret=True)
+        rq, rk, rv = linear_attention_grads_ref(q, k, v, do)
+        np.testing.assert_allclose(dq, rq, rtol=1e-2, atol=1e-2)
+        np.testing.assert_allclose(dk_, rk, rtol=1e-2, atol=1e-2)
+        np.testing.assert_allclose(dv_, rv, rtol=1e-2, atol=1e-2)
+
+    def test_ops_wrapper_grad(self, key):
+        """ops.linear_attention end-to-end with custom VJP vs autodiff
+        through the reference."""
+        b, h, t, d = 2, 2, 128, 64
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, h, t, d))
+        k = jax.random.normal(ks[1], (b, h, t, d))
+        v = jax.random.normal(ks[2], (b, h, t, d))
+
+        def f(q, k, v):
+            return lin_ops.linear_attention(q, k, v, interpret=True).sum()
+
+        def f_ref(q, k, v):
+            o, _ = linear_attention_ref(
+                q.reshape(b * h, t, d), k.reshape(b * h, t, d),
+                v.reshape(b * h, t, d))
+            return o.sum()
+
+        g1 = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b_ in zip(g1, g2):
+            np.testing.assert_allclose(
+                a.reshape(-1), b_.reshape(-1), rtol=2e-2, atol=2e-2)
+
+    def test_state_output(self, key):
+        q, k, v, _ = _data(key, 2, 256, 64, 64, jnp.float32)
+        o, s = lin_ops.linear_attention_with_state(
+            q.reshape(2, 1, 256, 64), k.reshape(2, 1, 256, 64),
+            v.reshape(2, 1, 256, 64), interpret=True)
+        _, s_ref = linear_attention_ref(q, k, v)
+        np.testing.assert_allclose(
+            s.reshape(2, 64, 64), s_ref, rtol=1e-3, atol=1e-3)
+
+
+class TestGatedKernel:
+    @pytest.mark.parametrize("bh,t,dk,dv", SHAPES[:3])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_fwd_inclusive(self, key, bh, t, dk, dv, dtype):
+        q, k, v, _ = _data(key, bh, t, dk, dv, dtype)
+        g = (-0.05 - 0.5 * jax.nn.sigmoid(
+            jax.random.normal(jax.random.fold_in(key, 7), (bh, t, dk)))
+        ).astype(jnp.float32)
+        chunk = min(128, t)
+        o, s = gla_k.fwd(q, k, v, g, chunk=chunk, interpret=True)
+        o_ref, s_ref = gated_linear_attention_ref(
+            q, k, v, jnp.clip(g, -1.0, 0.0))
+        tol = 5e-3 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(
+            o.astype(jnp.float32), o_ref.astype(jnp.float32),
+            rtol=tol, atol=tol * 10)
+        np.testing.assert_allclose(s, s_ref, rtol=tol, atol=tol * 10)
+
+    def test_fwd_exclusive_bonus(self, key):
+        """RWKV-6 convention with the bonus-u diagonal."""
+        bh, t, dk = 2, 128, 64
+        q, k, v, _ = _data(key, bh, t, dk, dk, jnp.float32)
+        g = -0.1 - 0.4 * jax.nn.sigmoid(
+            jax.random.normal(jax.random.fold_in(key, 3), (bh, t, dk)))
+        u = jax.random.normal(jax.random.fold_in(key, 4), (dk,))
+        o, s = gla_k.fwd(q, k, v, g, u=u, chunk=64, exclusive=True,
+                         interpret=True)
+        o_ref, s_ref = gated_linear_attention_ref(
+            q, k, v, jnp.clip(g, -1.0, 0.0), exclusive=True, u=u)
+        np.testing.assert_allclose(o, o_ref, rtol=5e-3, atol=5e-2)
+        np.testing.assert_allclose(s, s_ref, rtol=5e-3, atol=5e-2)
+
+    def test_bwd(self, key):
+        bh, t, dk = 2, 128, 64
+        q, k, v, do = _data(key, bh, t, dk, dk, jnp.float32)
+        g = -0.05 - 0.5 * jax.nn.sigmoid(
+            jax.random.normal(jax.random.fold_in(key, 7), (bh, t, dk)))
+        dq, dk_, dv_, dg = gla_k.bwd(q, k, v, g, do, chunk=64,
+                                     interpret=True)
+
+        def f(q, k, v, g):
+            o, _ = gated_linear_attention_ref(q, k, v,
+                                              jnp.clip(g, -1.0, 0.0))
+            return (o * do).sum()
+
+        rq, rk, rv, rg = jax.grad(f, argnums=(0, 1, 2, 3))(q, k, v, g)
+        np.testing.assert_allclose(dq, rq, rtol=1e-2, atol=1e-2)
+        np.testing.assert_allclose(dk_, rk, rtol=1e-2, atol=1e-2)
+        np.testing.assert_allclose(dv_, rv, rtol=1e-2, atol=1e-2)
+        np.testing.assert_allclose(dg, rg, rtol=2e-2, atol=2e-2)
+
+
+class TestFlashKernel:
+    @pytest.mark.parametrize("bh,t,d", [(2, 256, 64), (1, 512, 128),
+                                        (4, 128, 64)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_fwd(self, key, bh, t, d, dtype):
+        q, k, v, _ = _data(key, bh, t, d, d, dtype)
+        o = flash_k.fwd(q, k, v, cq=128, ckv=128, interpret=True)
+        o_ref = flash_attention_ref(q, k, v)
+        tol = 1e-3 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(
+            o.astype(jnp.float32), o_ref.astype(jnp.float32),
+            rtol=tol, atol=tol * 10)
+
+    def test_prefill_offset(self, key):
+        """Queries are the last T of S keys (decode/prefill alignment)."""
+        bh, t, s, d = 2, 128, 256, 64
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (bh, t, d))
+        k = jax.random.normal(ks[1], (bh, s, d))
+        v = jax.random.normal(ks[2], (bh, s, d))
+        o = flash_k.fwd(q, k, v, cq=128, ckv=128, interpret=True)
+        o_ref = flash_attention_ref(q, k, v)
+        np.testing.assert_allclose(o, o_ref, rtol=1e-3, atol=1e-3)
+
+
+class TestLookupKernel:
+    @pytest.mark.parametrize("n,m,kd", [(3, 8, 64), (2, 128, 128),
+                                        (1, 1, 256)])
+    def test_mass_lookup(self, key, n, m, kd):
+        c = jax.random.normal(key, (n, kd, kd))
+        q = jax.random.normal(jax.random.fold_in(key, 1), (n, m, kd))
+        out = lu_k.mass_lookup(c, q, interpret=True)
+        np.testing.assert_allclose(out, mass_lookup_ref(c, q),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("n,dk,dv", [(4, 64, 64), (2, 128, 128)])
+    def test_fused_decode(self, key, n, dk, dv):
+        ks = jax.random.split(key, 4)
+        s = jax.random.normal(ks[0], (n, dk, dv))
+        q = jax.random.normal(ks[1], (n, dk))
+        k = jax.random.normal(ks[2], (n, dk))
+        v = jax.random.normal(ks[3], (n, dv))
+        o, s_new = lu_k.decode(s, q, k, v, interpret=True)
+        o_ref, s_ref = decode_ref(s, q, k, v)
+        np.testing.assert_allclose(o, o_ref, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(s_new, s_ref, rtol=1e-4, atol=1e-4)
+
+    def test_decode_chain(self, key):
+        """Chained fused decodes == scan reference (paper's generation)."""
+        n, d = 2, 64
+        s = jnp.zeros((n, d, d))
+        s_ref = jnp.zeros((n, d, d))
+        for i in range(5):
+            ks = jax.random.split(jax.random.fold_in(key, i), 3)
+            q = jax.random.normal(ks[0], (n, d))
+            k = jax.random.normal(ks[1], (n, d))
+            v = jax.random.normal(ks[2], (n, d))
+            o, s = lu_k.decode(s, q, k, v, interpret=True)
+            o_r, s_ref = decode_ref(s_ref, q, k, v)
+            np.testing.assert_allclose(o, o_r, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,196 @@
+"""Per-arch smoke tests + model-level invariants.
+
+Every assigned architecture instantiates a REDUCED config and runs one
+forward/train step on CPU, asserting output shapes and finiteness (the
+assignment's smoke contract). Backend switching and prefill↔decode
+consistency validate the paper's technique inside full models.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, get_smoke_config, \
+    list_architectures
+from repro.models import lm
+from repro.models.moe import moe_apply, moe_dense_oracle, moe_params
+from repro.sharding import Rules
+
+RULES = Rules.null()
+ARCHS = list_architectures()
+
+
+def _batch(key, cfg, b=2, t=32):
+    tokens = jax.random.randint(key, (b, t), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.n_img_tokens:
+        batch["memory"] = jax.random.normal(
+            key, (b, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+class TestArchSmoke:
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_forward_shapes_finite(self, key, arch):
+        cfg = get_smoke_config(arch)
+        params = lm.init_params(key, cfg)
+        batch = _batch(key, cfg)
+        logits, aux, _ = lm.forward(
+            params, batch["tokens"], cfg, RULES,
+            memory=batch.get("memory"))
+        assert logits.shape == (2, 32, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+        assert bool(jnp.isfinite(aux))
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_train_step(self, key, arch):
+        """One optimizer step decreases nothing catastrophically and
+        produces finite grads for every parameter."""
+        from repro.optim import adamw
+        cfg = get_smoke_config(arch)
+        params = lm.init_params(key, cfg)
+        batch = _batch(key, cfg)
+        opt = adamw(1e-3)
+        opt_state = opt.init(params)
+
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: lm.lm_loss(p, batch, cfg, RULES), has_aux=True
+        )(params)
+        assert bool(jnp.isfinite(loss))
+        for g in jax.tree.leaves(grads):
+            assert bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+        new_params, _ = opt.update(grads, opt_state, params)
+        # params actually moved
+        moved = any(
+            float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                  - b.astype(jnp.float32)))) > 0
+            for a, b in zip(jax.tree.leaves(new_params),
+                            jax.tree.leaves(params)))
+        assert moved
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_decode_step(self, key, arch):
+        cfg = get_smoke_config(arch)
+        params = lm.init_params(key, cfg)
+        state = lm.init_decode_state(cfg, batch=2, max_len=16)
+        logits, new_state = lm.decode_step(
+            params, state, jnp.zeros((2,), jnp.int32), jnp.int32(0),
+            cfg, RULES)
+        assert logits.shape == (2, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_full_config_matches_assignment(self, arch):
+        """The FULL configs (exercised via dry-run only) carry the exact
+        assigned hyperparameters."""
+        cfg = get_config(arch)
+        expected = {
+            "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+            "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+            "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+            "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+            "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+            "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+            "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+            "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+            "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+            "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+        }[arch]
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == expected
+        # pattern accounting adds up to n_layers
+        assert cfg.total_blocks == cfg.n_layers
+
+    def test_moe_expert_counts(self):
+        c = get_config("deepseek-moe-16b").moe
+        assert (c.n_experts, c.top_k, c.n_shared) == (64, 6, 2)
+        c = get_config("qwen3-moe-235b-a22b").moe
+        assert (c.n_experts, c.top_k, c.n_shared) == (128, 8, 0)
+
+
+class TestBackendSwitching:
+    """The paper's ablation at framework scale: every attention layer
+    accepts softmax | linear | gated_linear."""
+
+    @pytest.mark.parametrize("backend",
+                             ["softmax", "linear", "gated_linear"])
+    def test_yi_backends(self, key, backend):
+        cfg = get_smoke_config("yi-34b").with_backend(backend)
+        params = lm.init_params(key, cfg)
+        batch = _batch(key, cfg)
+        loss, _ = lm.lm_loss(params, batch, cfg, RULES)
+        assert bool(jnp.isfinite(loss))
+
+    def test_linear_state_is_fixed_size(self, key):
+        """Decode state under the linear backend is O(1) in max_len —
+        the paper's property; softmax KV cache is O(max_len)."""
+        cfg_l = get_smoke_config("yi-34b").with_backend("linear")
+        cfg_s = get_smoke_config("yi-34b")
+        small = lm.init_decode_state(cfg_l, 2, max_len=8)
+        large = lm.init_decode_state(cfg_l, 2, max_len=4096)
+        nbytes = lambda t: sum(  # noqa: E731
+            x.nbytes for x in jax.tree.leaves(t))
+        assert nbytes(small) == nbytes(large)
+        kv_small = lm.init_decode_state(cfg_s, 2, max_len=8)
+        kv_large = lm.init_decode_state(cfg_s, 2, max_len=4096)
+        assert nbytes(kv_large) > 100 * nbytes(kv_small)
+
+
+class TestPrefillDecodeConsistency:
+    @pytest.mark.parametrize("arch,backend", [
+        ("yi-34b", "linear"),
+        ("yi-34b", "gated_linear"),
+        ("yi-34b", "softmax"),
+        ("rwkv6-1.6b", "gated_linear"),
+        ("zamba2-7b", "gated_linear"),
+    ])
+    def test_decode_continues_prefill(self, key, arch, backend):
+        """logits(decode(prefill(x[:t]), x[t])) ≈ logits(forward(x)[t]) —
+        the encode-once/query-cheap contract of the paper, end to end."""
+        cfg = get_smoke_config(arch).with_backend(backend)
+        params = lm.init_params(key, cfg)
+        b, t = 2, 17
+        tokens = jax.random.randint(key, (b, t), 0, cfg.vocab_size)
+
+        logits_full, _, _ = lm.forward(params, tokens, cfg, RULES)
+
+        last, states = lm.prefill(params, tokens[:, :t - 1], cfg, RULES)
+        states = lm.pad_decode_state(states, cfg, max_len=t + 4)
+        logits_dec, _ = lm.decode_step(
+            params, states, tokens[:, t - 1], jnp.int32(t - 1), cfg,
+            RULES)
+        np.testing.assert_allclose(
+            logits_dec.astype(jnp.float32),
+            logits_full[:, -1].astype(jnp.float32), rtol=0.15, atol=0.15)
+        # prefill's own last-position logits equal forward at t-2
+        np.testing.assert_allclose(
+            last.astype(jnp.float32),
+            logits_full[:, -2].astype(jnp.float32), rtol=0.15, atol=0.15)
+
+
+class TestMoE:
+    def test_dispatch_matches_dense_oracle(self, key):
+        """Sort-based capacity dispatch == run-every-expert oracle when
+        capacity is high enough that nothing drops."""
+        cfg = get_smoke_config("deepseek-moe-16b")
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+        p = moe_params(key, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (2, 16,
+                                                           cfg.d_model))
+        out, aux = moe_apply(p, x, cfg, RULES)
+        ref = moe_dense_oracle(p, x, cfg)
+        np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+        assert float(aux) > 0.5  # load-balance loss near 1 when uniform
+
+    def test_capacity_drops_bounded(self, key):
+        """With capacity 1.0 the output stays finite and within range."""
+        cfg = get_smoke_config("deepseek-moe-16b")
+        p = moe_params(key, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.fold_in(key, 2), (4, 8,
+                                                           cfg.d_model))
+        out, _ = moe_apply(p, x, cfg, RULES)
+        assert bool(jnp.all(jnp.isfinite(out)))

@@ -1,0 +1,126 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gated import chunked_gla, gla_scan
+from repro.core.linear_attention import (
+    causal_linear_attention_chunked, causal_linear_attention_scan,
+    encode_document, lookup,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _arr(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+@settings(**SETTINGS)
+@given(n1=st.integers(1, 30), n2=st.integers(1, 30),
+       k=st.integers(1, 16), seed=st.integers(0, 2**16))
+def test_document_state_additivity(n1, n2, k, seed):
+    """C(doc_a ∥ doc_b) == C(doc_a) + C(doc_b) for any split — the
+    shardable-encoding property of C = Σ h hᵀ."""
+    h1 = _arr(seed, (n1, k))
+    h2 = _arr(seed + 1, (n2, k))
+    c_cat = encode_document(jnp.concatenate([h1, h2], 0))
+    np.testing.assert_allclose(
+        c_cat, encode_document(h1) + encode_document(h2),
+        rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 40), k=st.integers(1, 12),
+       a=st.floats(-3, 3), b=st.floats(-3, 3),
+       seed=st.integers(0, 2**16))
+def test_lookup_linearity_in_query(n, k, a, b, seed):
+    """R(D, aq1 + bq2) == a·R(D,q1) + b·R(D,q2) — lookups are linear
+    (the property the paper trades softmax's nonlinearity for)."""
+    h = _arr(seed, (n, k))
+    q1 = _arr(seed + 1, (k,))
+    q2 = _arr(seed + 2, (k,))
+    c = encode_document(h)
+    lhs = lookup(c, a * q1 + b * q2)
+    rhs = a * lookup(c, q1) + b * lookup(c, q2)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(t=st.integers(1, 50), chunk=st.integers(1, 64),
+       seed=st.integers(0, 2**16))
+def test_chunked_equals_scan_any_shape(t, chunk, seed):
+    """chunk-parallel == sequential recurrence for arbitrary (T, chunk),
+    including T % chunk != 0."""
+    q = _arr(seed, (1, 2, t, 8))
+    k = _arr(seed + 1, (1, 2, t, 8))
+    v = _arr(seed + 2, (1, 2, t, 8))
+    o1, s1 = causal_linear_attention_scan(q, k, v)
+    o2, s2 = causal_linear_attention_chunked(q, k, v, chunk_size=chunk)
+    np.testing.assert_allclose(o1, o2, rtol=3e-3, atol=3e-3)
+    np.testing.assert_allclose(s1, s2, rtol=3e-3, atol=3e-3)
+
+
+@settings(**SETTINGS)
+@given(t=st.integers(2, 40), split=st.floats(0.1, 0.9),
+       seed=st.integers(0, 2**16))
+def test_state_carry_is_exact(t, split, seed):
+    """Process a stream in two parts carrying S — identical to one shot
+    (the paper's streaming-C property in untied form)."""
+    cut = max(1, min(t - 1, int(t * split)))
+    q = _arr(seed, (1, 1, t, 6))
+    k = _arr(seed + 1, (1, 1, t, 6))
+    v = _arr(seed + 2, (1, 1, t, 6))
+    o_full, s_full = causal_linear_attention_scan(q, k, v)
+    _, s1 = causal_linear_attention_scan(
+        q[:, :, :cut], k[:, :, :cut], v[:, :, :cut])
+    o2, s2 = causal_linear_attention_scan(
+        q[:, :, cut:], k[:, :, cut:], v[:, :, cut:], initial_state=s1)
+    np.testing.assert_allclose(o_full[:, :, cut:], o2, rtol=3e-3,
+                               atol=3e-3)
+    np.testing.assert_allclose(s_full, s2, rtol=3e-3, atol=3e-3)
+
+
+@settings(**SETTINGS)
+@given(t=st.integers(1, 40), chunk=st.integers(1, 48),
+       scalar=st.booleans(), seed=st.integers(0, 2**16))
+def test_gated_chunked_equals_scan(t, chunk, scalar, seed):
+    q = _arr(seed, (1, 2, t, 6))
+    k = _arr(seed + 1, (1, 2, t, 6))
+    v = _arr(seed + 2, (1, 2, t, 6))
+    gd = 1 if scalar else 6
+    g = -0.05 - 0.5 * jax.nn.sigmoid(_arr(seed + 3, (1, 2, t, gd)))
+    o1, s1 = gla_scan(q, k, v, g)
+    o2, s2 = chunked_gla(q, k, v, g, chunk_size=chunk)
+    np.testing.assert_allclose(o1, o2, rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(s1, s2, rtol=5e-3, atol=5e-3)
+
+
+@settings(**SETTINGS)
+@given(t=st.integers(2, 32), edit=st.integers(1, 31),
+       seed=st.integers(0, 2**16))
+def test_causality_property(t, edit, seed):
+    """No output before position p depends on tokens at/after p."""
+    if edit >= t:
+        edit = t - 1
+    q = _arr(seed, (1, 1, t, 4))
+    k = _arr(seed + 1, (1, 1, t, 4))
+    v = _arr(seed + 2, (1, 1, t, 4))
+    o1, _ = causal_linear_attention_chunked(q, k, v, chunk_size=8)
+    k2 = k.at[:, :, edit:].add(5.0)
+    v2 = v.at[:, :, edit:].add(-5.0)
+    o2, _ = causal_linear_attention_chunked(q, k2, v2, chunk_size=8)
+    np.testing.assert_allclose(o1[:, :, :edit], o2[:, :, :edit],
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 200), seed=st.integers(0, 2**16))
+def test_representation_size_constant(n, seed):
+    """|C| is k² bytes for ANY document length (paper Table 1 row b)."""
+    h = _arr(seed, (n, 8))
+    assert encode_document(h).nbytes == 8 * 8 * 4

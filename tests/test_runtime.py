@@ -1,0 +1,117 @@
+"""Fault tolerance: crash/restart bit-exactness, preemption, stragglers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import SyntheticLMDataset
+from repro.optim import adamw
+from repro.runtime import StragglerDetector, TrainLoop, TrainLoopConfig
+from repro.runtime.train_loop import InjectedFailure
+
+
+def _tiny_setup(key, ckpt_dir=None, total=12, fail_at=None,
+                ckpt_every=4):
+    """A 2-layer MLP LM-ish toy problem with the real loop machinery."""
+    w = {"w1": jax.random.normal(key, (16, 32)) * 0.1,
+         "w2": jax.random.normal(jax.random.fold_in(key, 1),
+                                 (32, 64)) * 0.1}
+    opt = adamw(1e-2)
+    opt_state = opt.init(w)
+    data = SyntheticLMDataset(vocab_size=64, seq_len=8, global_batch=4,
+                              seed=3)
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        def loss_fn(p):
+            x = jax.nn.one_hot(batch["tokens"], 16) @ p["w1"]
+            logits = jnp.tanh(x) @ p["w2"]
+            logp = jax.nn.log_softmax(logits)
+            nll = -jnp.take_along_axis(
+                logp, batch["labels"][..., None], axis=-1).mean()
+            return nll
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss}
+
+    loop = TrainLoop(
+        step_fn, w, opt_state, data,
+        TrainLoopConfig(total_steps=total, ckpt_every=ckpt_every,
+                        ckpt_dir=ckpt_dir, fail_at_step=fail_at,
+                        log_every=100, async_ckpt=False))
+    return loop
+
+
+class TestCrashRestart:
+    def test_resume_is_bit_exact(self, key, tmp_path):
+        """Run A: uninterrupted. Run B: crash at step 8 (after a step-8
+        checkpoint), relaunch, finish. Final params must be IDENTICAL —
+        data order, optimizer moments and step count all restored."""
+        ref = _tiny_setup(key, str(tmp_path / "ref"), total=12).run()
+
+        crashing = _tiny_setup(key, str(tmp_path / "b"), total=12,
+                               fail_at=8, ckpt_every=4)
+        with pytest.raises(InjectedFailure):
+            crashing.run()
+        resumed = _tiny_setup(key, str(tmp_path / "b"), total=12)
+        assert resumed.step == 8  # auto-resumed
+        out = resumed.run()
+
+        for a, b in zip(jax.tree.leaves(ref["params"]),
+                        jax.tree.leaves(out["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert ref["step"] == out["step"] == 12
+
+    def test_preemption_checkpoints_and_stops(self, key, tmp_path):
+        loop = _tiny_setup(key, str(tmp_path / "p"), total=100)
+        orig_fn = loop.step_fn
+        calls = []
+
+        def spy(params, opt_state, batch):
+            calls.append(1)
+            if len(calls) == 3:
+                loop.request_preemption()
+            return orig_fn(params, opt_state, batch)
+
+        loop.step_fn = spy
+        out = loop.run()
+        assert out["step"] == 3  # stopped at the boundary
+        resumed = _tiny_setup(key, str(tmp_path / "p"), total=100)
+        assert resumed.step == 3  # checkpoint was written
+
+    def test_loss_decreases(self, key, tmp_path):
+        out = _tiny_setup(key, None, total=40).run()
+        losses = [m["loss"] for m in out["metrics"]]
+        assert losses[-1] < losses[0]
+
+
+class TestStraggler:
+    def test_flags_slow_steps(self):
+        events = []
+        d = StragglerDetector(threshold=2.0, patience=2, warmup_steps=0,
+                              on_straggler=lambda s, dt, e:
+                              events.append(s))
+        for i in range(10):
+            d.observe(i, 0.1)
+        assert d.events == []
+        d.observe(10, 0.5)          # 5× slower → flagged
+        d.observe(11, 0.5)          # second consecutive → mitigation
+        assert len(d.events) == 2
+        assert events == [11]
+
+    def test_baseline_not_poisoned_by_stragglers(self):
+        d = StragglerDetector(threshold=2.0, warmup_steps=0)
+        for i in range(5):
+            d.observe(i, 0.1)
+        base = d.ewma
+        d.observe(6, 1.0)           # flagged, must NOT raise the EWMA
+        assert d.ewma == base
+
+    def test_warmup_ignored(self):
+        d = StragglerDetector(warmup_steps=2, threshold=2.0)
+        d.observe(0, 60.0)          # compile step
+        d.observe(1, 50.0)
+        d.observe(2, 0.1)
+        d.observe(3, 0.1)
+        assert d.events == []

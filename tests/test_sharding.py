@@ -1,0 +1,94 @@
+"""Logical-axis sharding rules: resolution, fallbacks, tree mapping."""
+
+import jax
+from jax.sharding import PartitionSpec as P
+import pytest
+
+from repro.sharding import DEFAULT_RULES, Rules, is_logical_spec, tree_specs
+
+
+def _rules(pod=0, data=16, model=16):
+    axes = (("pod",) if pod else ()) + ("data", "model")
+    shape = ((pod,) if pod else ()) + (data, model)
+    return Rules(table=dict(DEFAULT_RULES), mesh_axes=axes,
+                 mesh_shape=dict(zip(axes, shape)))
+
+
+class TestResolution:
+    def test_batch_maps_to_pod_data(self):
+        r = _rules(pod=2)
+        assert r.spec("batch", None) == P(("pod", "data"), None)
+
+    def test_single_pod_drops_pod_axis(self):
+        r = _rules()
+        assert r.spec("batch", None) == P("data", None)
+
+    def test_model_axes(self):
+        r = _rules()
+        assert r.spec("vocab", "embed") == P("model", None)
+        assert r.spec("fsdp", "ffn") == P("data", "model")
+
+    def test_unknown_logical_is_replicated(self):
+        r = _rules()
+        assert r.spec("nonexistent", None) == P(None, None)
+
+    def test_divisibility_fallback(self):
+        """A 56-sized dim cannot shard 16 ways → replicated, not crash."""
+        r = _rules()
+        assert r.spec("heads", shape=(56,)) == P(None)
+        assert r.spec("heads", shape=(64,)) == P("model")
+
+    def test_fallback_drops_pod_first(self):
+        """fsdp over (pod=2, data=16): a dim divisible by 16 but not 32
+        keeps the data axis."""
+        r = _rules(pod=2)
+        assert r.spec("fsdp", shape=(48,)) == P("data")
+
+    def test_uneven_ok_axes_skip_check(self):
+        r = _rules()
+        assert r.spec("heads_lin", shape=(56,)) == P("model")
+
+    def test_state_axes_must_divide(self):
+        r = _rules()
+        assert r.spec("kv_heads_state", shape=(8,)) == P(None)
+        assert r.spec("kv_heads_state", shape=(16,)) == P("model")
+
+    def test_duplicate_axis_dropped(self):
+        """One mesh axis cannot shard two dims of the same array."""
+        r = _rules()
+        spec = r.spec("kv_heads_state", "head_dim_state",
+                      shape=(16, 128))
+        assert spec == P("model", None)
+        # first dim non-dividing → second gets the axis
+        spec = r.spec("kv_heads_state", "head_dim_state", shape=(8, 128))
+        assert spec == P(None, "model")
+
+    def test_null_rules_noop(self):
+        r = Rules.null()
+        assert r.spec("batch", "ffn") == P(None, None)
+        assert r.model_size == 1
+
+
+class TestTreeSpecs:
+    def test_named_tuple_descent(self):
+        """NamedTuples (AttnState) are containers, not spec leaves."""
+        from repro.models.attention import AttnState
+        assert not is_logical_spec(AttnState(None, None, ("a",), None))
+        assert is_logical_spec(("batch", None))
+        assert is_logical_spec(())
+        assert not is_logical_spec((("batch",),))
+
+    def test_tree_mapping_with_shapes(self):
+        r = _rules()
+        logical = {"a": ("batch", "ffn"), "b": ("heads",)}
+        shapes = {"a": (256, 1024), "b": (56,)}
+        specs = tree_specs(logical, r, shapes)
+        assert specs["a"] == P("data", "model")
+        assert specs["b"] == P(None)
+
+    def test_constrain_noop_off_mesh(self):
+        import jax.numpy as jnp
+        from repro.sharding import constrain
+        x = jnp.ones((4, 4))
+        y = constrain(x, Rules.null(), "batch", None)
+        assert (x == y).all()
