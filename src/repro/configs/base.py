@@ -69,6 +69,10 @@ class ModelConfig:
     feature_gate: bool = False       # paper §4 gate f = σ(Wh+b)⊙h on k/v
     decay_mode: str = "vector"       # gated_linear: vector|scalar decay
     decay_temp: float = 8.0          # log-decay temperature (slow forget)
+    decode_kernel: str = "auto"      # auto (Pallas on TPU, jnp scan
+    #                                  elsewhere) | fused (always Pallas;
+    #                                  interpret mode off-TPU) | reference
+    #                                  (always the jnp scan recurrence)
     qk_norm: bool = False
     rope: bool = True
     rope_theta: float = 10000.0

@@ -1,0 +1,2 @@
+"""Fused W-step recurrent decode kernels (serving hot path)."""
+from repro.kernels.fused_recurrent import ops, ref  # noqa: F401

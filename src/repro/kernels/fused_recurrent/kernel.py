@@ -1,0 +1,223 @@
+"""Pallas TPU kernels for fused multi-step recurrent decode.
+
+The serving hot path used to dispatch one kernel per generated token and
+round-trip the (Dk, Dv) state through HBM every step. These kernels run
+``W`` decode steps over a block of BH heads in ONE launch:
+
+* grid = (BH // block_bh, W) with the token axis minor, so TPU iterates
+  the W steps sequentially per head-block program — the same
+  sequential-grid carry trick as the chunked prefill kernels, at token
+  granularity;
+* the (block_bh, Dk, Dv) state lives in a VMEM scratch for the whole
+  launch: it is read from HBM once (w == 0) and written back once
+  (w == W−1), so HBM state traffic is O(Dk·Dv) per head per W tokens
+  instead of per token;
+* the HBM state buffer is updated in place via input/output aliasing —
+  the W-step generalisation of the ``kernels/lookup`` decode trick,
+  extended from one head to the full (BH,) extent.
+
+Heads are blocked rather than one-per-program because a decode step is a
+rank-1 update — an M=1 matmul that would waste the 128×128 MXU — so the
+update runs as batched VPU outer-products/reductions over ``block_bh``
+heads at once, and the grid stays small (which also keeps the
+interpret-mode CPU fallback cheap: kernel-body executions scale with
+W · BH/block_bh, not W · BH).
+
+Three variants share the structure:
+
+  ``decode_linear``             S ← S + k vᵀ ;               o = Sᵀ q
+  ``decode_linear`` (normalize) additionally z ← z + k ;     o /= q·z
+  ``decode_gated``              S ← diag(exp(g)) S + k vᵀ ;  o = Sᵀ q
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# VMEM budget for the resident state block; block_bh is chosen so the
+# fp32 (block_bh, Dk, Dv) scratch stays under it (~¼ of a core's VMEM,
+# leaving room for the double-buffered q/k/v/o rows).
+_STATE_VMEM_BYTES = 4 * 2**20
+
+
+def _block_bh(n: int, dk: int, dv: int) -> int:
+    """Largest divisor of n whose state block fits the VMEM budget."""
+    cap = max(1, _STATE_VMEM_BYTES // (dk * dv * 4))
+    b = min(n, cap)
+    while n % b:
+        b -= 1
+    return b
+
+
+def _rank1_update(s, k, v):
+    """Batched rank-1 state update. s: (N, Dk, Dv); k: (N, Dk);
+    v: (N, Dv)."""
+    return s + k[:, :, None] * v[:, None, :]
+
+
+def _lookup(s, q):
+    """o = Sᵀ q per head. s: (N, Dk, Dv); q: (N, Dk) → (N, Dv)."""
+    return jnp.sum(s * q[:, :, None], axis=1)
+
+
+def _linear_kernel(s_ref, q_ref, k_ref, v_ref, o_ref, s_out_ref,
+                   s_scratch):
+    w = pl.program_id(1)
+
+    @pl.when(w == 0)
+    def _load():
+        s_scratch[...] = s_ref[...].astype(jnp.float32)
+
+    q = q_ref[:, 0].astype(jnp.float32)          # (N, Dk)
+    k = k_ref[:, 0].astype(jnp.float32)
+    v = v_ref[:, 0].astype(jnp.float32)          # (N, Dv)
+    s = _rank1_update(s_scratch[...], k, v)
+    s_scratch[...] = s
+    o_ref[:, 0] = _lookup(s, q).astype(o_ref.dtype)
+
+    @pl.when(w == pl.num_programs(1) - 1)
+    def _store():
+        s_out_ref[...] = s_scratch[...].astype(s_out_ref.dtype)
+
+
+def _linear_norm_kernel(s_ref, z_ref, q_ref, k_ref, v_ref,
+                        o_ref, s_out_ref, z_out_ref,
+                        s_scratch, z_scratch, *, eps):
+    w = pl.program_id(1)
+
+    @pl.when(w == 0)
+    def _load():
+        s_scratch[...] = s_ref[...].astype(jnp.float32)
+        z_scratch[...] = z_ref[...].astype(jnp.float32)
+
+    q = q_ref[:, 0].astype(jnp.float32)
+    k = k_ref[:, 0].astype(jnp.float32)
+    v = v_ref[:, 0].astype(jnp.float32)
+    s = _rank1_update(s_scratch[...], k, v)
+    z = z_scratch[...] + k                       # (N, Dk)
+    s_scratch[...] = s
+    z_scratch[...] = z
+    denom = jnp.sum(q * z, axis=1) + eps         # (N,)
+    o_ref[:, 0] = (_lookup(s, q) / denom[:, None]).astype(o_ref.dtype)
+
+    @pl.when(w == pl.num_programs(1) - 1)
+    def _store():
+        s_out_ref[...] = s_scratch[...].astype(s_out_ref.dtype)
+        z_out_ref[...] = z_scratch[...].astype(z_out_ref.dtype)
+
+
+def _gated_kernel(s_ref, q_ref, k_ref, v_ref, g_ref, o_ref, s_out_ref,
+                  s_scratch):
+    w = pl.program_id(1)
+
+    @pl.when(w == 0)
+    def _load():
+        s_scratch[...] = s_ref[...].astype(jnp.float32)
+
+    q = q_ref[:, 0].astype(jnp.float32)
+    k = k_ref[:, 0].astype(jnp.float32)
+    v = v_ref[:, 0].astype(jnp.float32)
+    a = jnp.exp(g_ref[:, 0].astype(jnp.float32))  # (N, Dk)
+    s = _rank1_update(a[:, :, None] * s_scratch[...], k, v)
+    s_scratch[...] = s
+    o_ref[:, 0] = _lookup(s, q).astype(o_ref.dtype)
+
+    @pl.when(w == pl.num_programs(1) - 1)
+    def _store():
+        s_out_ref[...] = s_scratch[...].astype(s_out_ref.dtype)
+
+
+def _row(bn, dim):
+    """One (bn, 1, dim) token row of a (N, W, dim) input."""
+    return pl.BlockSpec((bn, 1, dim), lambda b, w: (b, w, 0))
+
+
+def _state(bn, dk, dv):
+    """The (bn, dk, dv) state block — same block at every w, touched
+    only at the grid edges."""
+    return pl.BlockSpec((bn, dk, dv), lambda b, w: (b, 0, 0))
+
+
+def decode_linear(s, q, k, v, *, z=None, normalize=False,
+                  eps: float = 1e-6, interpret: bool = False):
+    """W fused decode steps of the plain linear recurrence.
+
+    s: (N, Dk, Dv); q, k: (N, W, Dk); v: (N, W, Dv); z: (N, Dk) or None.
+    Returns (o: (N, W, Dv), s_new, z_new) with s (and z) updated in place
+    via input/output aliasing.
+    """
+    n, dk, dv = s.shape
+    w_steps = q.shape[1]
+    bn = _block_bh(n, dk, dv)
+    grid = (n // bn, w_steps)
+    if not normalize:
+        o, s_new = pl.pallas_call(
+            _linear_kernel,
+            grid=grid,
+            in_specs=[_state(bn, dk, dv), _row(bn, dk), _row(bn, dk),
+                      _row(bn, dv)],
+            out_specs=[_row(bn, dv), _state(bn, dk, dv)],
+            out_shape=[
+                jax.ShapeDtypeStruct((n, w_steps, dv), v.dtype),
+                jax.ShapeDtypeStruct((n, dk, dv), s.dtype),
+            ],
+            scratch_shapes=[pltpu.VMEM((bn, dk, dv), jnp.float32)],
+            input_output_aliases={0: 1},
+            interpret=interpret,
+        )(s, q, k, v)
+        return o, s_new, None
+
+    assert z is not None, "normalize=True needs the key-sum normaliser z"
+    zspec = pl.BlockSpec((bn, dk), lambda b, w: (b, 0))
+    o, s_new, z_new = pl.pallas_call(
+        functools.partial(_linear_norm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[_state(bn, dk, dv), zspec, _row(bn, dk), _row(bn, dk),
+                  _row(bn, dv)],
+        out_specs=[_row(bn, dv), _state(bn, dk, dv), zspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, w_steps, dv), v.dtype),
+            jax.ShapeDtypeStruct((n, dk, dv), s.dtype),
+            jax.ShapeDtypeStruct((n, dk), z.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bn, dk, dv), jnp.float32),
+            pltpu.VMEM((bn, dk), jnp.float32),
+        ],
+        input_output_aliases={0: 1, 1: 2},
+        interpret=interpret,
+    )(s, z, q, k, v)
+    return o, s_new, z_new
+
+
+def decode_gated(s, q, k, v, g, *, interpret: bool = False):
+    """W fused decode steps of the gated recurrence (inclusive form).
+
+    s: (N, Dk, Dv); q, k, g: (N, W, Dk); v: (N, W, Dv). g is the
+    per-token log-decay (a = exp(g)); pass a broadcasted row for scalar
+    per-head decay. Returns (o: (N, W, Dv), s_new) with s updated in
+    place via input/output aliasing.
+    """
+    n, dk, dv = s.shape
+    w_steps = q.shape[1]
+    bn = _block_bh(n, dk, dv)
+    o, s_new = pl.pallas_call(
+        _gated_kernel,
+        grid=(n // bn, w_steps),
+        in_specs=[_state(bn, dk, dv), _row(bn, dk), _row(bn, dk),
+                  _row(bn, dv), _row(bn, dk)],
+        out_specs=[_row(bn, dv), _state(bn, dk, dv)],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, w_steps, dv), v.dtype),
+            jax.ShapeDtypeStruct((n, dk, dv), s.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((bn, dk, dv), jnp.float32)],
+        input_output_aliases={0: 1},
+        interpret=interpret,
+    )(s, q, k, v, g)
+    return o, s_new

@@ -1,0 +1,88 @@
+"""Jit'd public wrappers for the fused W-step recurrent decode kernels.
+
+Handles (B, H, …) ↔ (BH, …) reshaping and the interpret-mode fallback
+used for CPU validation (the deployment target is TPU; on CPU the
+kernels run through the Pallas interpreter, so tests exercise the exact
+kernel code path).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.kernels.fused_recurrent import kernel as _k
+
+Array = jax.Array
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def fused_recurrent_linear(
+    s: Array,
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    z: Optional[Array] = None,
+    normalize: bool = False,
+    eps: float = 1e-6,
+    interpret: bool | None = None,
+) -> Tuple[Array, Array, Optional[Array]]:
+    """W fused decode steps, plain linear recurrence.
+
+    s: (B, H, Dk, Dv); q, k: (B, H, W, Dk); v: (B, H, W, Dv);
+    z: (B, H, Dk) or None. Returns (o: (B, H, W, Dv), s_new, z_new) with
+    the state updated in place (input/output aliased) — one kernel
+    launch and one HBM state round-trip for the whole window.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    b, h, w, dk = q.shape
+    dv = v.shape[-1]
+    o, s_new, z_new = _k.decode_linear(
+        s.reshape(b * h, dk, dv),
+        q.reshape(b * h, w, dk),
+        k.reshape(b * h, w, dk),
+        v.reshape(b * h, w, dv),
+        z=None if z is None else z.reshape(b * h, dk),
+        normalize=normalize, eps=eps, interpret=interpret,
+    )
+    return (
+        o.reshape(b, h, w, dv),
+        s_new.reshape(b, h, dk, dv),
+        None if z_new is None else z_new.reshape(b, h, dk),
+    )
+
+
+def fused_recurrent_gated(
+    s: Array,
+    q: Array,
+    k: Array,
+    v: Array,
+    g: Array,
+    *,
+    interpret: bool | None = None,
+) -> Tuple[Array, Array]:
+    """W fused decode steps, gated (decay) recurrence, inclusive form.
+
+    s: (B, H, Dk, Dv); q, k, g: (B, H, W, Dk); v: (B, H, W, Dv).
+    g is the log-decay (state is scaled by exp(g) each step). Returns
+    (o: (B, H, W, Dv), s_new) with the state updated in place.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    b, h, w, dk = q.shape
+    dv = v.shape[-1]
+    o, s_new = _k.decode_gated(
+        s.reshape(b * h, dk, dv),
+        q.reshape(b * h, w, dk),
+        k.reshape(b * h, w, dk),
+        v.reshape(b * h, w, dv),
+        g.reshape(b * h, w, dk),
+        interpret=interpret,
+    )
+    return o.reshape(b, h, w, dv), s_new.reshape(b, h, dk, dv)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracle for the fused W-step recurrent decode kernels.
+
+Each reference is W sequential single-token ``decode_step`` /
+``gated_decode_step`` calls from :mod:`repro.core` — the pre-fusion
+serving recurrence — expressed as one ``lax.scan`` so it stays traceable
+at any W. Kernel-vs-ref equality IS the fused-matches-sequential
+acceptance check, and the model layer uses these as the
+``decode_kernel="reference"`` fallback.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gated import gated_decode_step
+from repro.core.linear_attention import decode_step
+
+Array = jax.Array
+
+
+def fused_recurrent_linear_ref(
+    s: Array,
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    z: Optional[Array] = None,
+    normalize: bool = False,
+    eps: float = 1e-6,
+) -> Tuple[Array, Array, Optional[Array]]:
+    """s: (B, H, Dk, Dv); q, k: (B, H, W, Dk); v: (B, H, W, Dv);
+    z: (B, H, Dk) or None. Returns (o: (B, H, W, Dv), s_new, z_new)."""
+    if q.shape[2] == 1:  # W == 1: no scan machinery in the hot loop
+        o, s_f, z_f = decode_step(s, q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                  z=z, normalize=normalize, eps=eps)
+        return o[:, :, None], s_f, z_f
+
+    def step(carry, qkv):
+        s, z = carry
+        q_w, k_w, v_w = qkv
+        o, s, z = decode_step(s, q_w, k_w, v_w, z=z,
+                              normalize=normalize, eps=eps)
+        return (s, z), o
+
+    qkv = tuple(jnp.moveaxis(x, 2, 0) for x in (q, k, v))
+    (s_f, z_f), o = jax.lax.scan(step, (s, z), qkv)
+    return jnp.moveaxis(o, 0, 2), s_f, z_f
+
+
+def fused_recurrent_gated_ref(
+    s: Array,
+    q: Array,
+    k: Array,
+    v: Array,
+    g: Array,
+) -> Tuple[Array, Array]:
+    """s: (B, H, Dk, Dv); q, k, g: (B, H, W, Dk); v: (B, H, W, Dv).
+    Returns (o: (B, H, W, Dv), s_new)."""
+    if q.shape[2] == 1:  # W == 1: no scan machinery in the hot loop
+        o, s_f = gated_decode_step(s, q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                   g[:, :, 0])
+        return o[:, :, None], s_f
+
+    def step(s, qkvg):
+        q_w, k_w, v_w, g_w = qkvg
+        o, s = gated_decode_step(s, q_w, k_w, v_w, g_w)
+        return s, o
+
+    qkvg = tuple(jnp.moveaxis(x, 2, 0) for x in (q, k, v, g))
+    s_f, o = jax.lax.scan(step, s, qkvg)
+    return jnp.moveaxis(o, 0, 2), s_f

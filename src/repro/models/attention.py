@@ -155,9 +155,13 @@ def init_attn_state(cfg: ModelConfig, batch: int, max_len: int,
     # linear family: pad the state head dim to the model-axis size so the
     # per-step state read-modify-write shards instead of replicating
     # (yi-34b: 56 heads on 16 → 28 GB/dev/step replicated; §Perf cell C)
+    # z only exists when the normaliser is on — prefill and decode both
+    # return z=None otherwise, and the scan-based generation loop needs
+    # the state pytree structure to be step-invariant.
     hp = padded_head_count(rules, h) if rules is not None else h
     z = (jnp.zeros((batch, hp, dh), jnp.float32)
-         if cfg.attention_backend == "linear" else None)
+         if cfg.attention_backend == "linear" and cfg.linear_normalize
+         else None)
     return AttnState(
         k_cache=None, v_cache=None,
         s=jnp.zeros((batch, hp, dh, dh), jnp.float32), z=z,
@@ -173,7 +177,8 @@ def attn_state_specs(cfg: ModelConfig) -> AttnState:
             s=None, z=None,
         )
     z = (("batch", "heads_state", None)
-         if cfg.attention_backend == "linear" else None)
+         if cfg.attention_backend == "linear" and cfg.linear_normalize
+         else None)
     return AttnState(k_cache=None, v_cache=None,
                      s=("batch", "heads_state", None, None), z=z)
 
@@ -441,8 +446,44 @@ def attention_apply(
 
 
 # ---------------------------------------------------------------------------
-# single-token decode
+# single-token / windowed decode
 # ---------------------------------------------------------------------------
+
+def _use_fused_decode(cfg: ModelConfig) -> bool:
+    """Resolve ``cfg.decode_kernel``. "auto" picks the Pallas kernels on
+    TPU only — they use pltpu VMEM scratch and the sequential minor-grid
+    carry, neither of which lowers on GPU — and the jnp scan reference
+    everywhere else (on CPU Pallas would run under the slow interpreter;
+    tests force "fused" to validate the kernel path via interpret
+    mode)."""
+    if cfg.decode_kernel == "auto":
+        return jax.default_backend() == "tpu"
+    return cfg.decode_kernel == "fused"
+
+
+def _recurrent_linear(s, q, k, v, z, cfg: ModelConfig):
+    """W-step linear decode recurrence behind ``cfg.decode_kernel``:
+    the fused Pallas kernel (VMEM-resident state, in-place HBM update)
+    or the jnp scan reference. Shapes: s (B,H,Dk,Dv); q,k (B,H,W,Dk);
+    v (B,H,W,Dv); z (B,H,Dk)|None."""
+    from repro.kernels.fused_recurrent import ops as FR
+    from repro.kernels.fused_recurrent import ref as FRref
+    if _use_fused_decode(cfg):
+        return FR.fused_recurrent_linear(
+            s, q, k, v, z=z, normalize=cfg.linear_normalize)
+    return FRref.fused_recurrent_linear_ref(
+        s, q, k, v, z=z, normalize=cfg.linear_normalize)
+
+
+def _recurrent_gated(s, q, k, v, g, cfg: ModelConfig):
+    """W-step gated decode recurrence behind ``cfg.decode_kernel``.
+    Shapes: s (B,H,Dk,Dv); q,k,g (B,H,W,Dk); v (B,H,W,Dv)."""
+    from repro.kernels.fused_recurrent import ops as FR
+    from repro.kernels.fused_recurrent import ref as FRref
+    if _use_fused_decode(cfg):
+        return FR.fused_recurrent_gated(s, q, k, v, g)
+    return FRref.fused_recurrent_gated_ref(s, q, k, v, g)
+
 
 def attention_decode(
     p: Params,
@@ -494,20 +535,21 @@ def attention_decode(
             vt[:, None], (b, g, hkv, dh)).reshape(b, h, dh), hp)
 
         if backend == "linear":
-            from repro.core.linear_attention import decode_step
-            o_h, s_new, z_new = decode_step(
-                state.s, qh, kh, vh, z=state.z,
-                normalize=cfg.linear_normalize,
-            )
+            o_w, s_new, z_new = _recurrent_linear(
+                state.s, qh[:, :, None], kh[:, :, None], vh[:, :, None],
+                state.z, cfg)
+            o_h = o_w[:, :, 0]
             new_state = AttnState(k_cache=None, v_cache=None,
                                   s=s_new, z=z_new)
         else:
-            from repro.core.gated import gated_decode_step
             gd = _decay(p, xt, cfg)[:, :, 0]               # (B, H, gd)
             gd = jnp.broadcast_to(gd, (b, h, dh)) if gd.shape[-1] == 1 \
                 else gd
             gd = _pad_head_dim(gd, hp)
-            o_h, s_new = gated_decode_step(state.s, qh, kh, vh, gd)
+            o_w, s_new = _recurrent_gated(
+                state.s, qh[:, :, None], kh[:, :, None], vh[:, :, None],
+                gd[:, :, None], cfg)
+            o_h = o_w[:, :, 0]
             o_h = L.groupnorm_heads(
                 o_h[:, :h][:, None], p["gn_scale"].astype(jnp.float32),
                 p["gn_bias"].astype(jnp.float32))[:, 0]
@@ -516,6 +558,69 @@ def attention_decode(
         o = o_h[:, :h].reshape(b, g, hkv, dh)
 
     y = _merge_heads(p, o[:, :, :, None], cfg, x.dtype)[:, 0]
+    return y, new_state
+
+
+def attention_decode_window(
+    p: Params,
+    x: Array,
+    state: AttnState,
+    pos0: Array,
+    cfg: ModelConfig,
+    rules: Rules,
+) -> Tuple[Array, AttnState]:
+    """Decode W known tokens in one fused kernel launch.
+
+    x: (B, W, D) token activations; pos0: () position of the first.
+    Linear family only — the fixed-size state advances W steps inside
+    the kernel with the state VMEM-resident, so per-window HBM state
+    traffic is O(Dk·Dv) instead of O(W·Dk·Dv). The softmax KV-cache
+    backend has no such recurrence; callers fall back to scanning
+    single-token decode (see blocks.block_decode_window).
+    """
+    backend = cfg.attention_backend
+    assert backend in ("linear", "gated_linear"), backend
+    b, w, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // hkv
+    q, k, v = _project_qkv(p, x, cfg, rules)
+    if cfg.rope:
+        positions = pos0 + jnp.arange(w)
+        q, k = _rope(q, k, positions, cfg)
+
+    qf = feature_map(q, cfg.feature_map)       # (B, G, Hkv, W, Dh)
+    kf = feature_map(k, cfg.feature_map)       # (B, Hkv, W, Dh)
+    if cfg.feature_gate:
+        kf, v = _gate_kv(p, x, kf, v, cfg)
+    hp = state.s.shape[1]          # padded head count (≥ h)
+    qh = _pad_head_dim(qf.reshape(b, h, w, dh), hp)
+    kh = _pad_head_dim(jnp.broadcast_to(
+        kf[:, None], (b, g, hkv, w, dh)).reshape(b, h, w, dh), hp)
+    vh = _pad_head_dim(jnp.broadcast_to(
+        v[:, None], (b, g, hkv, w, dh)).reshape(b, h, w, dh), hp)
+
+    if backend == "linear":
+        o_w, s_new, z_new = _recurrent_linear(
+            state.s, qh, kh, vh, state.z, cfg)
+        new_state = AttnState(k_cache=None, v_cache=None,
+                              s=s_new, z=z_new)
+    else:
+        gd = _decay(p, x, cfg)                             # (B, H, W, gd)
+        gd = jnp.broadcast_to(gd, (b, h, w, dh)) if gd.shape[-1] == 1 \
+            else gd
+        gd = _pad_head_dim(gd, hp)
+        o_w, s_new = _recurrent_gated(state.s, qh, kh, vh, gd, cfg)
+        o_w = L.groupnorm_heads(
+            jnp.transpose(o_w[:, :h], (0, 2, 1, 3)),
+            p["gn_scale"].astype(jnp.float32),
+            p["gn_bias"].astype(jnp.float32),
+        )
+        o_w = jnp.transpose(o_w, (0, 2, 1, 3))
+        new_state = AttnState(k_cache=None, v_cache=None,
+                              s=s_new, z=None)
+
+    o = o_w[:, :h].reshape(b, g, hkv, w, dh)
+    y = _merge_heads(p, o, cfg, x.dtype)
     return y, new_state
 
 

@@ -219,3 +219,60 @@ def block_decode(
     else:
         ff = L.mlp(p["mlp"], h2, cfg.act)
     return x + ff, st
+
+
+# ---------------------------------------------------------------------------
+# decode (W-token window, one fused kernel launch per attention layer)
+# ---------------------------------------------------------------------------
+
+def block_decode_window(
+    kind: str,
+    p: Optional[Params],
+    x: Array,
+    state: Any,
+    pos0: Array,
+    cfg: ModelConfig,
+    rules: Rules,
+    *,
+    shared: Optional[Params] = None,
+) -> Tuple[Array, Any]:
+    """x: (B, W, D) — W known tokens per sequence. Returns (x, new_state).
+
+    Attention blocks under the linear backends advance their fixed-size
+    state W steps inside ONE fused recurrent kernel; cross blocks are
+    position-independent lookups against static memory; every other kind
+    (softmax KV cache, Mamba, RWKV) falls back to scanning the
+    single-token ``block_decode`` over the window.
+    """
+    if kind == "shared_attn":
+        p = shared
+    linear_attn = (kind in ("attn", "shared_attn")
+                   and cfg.attention_backend in ("linear", "gated_linear"))
+    if kind == "cross":
+        h1 = L.apply_norm(cfg.norm, p["norm1"], x)
+        att = A.cross_attention_apply(p["cross"], h1, state, cfg, rules)
+        att = jnp.tanh(p["xgate"]).astype(att.dtype) * att
+        st = state   # memory is static during decode
+    elif linear_attn:
+        h1 = L.apply_norm(cfg.norm, p["norm1"], x)
+        att, st = A.attention_decode_window(
+            p["attn"], h1, state, pos0, cfg, rules)
+    else:
+        def step(st, xw):
+            x_t, w = xw
+            y, st = block_decode(kind, p, x_t, st, pos0 + w, cfg, rules,
+                                 shared=shared)
+            return st, y
+
+        st, y = jax.lax.scan(
+            step, state,
+            (jnp.moveaxis(x, 1, 0), jnp.arange(x.shape[1])))
+        return jnp.moveaxis(y, 0, 1), st
+
+    x = x + att
+    h2 = L.apply_norm(cfg.norm, p["norm2"], x)
+    if _uses_moe(kind, cfg):
+        ff, _ = MOE.moe_apply(p["moe"], h2, cfg, rules)
+    else:
+        ff = L.mlp(p["mlp"], h2, cfg.act)
+    return x + ff, st

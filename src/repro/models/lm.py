@@ -367,6 +367,129 @@ def decode_step(
     return logits, {"stack": new_stack, "tail": tuple(new_tail)}
 
 
+def sample_token(logits: Array, temperature: float,
+                 key: Optional[Array] = None) -> Array:
+    """logits: (B, V) → (B,) int32. temperature is a PYTHON float decided
+    at trace time: 0.0 = greedy (no PRNG consumed), > 0 = categorical."""
+    if temperature and temperature > 0.0:
+        assert key is not None, "temperature sampling needs a PRNG key"
+        return jax.random.categorical(
+            key, logits.astype(jnp.float32) / temperature, axis=-1
+        ).astype(jnp.int32)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def generate(
+    params: Params,
+    state: Any,
+    tok0: Array,
+    pos0: Array,
+    n_steps: int,
+    cfg: ModelConfig,
+    rules: Rules,
+    *,
+    temperature: float = 0.0,
+    key: Optional[Array] = None,
+) -> Tuple[Array, Any]:
+    """Fused generation loop: ``n_steps`` autoregressive decode steps as
+    ONE ``lax.scan`` — the whole generation is a single device dispatch,
+    with greedy/temperature sampling folded into the scan body.
+
+    tok0: (B,) first input token (e.g. sampled from prefill logits);
+    pos0: () its position. Returns (tokens (B, n_steps), final_state)
+    where tokens[:, i] is the token sampled after consuming the i-th
+    input. For the linear backends every step is O(k²) against the
+    fixed-size state, so per-token cost is flat in context length AND
+    free of per-token dispatch/HBM-round-trip overhead — the serving
+    half of the paper's fast-lookup claim.
+    """
+    greedy = not (temperature and temperature > 0.0)
+    if key is None:
+        if not greedy:
+            raise ValueError("temperature sampling needs a PRNG key")
+        key = jax.random.PRNGKey(0)  # carried but never consumed
+    pos0 = jnp.asarray(pos0, jnp.int32)
+    tok0 = tok0.astype(jnp.int32)
+    # pre-cast once: the per-step cast inside decode_step becomes a
+    # no-op, so the scan body carries no loop-invariant cast work
+    params = cast_params(params, _dtype(cfg.dtype))
+
+    def step(carry, _):
+        tok, st, pos, k = carry
+        logits, st = decode_step(params, st, tok, pos, cfg, rules)
+        if greedy:
+            sub = None          # no PRNG consumed in the hot loop
+        else:
+            k, sub = jax.random.split(k)
+        nxt = sample_token(logits, temperature, sub)
+        return (nxt, st, pos + 1, k), nxt
+
+    (_, state_f, _, _), toks = jax.lax.scan(
+        step, (tok0, state, pos0, key), None, length=n_steps)
+    return jnp.moveaxis(toks, 0, 1), state_f
+
+
+def decode_window(
+    params: Params,
+    state: Any,
+    tokens: Array,
+    pos0: Array,
+    cfg: ModelConfig,
+    rules: Rules,
+) -> Tuple[Array, Any]:
+    """Advance the decode state over W KNOWN tokens in one dispatch.
+
+    tokens: (B, W) int32; pos0: () position of tokens[:, 0]. Returns
+    (logits (B, W, V), new_state). Under the linear backends each
+    attention layer runs its whole window inside one fused recurrent
+    kernel launch (state VMEM-resident across the W steps) — the
+    building block for forced/teacher decoding, scoring, and speculative
+    lookahead verification, where the tokens are available up front.
+    """
+    adt = _dtype(cfg.dtype)
+    pattern, reps, tail = cfg.pattern_and_repeats
+    pos0 = jnp.asarray(pos0, jnp.int32)
+
+    params = cast_params(params, adt)
+    if rules.model_size > 1:
+        # same vocab-sharded one-hot contraction as decode_step: a local
+        # matmul + tiny psum instead of all-gathering the embedding
+        # table every verify window.
+        onehot = jax.nn.one_hot(tokens, cfg.vocab_size, dtype=adt)
+        onehot = constrain(onehot, rules, "batch", "seq", "vocab")
+        x = onehot @ params["embed"].astype(adt)            # (B, W, D)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(adt)
+    x = constrain(x, rules, "batch", "seq", "embed")
+    shared = params["shared"]
+
+    def unit(x, scanned):
+        unit_params, unit_state = scanned
+        new_states = []
+        for p_i, kind in enumerate(pattern):
+            x, st = B.block_decode_window(
+                kind, unit_params[p_i] if kind != "shared_attn" else None,
+                x, unit_state[p_i], pos0, cfg, rules, shared=shared)
+            new_states.append(st)
+        return x, tuple(new_states)
+
+    x, new_stack = jax.lax.scan(
+        unit, x, (params["stack"], state["stack"]), length=reps)
+
+    new_tail = []
+    for i, kind in enumerate(tail):
+        x, st = B.block_decode_window(
+            kind, params["tail"][i] if kind != "shared_attn" else None,
+            x, state["tail"][i], pos0, cfg, rules, shared=shared)
+        new_tail.append(st)
+
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(adt)
+    logits = constrain(logits, rules, "batch", "seq", "vocab")
+    return logits, {"stack": new_stack, "tail": tuple(new_tail)}
+
+
 def pad_decode_state(states: Any, cfg: ModelConfig, max_len: int) -> Any:
     """Grow prefill KV caches to ``max_len`` (softmax backend only — the
     linear-family states are already fixed-size, nothing to pad).
