@@ -37,6 +37,18 @@ Array = jax.Array
 DEFAULT_CHUNK = 128
 
 
+def safe_denom(d: Array, eps: float = 1e-6) -> Array:
+    """Sign-preserving clamp for the normaliser denominator.
+
+    Under ``feature_map="identity"`` the key-sum inner product q·z can be
+    arbitrarily close to zero (or negative), and the additive ``d + eps``
+    guard then *crosses* zero — blowing up the normalised output with the
+    wrong sign. Clamp magnitude instead: sign(d)·max(|d|, eps), with
+    d == 0 mapped to +eps so the result is never zero.
+    """
+    return jnp.where(d >= 0, jnp.maximum(d, eps), jnp.minimum(d, -eps))
+
+
 # ---------------------------------------------------------------------------
 # 1. Document / query form (paper §3.1, §3.2)
 # ---------------------------------------------------------------------------
@@ -134,7 +146,7 @@ def causal_linear_attention_scan(
         o_t = jnp.einsum("bhkv,bhk->bhv", s, q_t.astype(acc_dtype))
         if normalize:
             denom = jnp.einsum("bhk,bhk->bh", z, q_t.astype(acc_dtype))
-            o_t = o_t / (denom[..., None] + eps)
+            o_t = o_t / safe_denom(denom, eps)[..., None]
         return (s, z), o_t
 
     qkv = (
@@ -210,7 +222,7 @@ def causal_linear_attention_chunked(
             # z_t = Σ_{s<=t} k_s: carry-in z + intra-chunk cumulative sum.
             k_cum = jnp.cumsum(k_i, axis=2) + z[:, :, None, :]
             denom = jnp.einsum("bhck,bhck->bhc", q_i, k_cum)
-            o_i = o_i / (denom[..., None] + eps)
+            o_i = o_i / safe_denom(denom, eps)[..., None]
             z = k_cum[:, :, -1, :]
         s = s + jnp.einsum("bhck,bhcv->bhkv", k_i, v_i)
         return (s, z), o_i
@@ -353,7 +365,8 @@ def causal_linear_attention(
         acc = jnp.promote_types(q.dtype, jnp.float32)
         k_cum = jnp.cumsum(k.astype(acc), axis=2)
         denom = jnp.einsum("bhtk,bhtk->bht", q.astype(acc), k_cum)
-        o = (o.astype(acc) / (denom[..., None] + eps)).astype(v.dtype)
+        o = (o.astype(acc) / safe_denom(denom, eps)[..., None]
+             ).astype(v.dtype)
     return o
 
 
@@ -385,5 +398,5 @@ def decode_step(
         assert z is not None
         new_z = z + k.astype(acc)
         denom = jnp.einsum("bhk,bhk->bh", new_z, q.astype(acc))
-        o = o / (denom[..., None] + eps)
+        o = o / safe_denom(denom, eps)[..., None]
     return o.astype(v.dtype), state, new_z

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.linear_attention import safe_denom
+
 Array = jax.Array
 
 
@@ -88,13 +90,13 @@ class DocumentState:
         if q.ndim == self.c.ndim - 1:
             out = jnp.einsum("...kl,...l->...k", self.c, q)
             if normalize and self.z is not None:
-                out = out / (jnp.einsum("...k,...k->...", self.z, q)[..., None]
-                             + eps)
+                denom = jnp.einsum("...k,...k->...", self.z, q)
+                out = out / safe_denom(denom, eps)[..., None]
             return out
         out = jnp.einsum("...kl,...ml->...mk", self.c, q)
         if normalize and self.z is not None:
-            denom = jnp.einsum("...k,...mk->...m", self.z, q)[..., None]
-            out = out / (denom + eps)
+            denom = jnp.einsum("...k,...mk->...m", self.z, q)
+            out = out / safe_denom(denom, eps)[..., None]
         return out
 
     def merge(self, other: "DocumentState") -> "DocumentState":
@@ -159,8 +161,8 @@ class DocumentStore:
         idx = jnp.asarray([rows[d] for d in doc_ids], jnp.int32)
         out = self._lookup_rows(cs, idx, queries)
         if normalize and zs is not None:
-            denom = jnp.einsum("bk,bk->b", zs[idx], queries)[..., None]
-            out = out / (denom + 1e-6)
+            denom = jnp.einsum("bk,bk->b", zs[idx], queries)
+            out = out / safe_denom(denom)[..., None]
         return out
 
     @property

@@ -39,6 +39,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.linear_attention import safe_denom
+
 # VMEM budget for the resident state block; block_bh is chosen so the
 # fp32 (block_bh, Dk, Dv) scratch stays under it (~¼ of a core's VMEM,
 # leaving room for the double-buffered q/k/v/o rows).
@@ -102,7 +104,9 @@ def _linear_norm_kernel(s_ref, z_ref, q_ref, k_ref, v_ref,
     z = z_scratch[...] + k                       # (N, Dk)
     s_scratch[...] = s
     z_scratch[...] = z
-    denom = jnp.sum(q * z, axis=1) + eps         # (N,)
+    # shared sign-preserving clamp: kernel-vs-reference equality is the
+    # acceptance check, so the denominators must be the same formula
+    denom = safe_denom(jnp.sum(q * z, axis=1), eps)    # (N,)
     o_ref[:, 0] = (_lookup(s, q) / denom[:, None]).astype(o_ref.dtype)
 
     @pl.when(w == pl.num_programs(1) - 1)

@@ -7,6 +7,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.linear_attention import safe_denom
+
 Array = jax.Array
 
 
@@ -18,7 +20,7 @@ def mass_lookup_ref(c: Array, q: Array, z: Optional[Array] = None,
     if z is not None:
         denom = jnp.einsum("nk,nmk->nm", z.astype(jnp.float32),
                            q.astype(jnp.float32))
-        out = out / (denom[..., None] + eps)
+        out = out / safe_denom(denom, eps)[..., None]
     return out.astype(q.dtype)
 
 

@@ -1,11 +1,11 @@
 """Serving driver — the paper's deployment story.
 
-Two modes:
+Three modes:
 
-* ``generate`` — autoregressive generation with batched requests:
-  prefill once, then O(k²)-per-token decode under the linear backends
-  (no KV cache; the 500k-context state is the same size as the 1-token
-  state). ``--backend softmax`` serves the KV-cache baseline.
+* ``generate`` — autoregressive generation with one static batch of
+  requests: prefill once, then O(k²)-per-token decode under the linear
+  backends (no KV cache; the 500k-context state is the same size as the
+  1-token state). ``--backend softmax`` serves the KV-cache baseline.
 
   The generation loop is FUSED: the whole decode phase is one
   ``lm.generate`` dispatch (a ``lax.scan`` over decode steps with
@@ -17,11 +17,22 @@ Two modes:
   the pre-fusion driver paid one jitted dispatch + a full decode-state
   HBM round-trip per token.
 
+* ``stream`` — continuous batching under a synthetic Poisson request
+  stream (the paper's §2.2 "extreme query loads" as a scheduling
+  problem): requests with exponential inter-arrival times and a skewed
+  generation-length mix are driven through the fixed-slot
+  :class:`repro.serving.DecodeEngine`. Freed slots are refilled between
+  scan segments (prefill-on-admit + O(k²) state swap-in for the linear
+  family), so a long straggler no longer idles the rest of the batch.
+  Reports aggregate tokens/s and slot utilization.
+
 * ``retrieve`` — the §2.2 mass-query scenario: encode documents into the
   fixed-size DocumentStore once, then answer query streams at O(k²) each.
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-34b --smoke \
       --backend linear --prompt-len 64 --gen-len 32 --batch 4
+  PYTHONPATH=src python -m repro.launch.serve --mode stream --smoke \
+      --backend linear --slots 4 --n-requests 16 --arrival-rate 0.5
 """
 
 from __future__ import annotations
@@ -31,6 +42,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import lm
@@ -92,6 +104,67 @@ def generate(args) -> int:
     return 0
 
 
+def make_request_mix(rng: np.random.Generator, n_requests: int,
+                     prompt_len: int, gen_len: int, vocab_size: int,
+                     arrival_rate: float):
+    """Synthetic workload: Poisson arrivals (exponential inter-arrival
+    times, ``arrival_rate`` requests per decode step; 0 = all at once)
+    and a skewed generation-length mix — most requests are short,
+    every 4th runs ``gen_len`` tokens (the straggler pattern continuous
+    batching exists for)."""
+    t = 0.0
+    out = []
+    for i in range(n_requests):
+        if arrival_rate > 0:
+            t += rng.exponential(1.0 / arrival_rate)
+        prompt = rng.integers(0, vocab_size, size=prompt_len,
+                              dtype=np.int64).astype(np.int32)
+        g = gen_len if i % 4 == 0 else max(1, gen_len // 8)
+        out.append((prompt, g, t))
+    return out
+
+
+def stream(args) -> int:
+    """Continuous batching under a synthetic Poisson request stream."""
+    from repro.serving import DecodeEngine
+
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch))
+    if args.backend:
+        cfg = cfg.with_backend(args.backend)
+    rules = Rules.null()
+    root = jax.random.PRNGKey(args.seed)
+    params = lm.init_params(jax.random.fold_in(root, 0), cfg)
+
+    max_len = args.prompt_len + args.gen_len + args.segment_len
+    engine = DecodeEngine(
+        params, cfg, rules, n_slots=args.slots,
+        segment_len=args.segment_len, max_len=max_len,
+        temperature=args.temperature, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    requests = make_request_mix(rng, args.n_requests, args.prompt_len,
+                                args.gen_len, cfg.vocab_size,
+                                args.arrival_rate)
+    for prompt, g, arrival in requests:
+        engine.submit(prompt, g, arrival=arrival)
+
+    t0 = time.perf_counter()
+    completions = engine.run("continuous")
+    dt = time.perf_counter() - t0
+
+    total = sum(len(c.tokens) for c in completions)
+    lat = [c.finished_step - c.admitted_step for c in completions]
+    print(f"arch={cfg.name} backend={cfg.attention_backend} "
+          f"slots={args.slots} segment={args.segment_len}")
+    print(f"stream: {len(completions)} requests, {total} tokens in "
+          f"{dt:.2f} s ({total/dt:.0f} tok/s incl. compile)")
+    print(f"slot utilization {engine.stats.slot_utilization:.2f} over "
+          f"{engine.stats.segments} segments; mean latency "
+          f"{np.mean(lat):.0f} decode steps")
+    assert len(completions) == args.n_requests
+    return 0
+
+
 def retrieve(args) -> int:
     """Encode-once / query-many with the DocumentStore."""
     from repro.core import DocumentState, DocumentStore
@@ -120,7 +193,7 @@ def retrieve(args) -> int:
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="generate",
-                    choices=["generate", "retrieve"])
+                    choices=["generate", "stream", "retrieve"])
     ap.add_argument("--arch", default="yi-34b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--backend", default=None,
@@ -131,7 +204,15 @@ def main() -> int:
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 = categorical sampling")
     ap.add_argument("--seed", type=int, default=0)
+    # stream mode (continuous batching)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--segment-len", type=int, default=8)
+    ap.add_argument("--n-requests", type=int, default=16)
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="requests per decode step (0 = all at t=0)")
     args = ap.parse_args()
+    if args.mode == "stream":
+        return stream(args)
     return generate(args) if args.mode == "generate" else retrieve(args)
 
 

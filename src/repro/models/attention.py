@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.linear_attention import safe_denom
 from repro.models import layers as L
 from repro.models import xla_attention as xattn
 from repro.sharding import Rules, constrain
@@ -412,11 +413,15 @@ def attention_apply(
                 )
                 s_f = None
             if want_state:
-                # state stays head-padded: decode consumes it directly
-                zf = jnp.cumsum(kh.astype(jnp.float32), axis=2)[:, :, -1]
+                # state stays head-padded: decode consumes it directly.
+                # The normaliser z = Σ_t k_t is a plain sum — the old
+                # cumsum materialised a full (B,H,T,Dk) fp32 tensor only
+                # to keep its last slice, and computed it even when the
+                # normaliser was off.
+                zf = (jnp.sum(kh.astype(jnp.float32), axis=2)
+                      if cfg.linear_normalize else None)
                 state = AttnState(k_cache=None, v_cache=None,
-                                  s=s_f, z=zf if cfg.linear_normalize
-                                  else None)
+                                  s=s_f, z=zf)
         else:  # gated_linear
             from repro.core.gated import chunked_gla, \
                 gated_linear_attention
@@ -449,16 +454,36 @@ def attention_apply(
 # single-token / windowed decode
 # ---------------------------------------------------------------------------
 
+_FUSED_FALLBACK_WARNED = set()
+
+
 def _use_fused_decode(cfg: ModelConfig) -> bool:
     """Resolve ``cfg.decode_kernel``. "auto" picks the Pallas kernels on
     TPU only — they use pltpu VMEM scratch and the sequential minor-grid
     carry, neither of which lowers on GPU — and the jnp scan reference
     everywhere else (on CPU Pallas would run under the slow interpreter;
-    tests force "fused" to validate the kernel path via interpret
-    mode)."""
+    tests force "fused" to validate the kernel path via interpret mode).
+
+    ``decode_kernel="fused"`` forced on any other backend (GPU, …) would
+    try to lower the TPU-only kernels and crash; fall back to the
+    reference recurrence with a one-time warning instead.
+    """
     if cfg.decode_kernel == "auto":
         return jax.default_backend() == "tpu"
-    return cfg.decode_kernel == "fused"
+    if cfg.decode_kernel != "fused":
+        return False
+    platform = jax.default_backend()
+    if platform in ("tpu", "cpu"):  # cpu: Pallas interpret mode
+        return True
+    if platform not in _FUSED_FALLBACK_WARNED:
+        _FUSED_FALLBACK_WARNED.add(platform)
+        import warnings
+        warnings.warn(
+            f"decode_kernel='fused' requested but the {platform!r} "
+            "backend cannot lower the TPU Pallas decode kernels (VMEM "
+            "scratch / minor-grid carry); falling back to the jnp scan "
+            "reference recurrence.", RuntimeWarning, stacklevel=2)
+    return False
 
 
 def _recurrent_linear(s, q, k, v, z, cfg: ModelConfig):
@@ -493,7 +518,9 @@ def attention_decode(
     cfg: ModelConfig,
     rules: Rules,
 ) -> Tuple[Array, AttnState]:
-    """One decode step. x: (B, D); pos: () current position.
+    """One decode step. x: (B, D); pos: () current position, or (B,)
+    per-sequence positions (continuous batching: each slot sits at its
+    own point in its own request).
 
     softmax: O(pos) cache read. linear family: O(k²) — independent of pos
     (the paper's constant-time lookup).
@@ -501,6 +528,7 @@ def attention_decode(
     b, _ = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     g = h // hkv
+    pos = jnp.asarray(pos, jnp.int32)
     xt = x[:, None, :]  # (B, 1, D)
     q, k, v = _project_qkv(p, xt, cfg, rules)
     if cfg.rope:
@@ -509,12 +537,19 @@ def attention_decode(
 
     backend = cfg.attention_backend
     if backend == "softmax":
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            state.k_cache, jnp.transpose(k, (0, 2, 1, 3)).astype(
-                state.k_cache.dtype), pos, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            state.v_cache, jnp.transpose(v, (0, 2, 1, 3)).astype(
-                state.v_cache.dtype), pos, axis=1)
+        k_new = jnp.transpose(k, (0, 2, 1, 3)).astype(state.k_cache.dtype)
+        v_new = jnp.transpose(v, (0, 2, 1, 3)).astype(state.v_cache.dtype)
+        if pos.ndim == 0:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                state.k_cache, k_new, pos, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                state.v_cache, v_new, pos, axis=1)
+        else:  # per-slot positions: one scatter row per sequence
+            upd = jax.vmap(
+                lambda c, u, p_i: jax.lax.dynamic_update_slice_in_dim(
+                    c, u, p_i, axis=0))
+            k_cache = upd(state.k_cache, k_new, pos)
+            v_cache = upd(state.v_cache, v_new, pos)
         kc = jnp.transpose(k_cache, (0, 2, 1, 3))
         vc = jnp.transpose(v_cache, (0, 2, 1, 3))
         o = xattn.decode_attention(q[:, :, :, 0], kc, vc, pos + 1)
@@ -702,6 +737,6 @@ def cross_attention_apply(p: Params, x: Array, mem: CrossMemory,
         o = jnp.einsum("bghtk,bhkv->bghtv", qf, mem.c)
         if cfg.linear_normalize:
             denom = jnp.einsum("bghtk,bhk->bght", qf, mem.z)
-            o = o / (denom[..., None] + 1e-6)
+            o = o / safe_denom(denom)[..., None]
         o = o.astype(x.dtype)
     return _merge_heads(p, o, cfg, x.dtype)

@@ -193,7 +193,8 @@ def block_decode(
     *,
     shared: Optional[Params] = None,
 ) -> Tuple[Array, Any]:
-    """x: (B, D) one token per sequence. Returns (x, new_state)."""
+    """x: (B, D) one token per sequence; pos: () shared position or (B,)
+    per-slot positions (continuous batching). Returns (x, new_state)."""
     if kind == "shared_attn":
         p = shared
     if kind == "mamba":

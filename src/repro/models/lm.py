@@ -319,7 +319,9 @@ def decode_step(
     cfg: ModelConfig,
     rules: Rules,
 ) -> Tuple[Array, Any]:
-    """One autoregressive step. token: (B,) int32; pos: () int32.
+    """One autoregressive step. token: (B,) int32; pos: () int32 shared
+    position, or (B,) int32 per-sequence positions (continuous batching:
+    every slot decodes at its own depth in its own request).
 
     Returns (logits (B, V), new_state). For the linear backends the cost
     is O(k²) per layer — independent of pos (paper's fast lookup).
@@ -427,6 +429,136 @@ def generate(
     (_, state_f, _, _), toks = jax.lax.scan(
         step, (tok0, state, pos0, key), None, length=n_steps)
     return jnp.moveaxis(toks, 0, 1), state_f
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: slot-masked segments + slot state swaps
+# ---------------------------------------------------------------------------
+#
+# The whole-stack decode state is {"stack": …, "tail": …} where "stack"
+# leaves carry (reps, S, …) and "tail" leaves (S, …) — the slot (batch)
+# axis is 1 and 0 respectively. The two helpers below are the only places
+# that encode this axis arithmetic.
+
+def _over_slots(fn, a: Any, b: Any) -> Any:
+    """Map ``fn(leaf_a, leaf_b, slot_axis)`` over two whole-stack states."""
+    stack = tuple(
+        jax.tree.map(lambda x, y: fn(x, y, 1), sa, sb)
+        for sa, sb in zip(a["stack"], b["stack"]))
+    tail = tuple(
+        jax.tree.map(lambda x, y: fn(x, y, 0), ta, tb)
+        for ta, tb in zip(a["tail"], b["tail"]))
+    return {"stack": stack, "tail": tail}
+
+
+def where_state(active: Array, new: Any, old: Any) -> Any:
+    """Per-slot select over a whole-stack decode state: slots where
+    ``active`` is False keep their old state bit-for-bit (a parked or
+    finished request must not advance while its neighbours decode).
+
+    Cost: one select per state leaf. O(k²) per layer for the linear
+    family (why slot masking is cheap for this paper's states); for the
+    softmax baseline the select spans the full (S, max_len, Hkv, Dh)
+    caches even though the step wrote one row — acceptable for the
+    baseline, but a row-level mask inside ``attention_decode`` would be
+    needed to serve softmax competitively at large max_len."""
+    def sel(n, o, axis):
+        shape = [1] * n.ndim
+        shape[axis] = active.shape[0]
+        return jnp.where(active.reshape(shape), n, o)
+
+    return _over_slots(sel, new, old)
+
+
+def write_slot_state(engine_state: Any, request_state: Any,
+                     slot: Array) -> Any:
+    """Swap a batch-1 request state into slot ``slot`` of the stacked
+    engine state.
+
+    This is the admission cost model of the serving engine: one
+    ``dynamic_update_slice`` per state leaf. For the linear family every
+    leaf is the paper's fixed-size representation, so admitting a request
+    is an O(k²)-per-layer copy — independent of how much context the
+    request has consumed — where a KV-cache backend moves O(T·k) bytes.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def write(e, r, axis):
+        start = [jnp.int32(0)] * e.ndim
+        start[axis] = slot
+        return jax.lax.dynamic_update_slice(e, r.astype(e.dtype), start)
+
+    return _over_slots(write, engine_state, request_state)
+
+
+def generate_segment(
+    params: Params,
+    state: Any,
+    tok: Array,
+    pos: Array,
+    active: Array,
+    remaining: Array,
+    n_steps: int,
+    cfg: ModelConfig,
+    rules: Rules,
+    *,
+    eos_id: Optional[int] = None,
+    temperature: float = 0.0,
+    key: Optional[Array] = None,
+    pad_id: int = -1,
+) -> Tuple[Array, Dict[str, Any]]:
+    """One continuous-batching segment: ``n_steps`` slot-masked decode
+    steps as a single ``lax.scan`` dispatch.
+
+    Unlike :func:`generate` (one-shot batch semantics: every row starts
+    and stops together), each slot here carries its own lifecycle:
+    tok (S,) is the next input token per slot, pos (S,) its per-slot
+    position, active (S,) bool whether the slot holds a live request, and
+    remaining (S,) int32 how many tokens the slot may still emit
+    (including this step's). A slot stops *inside* the scan when its
+    budget hits zero or it emits ``eos_id``; stopped/empty slots emit
+    ``pad_id`` and their state is frozen bit-for-bit, so per-slot outputs
+    are exactly what the request would produce running alone (greedy).
+
+    Returns (tokens (S, n_steps), carry) where carry = {"tok", "pos",
+    "active", "remaining", "state", "key"} feeds the next segment after
+    the host scheduler drains finished slots and admits new requests.
+    """
+    greedy = not (temperature and temperature > 0.0)
+    if key is None:
+        if not greedy:
+            raise ValueError("temperature sampling needs a PRNG key")
+        key = jax.random.PRNGKey(0)  # carried but never consumed
+    tok = tok.astype(jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    active = jnp.asarray(active, jnp.bool_)
+    remaining = jnp.asarray(remaining, jnp.int32)
+    params = cast_params(params, _dtype(cfg.dtype))
+
+    def step(carry, _):
+        tok, st, pos, act, rem, k = carry
+        logits, st_new = decode_step(params, st, tok, pos, cfg, rules)
+        if greedy:
+            sub = None          # no PRNG consumed in the hot loop
+        else:
+            k, sub = jax.random.split(k)
+        nxt = sample_token(logits, temperature, sub)
+        emitted = jnp.where(act, nxt, pad_id)
+        rem = jnp.where(act, rem - 1, rem)
+        done = rem <= 0
+        if eos_id is not None:
+            done = done | (nxt == eos_id)
+        st = where_state(act, st_new, st)
+        pos = jnp.where(act, pos + 1, pos)
+        tok = jnp.where(act, nxt, tok)
+        return (tok, st, pos, act & ~done, rem, k), emitted
+
+    carry0 = (tok, state, pos, active, remaining, key)
+    (tok_f, st_f, pos_f, act_f, rem_f, key_f), toks = jax.lax.scan(
+        step, carry0, None, length=n_steps)
+    return jnp.moveaxis(toks, 0, 1), {
+        "tok": tok_f, "pos": pos_f, "active": act_f,
+        "remaining": rem_f, "state": st_f, "key": key_f}
 
 
 def decode_window(

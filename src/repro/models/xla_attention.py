@@ -359,9 +359,10 @@ def decode_attention(
     """Single-token decode against a KV cache.
 
     q: (B, G, Hkv, D); k_cache, v_cache: (B, Hkv, S, D); cache_len: ()
-    number of valid cache entries. Returns (B, G, Hkv, D). This is the
-    O(n)-per-token lookup the paper's linear mechanism replaces with an
-    O(k²) state read.
+    number of valid cache entries, or (B,) per-sequence lengths (slots
+    of a continuous-batching engine sit at different depths). Returns
+    (B, G, Hkv, D). This is the O(n)-per-token lookup the paper's linear
+    mechanism replaces with an O(k²) state read.
     """
     d = q.shape[-1]
     s = k_cache.shape[2]
@@ -371,8 +372,9 @@ def decode_attention(
         "bghd,bhsd->bghs", q.astype(jnp.float32) * scale,
         k_cache.astype(jnp.float32),
     )
-    valid = jnp.arange(s) < cache_len
-    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    cl = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (q.shape[0],))
+    valid = jnp.arange(s)[None, :] < cl[:, None]          # (B, S)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum(
         "bghs,bhsd->bghd", p, v_cache.astype(jnp.float32)

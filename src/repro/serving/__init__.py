@@ -1,0 +1,9 @@
+"""Continuous-batching serving engine (the paper's §2.2 "extreme query
+loads" scenario as a slot-scheduled decode system)."""
+
+from repro.serving.engine import (  # noqa: F401
+    Completion,
+    DecodeEngine,
+    EngineStats,
+    Request,
+)

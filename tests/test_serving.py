@@ -1,0 +1,380 @@
+"""Continuous-batching serving engine + decode-path edge cases.
+
+Acceptance contract of the engine (ISSUE 2):
+
+* per-slot outputs under admission/eviction churn are BIT-IDENTICAL
+  (greedy) to running each request alone — inactive slots are masked
+  inside the scan, so sharing the device never changes a request's
+  tokens;
+* the gen_len=1 / n_steps=0 edges of ``lm.generate`` and serve.py's
+  output assembly;
+* ``lm.pad_decode_state`` + softmax decode past the prompt on STACKED
+  states (the ``st.k_cache.ndim - 3`` axis arithmetic);
+* the decode-path numerics fixes (sign-preserving normaliser clamp, the
+  non-TPU fused-kernel fallback).
+"""
+
+import argparse
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.linear_attention import safe_denom
+from repro.models import attention as A
+from repro.models import lm
+from repro.serving import DecodeEngine
+from repro.serving.engine import PAD_ID
+from repro.sharding import Rules
+
+RULES = Rules.null()
+
+
+def _standalone(params, cfg, prompt, gen_len, max_len, eos_id=None):
+    """Reference: the request running alone (prefill → greedy generate),
+    truncated at the first EOS like the engine truncates."""
+    logits, st = lm.prefill(params, jnp.asarray(prompt)[None], cfg, RULES)
+    st = lm.pad_decode_state(st, cfg, max_len=max_len)
+    tok0 = int(jnp.argmax(logits, -1)[0])
+    toks = [tok0]
+    if gen_len > 1 and not (eos_id is not None and tok0 == eos_id):
+        more, _ = lm.generate(params, st, jnp.asarray([tok0], jnp.int32),
+                              len(prompt), gen_len - 1, cfg, RULES)
+        toks += [int(t) for t in np.asarray(more)[0]]
+    if eos_id is not None and eos_id in toks:
+        toks = toks[:toks.index(eos_id) + 1]
+    return toks
+
+
+def _make_workload(cfg, n=6, prompt_len=8, seed=0):
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, size=prompt_len,
+                            dtype=np.int64).astype(np.int32)
+               for _ in range(n)]
+    gens = [5, 12, 3, 9, 1, 7][:n]
+    return prompts, gens
+
+
+class TestEngineBitIdentity:
+    """Slot execution == run-alone execution, token for token."""
+
+    @pytest.mark.parametrize("backend",
+                             ["linear", "gated_linear", "softmax"])
+    def test_matches_standalone(self, key, backend):
+        cfg = get_smoke_config("yi-34b").with_backend(backend)
+        params = lm.init_params(key, cfg)
+        prompts, gens = _make_workload(cfg)
+        refs = [_standalone(params, cfg, p, g, 64)
+                for p, g in zip(prompts, gens)]
+
+        eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                           max_len=64)
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g)
+        comps = eng.run("continuous")
+        assert len(comps) == len(refs)
+        for c, ref in zip(comps, refs):
+            np.testing.assert_array_equal(c.tokens, np.asarray(ref))
+            assert c.finish_reason == "length"
+        # the mixed-length workload actually exercised slot churn
+        assert eng.stats.prefills == len(refs)
+        assert 0.0 < eng.stats.slot_utilization < 1.0
+
+    def test_static_policy_same_outputs(self, key):
+        cfg = get_smoke_config("yi-34b").with_backend("linear")
+        params = lm.init_params(key, cfg)
+        prompts, gens = _make_workload(cfg)
+        eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                           max_len=64)
+        outs = {}
+        for policy in ("continuous", "static"):
+            eng.reset()
+            for p, g in zip(prompts, gens):
+                eng.submit(p, g)
+            outs[policy] = eng.run(policy)
+        for a, b in zip(outs["continuous"], outs["static"]):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+        # scheduling differs even though outputs don't
+        assert eng.stats.segments > 0
+
+    def test_staggered_arrivals(self, key):
+        """Arrival times delay admission but never change outputs."""
+        cfg = get_smoke_config("yi-34b").with_backend("linear")
+        params = lm.init_params(key, cfg)
+        prompts, gens = _make_workload(cfg, n=4)
+        refs = [_standalone(params, cfg, p, g, 64)
+                for p, g in zip(prompts, gens)]
+        eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                           max_len=64)
+        for i, (p, g) in enumerate(zip(prompts, gens)):
+            eng.submit(p, g, arrival=6.0 * i)
+        comps = eng.run("continuous")
+        for c, ref in zip(comps, refs):
+            np.testing.assert_array_equal(c.tokens, np.asarray(ref))
+
+    def test_eos_stops_slot_midsegment(self, key):
+        """A slot emitting EOS frees itself inside the scan; the output
+        is truncated at (and includes) the EOS token."""
+        cfg = get_smoke_config("yi-34b").with_backend("linear")
+        params = lm.init_params(key, cfg)
+        prompts, gens = _make_workload(cfg, n=3)
+        gens = [12, 12, 12]
+        plain = [_standalone(params, cfg, p, g, 64)
+                 for p, g in zip(prompts, gens)]
+        # pick an EOS id that actually occurs mid-generation
+        eos_id = next(t for toks in plain for t in toks[1:-1])
+        refs = [_standalone(params, cfg, p, g, 64, eos_id=eos_id)
+                for p, g in zip(prompts, gens)]
+        assert any(len(r) < g for r, g in zip(refs, gens))
+
+        eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                           max_len=64, eos_id=eos_id)
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g)
+        comps = eng.run("continuous")
+        for c, ref in zip(comps, refs):
+            np.testing.assert_array_equal(c.tokens, np.asarray(ref))
+            expect = "eos" if ref[-1] == eos_id else "length"
+            assert c.finish_reason == expect
+
+    def test_instant_completions_dont_waste_slots(self, key):
+        """Requests completing at admission (gen_len=1) must not consume
+        a slot's admission turn: the same pass keeps feeding the slot,
+        and the clock never fast-forwards past admissible work."""
+        cfg = get_smoke_config("yi-34b").with_backend("linear")
+        params = lm.init_params(key, cfg)
+        prompts, _ = _make_workload(cfg, n=4)
+        eng = DecodeEngine(params, cfg, n_slots=1, segment_len=4,
+                           max_len=64)
+        for p, g in zip(prompts, [1, 1, 1, 5]):
+            eng.submit(p, g)
+        comps = eng.run("continuous")
+        assert len(comps) == 4
+        # the real request was admitted at t=0, not after an idle skip
+        assert comps[3].admitted_step == 0
+
+    def test_out_of_order_arrivals_not_blocked(self, key):
+        """An early-arriving request submitted after a far-future one is
+        admitted first (queue is sorted by arrival, not submit order)."""
+        cfg = get_smoke_config("yi-34b").with_backend("linear")
+        params = lm.init_params(key, cfg)
+        prompts, _ = _make_workload(cfg, n=2)
+        eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                           max_len=64)
+        late = eng.submit(prompts[0], 5, arrival=100.0)
+        early = eng.submit(prompts[1], 5, arrival=0.0)
+        comps = {c.uid: c for c in eng.run("continuous")}
+        assert comps[early].admitted_step == 0
+        assert comps[late].admitted_step >= 100
+
+    def test_gen_len_one_completes_at_admission(self, key):
+        cfg = get_smoke_config("yi-34b").with_backend("linear")
+        params = lm.init_params(key, cfg)
+        prompts, _ = _make_workload(cfg, n=2)
+        eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                           max_len=64)
+        for p in prompts:
+            eng.submit(p, 1)
+        comps = eng.run("continuous")
+        assert [len(c.tokens) for c in comps] == [1, 1]
+        assert eng.stats.segments == 0      # never touched the scan
+        for c, p in zip(comps, prompts):
+            ref = _standalone(params, cfg, p, 1, 64)
+            np.testing.assert_array_equal(c.tokens, np.asarray(ref))
+
+
+class TestGenerateSegment:
+    """The slot-masked scan segment in isolation."""
+
+    def test_inactive_slots_frozen(self, key):
+        """Masked slots emit PAD_ID and their state/pos/tok stay
+        bit-identical through the scan."""
+        cfg = get_smoke_config("yi-34b").with_backend("linear")
+        params = lm.init_params(key, cfg)
+        state = lm.init_decode_state(cfg, batch=2, max_len=16)
+        tok = jnp.asarray([3, 7], jnp.int32)
+        pos = jnp.asarray([0, 5], jnp.int32)
+        active = jnp.asarray([True, False])
+        remaining = jnp.asarray([8, 8], jnp.int32)
+        toks, carry = lm.generate_segment(
+            params, state, tok, pos, active, remaining, 4, cfg, RULES)
+        assert toks.shape == (2, 4)
+        assert bool(jnp.all(toks[1] == PAD_ID))
+        assert bool(jnp.all(toks[0] != PAD_ID))
+        assert int(carry["pos"][1]) == 5 and int(carry["tok"][1]) == 7
+        # slot 1 frozen bit-for-bit (stack leaves: slot axis 1; tail: 0)
+        for leaf_new, leaf_old in zip(
+                jax.tree.leaves(carry["state"]["stack"]),
+                jax.tree.leaves(state["stack"])):
+            np.testing.assert_array_equal(np.asarray(leaf_new[:, 1]),
+                                          np.asarray(leaf_old[:, 1]))
+        for leaf_new, leaf_old in zip(
+                jax.tree.leaves(carry["state"]["tail"]),
+                jax.tree.leaves(state["tail"])):
+            np.testing.assert_array_equal(np.asarray(leaf_new[1]),
+                                          np.asarray(leaf_old[1]))
+
+    def test_budget_stops_inside_scan(self, key):
+        cfg = get_smoke_config("yi-34b").with_backend("linear")
+        params = lm.init_params(key, cfg)
+        state = lm.init_decode_state(cfg, batch=2, max_len=16)
+        tok = jnp.zeros((2,), jnp.int32)
+        pos = jnp.zeros((2,), jnp.int32)
+        active = jnp.asarray([True, True])
+        remaining = jnp.asarray([2, 6], jnp.int32)
+        toks, carry = lm.generate_segment(
+            params, state, tok, pos, active, remaining, 6, cfg, RULES)
+        row0 = np.asarray(toks[0])
+        assert (row0 != PAD_ID).sum() == 2          # budget honoured
+        assert bool(np.all(row0[2:] == PAD_ID))     # then padded
+        assert not bool(carry["active"][0])
+        assert not bool(carry["active"][1])         # 6 steps used 6 budget
+        assert int(carry["pos"][0]) == 2
+
+    def test_write_slot_state_roundtrip(self, key):
+        """write_slot_state targets exactly one slot of every leaf."""
+        cfg = get_smoke_config("yi-34b").with_backend("softmax")
+        engine_state = lm.init_decode_state(cfg, batch=3, max_len=8)
+        req_state = jax.tree.map(
+            lambda x: jnp.ones_like(x),
+            lm.init_decode_state(cfg, batch=1, max_len=8))
+        out = lm.write_slot_state(engine_state, req_state, 1)
+        for leaf in jax.tree.leaves(out["tail"]):
+            assert bool(jnp.all(leaf[1] == 1))
+            assert bool(jnp.all(leaf[0] == 0)) and \
+                bool(jnp.all(leaf[2] == 0))
+        for leaf in jax.tree.leaves(out["stack"]):
+            assert bool(jnp.all(leaf[:, 1] == 1))
+            assert bool(jnp.all(leaf[:, 0] == 0)) and \
+                bool(jnp.all(leaf[:, 2] == 0))
+
+
+class TestPadDecodeState:
+    """pad_decode_state + softmax decode past the prompt on stacked
+    states — the ``st.k_cache.ndim - 3`` axis arithmetic."""
+
+    def test_stacked_pad_then_decode_matches_forward(self, key):
+        cfg = get_smoke_config("yi-34b").with_backend("softmax")
+        b, t_p, extra = 2, 6, 5
+        params = lm.init_params(key, cfg)
+        tokens = jax.random.randint(key, (b, t_p + extra), 0,
+                                    cfg.vocab_size)
+        # teacher-forced reference: full forward over the whole sequence
+        full_logits, _, _ = lm.forward(params, tokens, cfg, RULES)
+        _, states = lm.prefill(params, tokens[:, :t_p], cfg, RULES)
+        # stacked leaves are (reps, B, S, Hkv, Dh): pad must hit axis 2
+        kc = states["stack"][0].k_cache
+        assert kc.ndim == 5 and kc.shape[2] == t_p
+        states = lm.pad_decode_state(states, cfg, max_len=t_p + extra)
+        assert states["stack"][0].k_cache.shape[2] == t_p + extra
+
+        # decode strictly past the prompt, teacher-forcing known tokens
+        st = states
+        for i in range(extra - 1):
+            logits, st = lm.decode_step(
+                params, st, tokens[:, t_p + i], jnp.int32(t_p + i),
+                cfg, RULES)
+            # bf16 activations; blocked-flash prefill vs cache decode
+            np.testing.assert_allclose(
+                np.asarray(logits, np.float32),
+                np.asarray(full_logits[:, t_p + i], np.float32),
+                rtol=5e-2, atol=5e-2)
+
+    def test_pad_noop_for_linear_state(self, key):
+        cfg = get_smoke_config("yi-34b").with_backend("linear")
+        params = lm.init_params(key, cfg)
+        prompt = jax.random.randint(key, (1, 4), 0, cfg.vocab_size)
+        _, states = lm.prefill(params, prompt, cfg, RULES)
+        padded = lm.pad_decode_state(states, cfg, max_len=128)
+        for a, b_ in zip(jax.tree.leaves(states), jax.tree.leaves(padded)):
+            assert a.shape == b_.shape
+
+
+class TestGenerateEdges:
+    """gen_len=1 / n_steps=0 edges of generate + serve.py assembly."""
+
+    def test_generate_zero_steps(self, key):
+        cfg = get_smoke_config("yi-34b").with_backend("linear")
+        params = lm.init_params(key, cfg)
+        state = lm.init_decode_state(cfg, batch=2, max_len=16)
+        toks, st = lm.generate(params, state, jnp.zeros((2,), jnp.int32),
+                               0, 0, cfg, RULES)
+        assert toks.shape == (2, 0)
+        for a, b_ in zip(jax.tree.leaves(st), jax.tree.leaves(state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+    @pytest.mark.parametrize("backend", ["linear", "softmax"])
+    def test_serve_generate_gen_len_one(self, backend):
+        from repro.launch import serve
+        args = argparse.Namespace(
+            arch="yi-34b", smoke=True, backend=backend, batch=2,
+            prompt_len=8, gen_len=1, temperature=0.0, seed=0)
+        assert serve.generate(args) == 0
+
+    def test_serve_stream_smoke(self):
+        from repro.launch import serve
+        args = argparse.Namespace(
+            arch="yi-34b", smoke=True, backend="linear", slots=2,
+            segment_len=4, n_requests=5, arrival_rate=0.4,
+            prompt_len=8, gen_len=12, temperature=0.0, seed=0)
+        assert serve.stream(args) == 0
+
+
+class TestDecodeNumerics:
+    """The decode-path correctness sweep."""
+
+    def test_safe_denom_sign_preserving(self):
+        d = jnp.asarray([2.0, 1e-9, 0.0, -1e-9, -2.0])
+        out = np.asarray(safe_denom(d, 1e-6))
+        np.testing.assert_allclose(
+            out, [2.0, 1e-6, 1e-6, -1e-6, -2.0])
+        assert bool(np.all(np.abs(out) >= 1e-6))
+
+    def test_identity_feature_map_normalized_decode_finite(self, key):
+        """feature_map='identity' q·z can be ~0 or negative; the old
+        additive eps blew the normalised output up. The clamp keeps the
+        whole generation finite."""
+        cfg = dataclasses.replace(
+            get_smoke_config("yi-34b").with_backend("linear"),
+            feature_map="identity", linear_normalize=True)
+        params = lm.init_params(key, cfg)
+        state = lm.init_decode_state(cfg, batch=2, max_len=32)
+        toks, st = lm.generate(params, state, jnp.zeros((2,), jnp.int32),
+                               0, 16, cfg, RULES)
+        assert bool(jnp.all((toks >= 0) & (toks < cfg.vocab_size)))
+        for leaf in jax.tree.leaves(st):
+            assert bool(jnp.all(jnp.isfinite(
+                leaf.astype(jnp.float32))))
+
+    def test_prefill_state_z_guarded(self, key):
+        """The prefill normaliser is only computed when it is used, and
+        equals the plain key sum when it is."""
+        cfg = dataclasses.replace(
+            get_smoke_config("yi-34b").with_backend("linear"),
+            linear_normalize=False)
+        params = lm.init_params(key, cfg)
+        prompt = jax.random.randint(key, (2, 6), 0, cfg.vocab_size)
+        _, states = lm.prefill(params, prompt, cfg, RULES)
+        assert states["stack"][0].z is None
+
+    def test_fused_fallback_warns_off_tpu(self, monkeypatch):
+        """decode_kernel='fused' on a backend that cannot lower the TPU
+        Pallas kernels falls back to the reference path with ONE
+        warning instead of crashing."""
+        cfg = get_smoke_config("yi-34b").with_backend("linear")
+        cfg = dataclasses.replace(cfg, decode_kernel="fused")
+        monkeypatch.setattr(jax, "default_backend", lambda: "gpu")
+        A._FUSED_FALLBACK_WARNED.discard("gpu")
+        with pytest.warns(RuntimeWarning, match="falling back"):
+            assert A._use_fused_decode(cfg) is False
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")      # second call is silent
+            assert A._use_fused_decode(cfg) is False
+        A._FUSED_FALLBACK_WARNED.discard("gpu")
+        # cpu + tpu still take the kernel path
+        monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+        assert A._use_fused_decode(cfg) is True
