@@ -26,6 +26,17 @@ Three modes:
   family), so a long straggler no longer idles the rest of the batch.
   Reports aggregate tokens/s and slot utilization.
 
+* ``spec`` — speculative lookahead decoding through the slot engine: a
+  draft provider proposes K tokens per round and ONE ``lm.decode_window``
+  launch verifies the whole window per slot (the paper's fixed-size
+  state makes verify/rewind an O(k²) copy instead of a KV-cache replay).
+  Greedy outputs are exactly the plain-greedy tokens — the mode runs the
+  same workload plain first and asserts token equality, then reports the
+  acceptance rate and the speculative/plain tokens/s ratio.
+  ``--draft ngram`` (default) drafts by prompt-lookup suffix matching at
+  zero device cost; ``--draft model`` drafts with a second (here:
+  same-config) LM through its own fixed-size slot states.
+
 * ``retrieve`` — the §2.2 mass-query scenario: encode documents into the
   fixed-size DocumentStore once, then answer query streams at O(k²) each.
 
@@ -33,6 +44,8 @@ Three modes:
       --backend linear --prompt-len 64 --gen-len 32 --batch 4
   PYTHONPATH=src python -m repro.launch.serve --mode stream --smoke \
       --backend linear --slots 4 --n-requests 16 --arrival-rate 0.5
+  PYTHONPATH=src python -m repro.launch.serve --mode spec --smoke \
+      --backend linear --slots 4 --n-requests 8 --speculate-k 6
 """
 
 from __future__ import annotations
@@ -165,6 +178,72 @@ def stream(args) -> int:
     return 0
 
 
+def spec(args) -> int:
+    """Speculative lookahead vs plain continuous batching, same workload."""
+    import dataclasses
+
+    from repro.serving import DecodeEngine, ModelDraft, NgramDraft
+
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch))
+    if args.backend:
+        cfg = cfg.with_backend(args.backend)
+    # fp32 activations: the mode ASSERTS spec == plain greedy, and the
+    # windowed verify accumulates in a different association order than
+    # the sequential step — fp32 keeps argmax margins above that noise
+    # (bf16 could flip a near-tie and fail the assert spuriously)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    rules = Rules.null()
+    root = jax.random.PRNGKey(args.seed)
+    params = lm.init_params(jax.random.fold_in(root, 0), cfg)
+
+    k = args.speculate_k
+    max_len = args.prompt_len + args.gen_len + max(args.segment_len, k) + 1
+    if args.draft == "ngram":
+        draft = NgramDraft()
+    else:
+        dparams = lm.init_params(jax.random.fold_in(root, 1), cfg)
+        draft = ModelDraft(dparams, cfg, rules, n_slots=args.slots,
+                           max_len=max_len)
+    engine = DecodeEngine(
+        params, cfg, rules, n_slots=args.slots,
+        segment_len=args.segment_len, max_len=max_len, seed=args.seed,
+        draft=draft)
+    rng = np.random.default_rng(args.seed)
+    requests = [(rng.integers(0, cfg.vocab_size, size=args.prompt_len,
+                              dtype=np.int64).astype(np.int32),
+                 args.gen_len) for _ in range(args.n_requests)]
+
+    def run_once(speculate_k):
+        engine.reset()
+        for prompt, g in requests:
+            engine.submit(prompt, g, speculate_k=speculate_k)
+        t0 = time.perf_counter()
+        comps = engine.run("continuous")
+        return comps, time.perf_counter() - t0
+
+    run_once(k)                                   # compile both paths
+    run_once(0)
+    comps_plain, t_plain = run_once(0)
+    comps_spec, t_spec = run_once(k)
+    for a, b in zip(comps_plain, comps_spec):
+        assert np.array_equal(a.tokens, b.tokens), \
+            f"speculative decode diverged from plain greedy on {a.uid}"
+
+    total = sum(len(c.tokens) for c in comps_spec)
+    st = engine.stats
+    print(f"arch={cfg.name} backend={cfg.attention_backend} "
+          f"slots={args.slots} speculate_k={k} draft={args.draft}")
+    print(f"spec:  {total} tokens in {t_spec:.2f} s "
+          f"({total/t_spec:.0f} tok/s) — acceptance "
+          f"{st.acceptance_rate:.2f}, {st.spec_rounds} rounds, "
+          f"{st.spec_rewinds} rewinds")
+    print(f"plain: {total} tokens in {t_plain:.2f} s "
+          f"({total/t_plain:.0f} tok/s) — speculative speedup "
+          f"{t_plain/t_spec:.2f}x, outputs bit-identical")
+    return 0
+
+
 def retrieve(args) -> int:
     """Encode-once / query-many with the DocumentStore."""
     from repro.core import DocumentState, DocumentStore
@@ -193,7 +272,7 @@ def retrieve(args) -> int:
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="generate",
-                    choices=["generate", "stream", "retrieve"])
+                    choices=["generate", "stream", "spec", "retrieve"])
     ap.add_argument("--arch", default="yi-34b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--backend", default=None,
@@ -210,9 +289,18 @@ def main() -> int:
     ap.add_argument("--n-requests", type=int, default=16)
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="requests per decode step (0 = all at t=0)")
+    # spec mode (speculative lookahead)
+    ap.add_argument("--speculate-k", type=int, default=6,
+                    help="draft tokens per verify round")
+    ap.add_argument("--draft", default="ngram",
+                    choices=["ngram", "model"],
+                    help="draft provider: prompt-lookup n-grams (free) "
+                         "or a second LM with its own slot states")
     args = ap.parse_args()
     if args.mode == "stream":
         return stream(args)
+    if args.mode == "spec":
+        return spec(args)
     return generate(args) if args.mode == "generate" else retrieve(args)
 
 

@@ -270,9 +270,14 @@ def _merge_heads(p: Params, o: Array, cfg: ModelConfig, x_dtype) -> Array:
 
 def _rope(q: Array, k: Array, positions: Array, cfg: ModelConfig
           ) -> Tuple[Array, Array]:
-    """positions: (T,) or (B,) for decode; q (B,G,Hkv,T,D), k (B,Hkv,T,D)."""
+    """positions: (T,) shared, (B,) single-token decode, or (B, T)
+    per-sequence windows (speculative verify: every slot's window starts
+    at its own depth); q (B,G,Hkv,T,D), k (B,Hkv,T,D)."""
     cos, sin = L.rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
-    if positions.ndim == 1 and q.shape[3] == positions.shape[0]:
+    if positions.ndim == 2:                              # (B, T) window
+        c = cos[:, None, None]                           # (B,1,1,T,D/2)
+        s = sin[:, None, None]
+    elif positions.ndim == 1 and q.shape[3] == positions.shape[0]:
         c = cos[None, None, None]                        # (1,1,1,T,D/2)
         s = sin[None, None, None]
     else:                                                # decode: (B,)
@@ -606,12 +611,13 @@ def attention_decode_window(
 ) -> Tuple[Array, AttnState]:
     """Decode W known tokens in one fused kernel launch.
 
-    x: (B, W, D) token activations; pos0: () position of the first.
-    Linear family only — the fixed-size state advances W steps inside
-    the kernel with the state VMEM-resident, so per-window HBM state
-    traffic is O(Dk·Dv) instead of O(W·Dk·Dv). The softmax KV-cache
-    backend has no such recurrence; callers fall back to scanning
-    single-token decode (see blocks.block_decode_window).
+    x: (B, W, D) token activations; pos0: () position of the first, or
+    (B,) per-sequence window start positions (speculative verify in the
+    slot engine). Linear family only — the fixed-size state advances W
+    steps inside the kernel with the state VMEM-resident, so per-window
+    HBM state traffic is O(Dk·Dv) instead of O(W·Dk·Dv). The softmax
+    KV-cache backend has no such recurrence; callers fall back to
+    scanning single-token decode (see blocks.block_decode_window).
     """
     backend = cfg.attention_backend
     assert backend in ("linear", "gated_linear"), backend
@@ -620,7 +626,9 @@ def attention_decode_window(
     g = h // hkv
     q, k, v = _project_qkv(p, x, cfg, rules)
     if cfg.rope:
-        positions = pos0 + jnp.arange(w)
+        pos0 = jnp.asarray(pos0, jnp.int32)
+        positions = (pos0[:, None] + jnp.arange(w) if pos0.ndim == 1
+                     else pos0 + jnp.arange(w))
         q, k = _rope(q, k, positions, cfg)
 
     qf = feature_map(q, cfg.feature_map)       # (B, G, Hkv, W, Dh)

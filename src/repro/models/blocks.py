@@ -237,13 +237,16 @@ def block_decode_window(
     *,
     shared: Optional[Params] = None,
 ) -> Tuple[Array, Any]:
-    """x: (B, W, D) — W known tokens per sequence. Returns (x, new_state).
+    """x: (B, W, D) — W known tokens per sequence; pos0: () shared
+    window start or (B,) per-sequence starts (speculative verify in the
+    slot engine). Returns (x, new_state).
 
     Attention blocks under the linear backends advance their fixed-size
     state W steps inside ONE fused recurrent kernel; cross blocks are
     position-independent lookups against static memory; every other kind
     (softmax KV cache, Mamba, RWKV) falls back to scanning the
-    single-token ``block_decode`` over the window.
+    single-token ``block_decode`` over the window — per-slot positions
+    flow through ``pos0 + w`` into the per-slot KV-cache row writes.
     """
     if kind == "shared_attn":
         p = shared

@@ -451,6 +451,58 @@ def _over_slots(fn, a: Any, b: Any) -> Any:
     return {"stack": stack, "tail": tail}
 
 
+def _map_slots(fn, a: Any) -> Any:
+    """Map ``fn(leaf, slot_axis)`` over one whole-stack state."""
+    stack = tuple(jax.tree.map(lambda x: fn(x, 1), sa)
+                  for sa in a["stack"])
+    tail = tuple(jax.tree.map(lambda x: fn(x, 0), ta)
+                 for ta in a["tail"])
+    return {"stack": stack, "tail": tail}
+
+
+def snapshot_state(state: Any, slot: Array) -> Any:
+    """Extract slot ``slot`` of a stacked engine state as a batch-1
+    whole-stack state: one ``dynamic_slice`` per leaf, the inverse of
+    :func:`restore_state`.
+
+    This is the speculative-decoding rewind primitive: a slot's state is
+    snapshotted before a verify window, and on draft rejection the
+    accepted prefix is re-advanced from the snapshot. For the linear
+    family a snapshot is the paper's fixed-size representation —
+    O(k²) per layer regardless of how much context the slot has
+    consumed — which is what makes rewind cheap (a KV-cache backend
+    copies O(max_len·k) bytes instead).
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def read(x, axis):
+        start = [jnp.int32(0)] * x.ndim
+        start[axis] = slot
+        size = list(x.shape)
+        size[axis] = 1
+        return jax.lax.dynamic_slice(x, start, size)
+
+    return _map_slots(read, state)
+
+
+def restore_state(engine_state: Any, snapshot: Any, slot: Array) -> Any:
+    """Write a batch-1 whole-stack state into slot ``slot`` of the
+    stacked engine state: one ``dynamic_update_slice`` per leaf.
+
+    Shared by engine admission (swap in a freshly prefilled request) and
+    speculative rewind (put a re-advanced snapshot back); the two are the
+    same O(k²)-per-layer copy for the linear family.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def write(e, r, axis):
+        start = [jnp.int32(0)] * e.ndim
+        start[axis] = slot
+        return jax.lax.dynamic_update_slice(e, r.astype(e.dtype), start)
+
+    return _over_slots(write, engine_state, snapshot)
+
+
 def where_state(active: Array, new: Any, old: Any) -> Any:
     """Per-slot select over a whole-stack decode state: slots where
     ``active`` is False keep their old state bit-for-bit (a parked or
@@ -480,15 +532,11 @@ def write_slot_state(engine_state: Any, request_state: Any,
     leaf is the paper's fixed-size representation, so admitting a request
     is an O(k²)-per-layer copy — independent of how much context the
     request has consumed — where a KV-cache backend moves O(T·k) bytes.
+
+    (Alias of :func:`restore_state` — admission and speculative rewind
+    share one slot-write primitive.)
     """
-    slot = jnp.asarray(slot, jnp.int32)
-
-    def write(e, r, axis):
-        start = [jnp.int32(0)] * e.ndim
-        start[axis] = slot
-        return jax.lax.dynamic_update_slice(e, r.astype(e.dtype), start)
-
-    return _over_slots(write, engine_state, request_state)
+    return restore_state(engine_state, request_state, slot)
 
 
 def generate_segment(
@@ -571,12 +619,18 @@ def decode_window(
 ) -> Tuple[Array, Any]:
     """Advance the decode state over W KNOWN tokens in one dispatch.
 
-    tokens: (B, W) int32; pos0: () position of tokens[:, 0]. Returns
-    (logits (B, W, V), new_state). Under the linear backends each
-    attention layer runs its whole window inside one fused recurrent
-    kernel launch (state VMEM-resident across the W steps) — the
-    building block for forced/teacher decoding, scoring, and speculative
-    lookahead verification, where the tokens are available up front.
+    tokens: (B, W) int32; pos0: () shared position of tokens[:, 0], or
+    (B,) per-sequence start positions (speculative verification in the
+    slot engine: every slot verifies a draft window at its own depth).
+    Returns (logits (B, W, V), new_state), where logits[:, i] is the
+    model's next-token distribution after consuming tokens[:, i]. Under
+    the linear backends each attention layer runs its whole window
+    inside one fused recurrent kernel launch (state VMEM-resident across
+    the W steps) — the building block for forced/teacher decoding,
+    scoring, and speculative lookahead verification, where the tokens
+    are available up front. The softmax baseline scans single-token
+    decode over the window (see blocks.block_decode_window), writing its
+    KV cache rows per slot position.
     """
     adt = _dtype(cfg.dtype)
     pattern, reps, tail = cfg.pattern_and_repeats

@@ -7,3 +7,9 @@ from repro.serving.engine import (  # noqa: F401
     EngineStats,
     Request,
 )
+from repro.serving.speculative import (  # noqa: F401
+    DraftProvider,
+    ModelDraft,
+    NgramDraft,
+    ReplayDraft,
+)

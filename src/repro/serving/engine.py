@@ -41,6 +41,23 @@ Admission policies:
 * ``static``     — admit only when ALL slots are free (batch-synchronous
   baseline: the whole batch runs until its longest request finishes).
   Same compiled segment program, so benchmarks isolate scheduling.
+
+Speculative lookahead (per-request policy, ``speculate_k`` on submit):
+
+A speculative request advances through draft/verify ROUNDS instead of
+one-token segment steps. Per round, batched across every speculative
+slot: a draft provider proposes K tokens, ONE ``lm.decode_window``
+launch verifies all K+1 window positions at every slot's own depth
+(per-slot positions), and the longest matching greedy prefix plus the
+target's own next token are emitted — between 1 and K+1 tokens of the
+EXACT plain-greedy sequence per round. Slots that accepted the whole
+window commit the verify state with one masked select; a slot that
+rejected mid-window rewinds by re-advancing the accepted prefix from
+its pre-round snapshot (``lm.snapshot_state``/``lm.restore_state``) —
+cheap because the state is the paper's fixed-size representation, not a
+KV cache. Plain and speculative requests share the slot batch: plain
+slots advance in slot-masked segments with speculative slots frozen,
+and vice versa, so mixing them never changes anyone's tokens.
 """
 
 from __future__ import annotations
@@ -62,11 +79,14 @@ PAD_ID = -1  # emitted by masked slots; never a vocabulary id
 
 @dataclasses.dataclass
 class Request:
-    """One generation request. ``arrival`` is in logical decode steps."""
+    """One generation request. ``arrival`` is in logical decode steps;
+    ``speculate_k`` > 0 decodes through draft/verify rounds (greedy
+    only) instead of one-token segment steps."""
     uid: int
     prompt: np.ndarray            # (P,) int32
     max_new_tokens: int
     arrival: float = 0.0
+    speculate_k: int = 0
 
 
 @dataclasses.dataclass
@@ -86,12 +106,32 @@ class EngineStats:
     prefills: int = 0
     n_slots: int = 0
     segment_len: int = 0
+    # speculative rounds
+    spec_rounds: int = 0          # batched draft/verify rounds
+    spec_drafted: int = 0         # draft tokens proposed to the verifier
+    spec_accepted: int = 0        # draft tokens the target agreed with
+    spec_emitted: int = 0         # tokens emitted by rounds (incl. bonus)
+    spec_rewinds: int = 0         # partial-acceptance snapshot re-advances
 
     @property
     def slot_utilization(self) -> float:
         """Fraction of scanned slot-steps that emitted a real token."""
         total = self.segments * self.n_slots * self.segment_len
         return self.emitted_tokens / total if total else 0.0
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the verifier accepted."""
+        return (self.spec_accepted / self.spec_drafted
+                if self.spec_drafted else 0.0)
+
+    @property
+    def tokens_per_round(self) -> float:
+        """Mean emitted tokens per batched speculative round (summed
+        over speculative slots); the deterministic form of the
+        speculative speedup — plain segments emit n_active per step."""
+        return (self.spec_emitted / self.spec_rounds
+                if self.spec_rounds else 0.0)
 
 
 class DecodeEngine:
@@ -101,9 +141,14 @@ class DecodeEngine:
     reuse the instance — ``reset()`` clears request bookkeeping without
     recompiling — when timing static vs. continuous admission.
 
-    ``max_len`` bounds position (prompt + generated) per request; the
-    softmax baseline sizes its KV caches to it, the linear family's
-    state is O(1) in it.
+    ``max_len`` bounds position (prompt + generated + draft lookahead)
+    per request; the softmax baseline sizes its KV caches to it, the
+    linear family's state is O(1) in it.
+
+    ``draft`` enables speculative requests: any
+    :class:`repro.serving.speculative.DraftProvider` (NgramDraft /
+    ModelDraft / ReplayDraft). Requests opt in per-submit with
+    ``speculate_k``.
     """
 
     def __init__(
@@ -118,6 +163,7 @@ class DecodeEngine:
         eos_id: Optional[int] = None,
         temperature: float = 0.0,
         seed: int = 0,
+        draft: Optional[Any] = None,
     ):
         self.params = params
         self.cfg = cfg
@@ -128,6 +174,7 @@ class DecodeEngine:
         self.eos_id = eos_id
         self.temperature = temperature
         self._seed = seed
+        self.draft = draft
 
         cfg_ = cfg
         rules_ = self.rules
@@ -142,7 +189,7 @@ class DecodeEngine:
 
         @jax.jit
         def _admit(engine_state, request_state, slot):
-            return lm.write_slot_state(engine_state, request_state, slot)
+            return lm.restore_state(engine_state, request_state, slot)
 
         @jax.jit
         def _segment(params, state, tok, pos, active, remaining, key):
@@ -151,9 +198,29 @@ class DecodeEngine:
                 cfg_, rules_, eos_id=eos_id, temperature=temperature,
                 key=key, pad_id=PAD_ID)
 
+        @jax.jit
+        def _verify(params, state, window, pos):
+            # greedy verify: one decode_window launch per layer, every
+            # slot at its own depth; only the argmax tokens leave the
+            # device (the (S, W, V) logits never transfer)
+            logits, st = lm.decode_window(params, state, window, pos,
+                                          cfg_, rules_)
+            return jnp.argmax(logits, -1).astype(jnp.int32), st
+
+        @jax.jit
+        def _select(mask, new, old):
+            return lm.where_state(mask, new, old)
+
+        @jax.jit
+        def _snapshot(state, slot):
+            return lm.snapshot_state(state, slot)
+
         self._prefill = _prefill
         self._admit = _admit
         self._segment = _segment
+        self._verify = _verify
+        self._select = _select
+        self._snapshot = _snapshot
         self.reset()
 
     # ------------------------------------------------------------------
@@ -170,6 +237,7 @@ class DecodeEngine:
         self._pos = np.zeros((s,), np.int32)
         self._active = np.zeros((s,), bool)
         self._remaining = np.zeros((s,), np.int32)
+        self._spec_k = np.zeros((s,), np.int32)
         self._slot_req: List[Optional[Request]] = [None] * s
         self._slot_toks: List[List[int]] = [[] for _ in range(s)]
         self._slot_admitted: List[int] = [0] * s
@@ -178,22 +246,38 @@ class DecodeEngine:
         self._clock = 0
         self._next_uid = 0
         self._key = jax.random.PRNGKey(self._seed)
+        if self.draft is not None:
+            self.draft.reset()
         self.stats = EngineStats(n_slots=self.n_slots,
                                  segment_len=self.segment_len)
 
     def submit(self, prompt, max_new_tokens: int,
-               arrival: float = 0.0) -> int:
+               arrival: float = 0.0, speculate_k: int = 0) -> int:
         """Queue a request; returns its uid. ``arrival`` is in logical
-        decode steps (0 = available immediately)."""
+        decode steps (0 = available immediately). ``speculate_k`` > 0
+        decodes through draft/verify rounds of K proposals (requires the
+        engine to hold a draft provider and greedy decoding — verified
+        speculation preserves the greedy sequence exactly; stochastic
+        sampling would need rejection-sampling machinery)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if max_new_tokens < 1:
             raise ValueError(
                 f"max_new_tokens must be >= 1, got {max_new_tokens}")
-        if len(prompt) + max_new_tokens > self.max_len + 1:
+        if speculate_k < 0:
+            raise ValueError(f"speculate_k must be >= 0, got {speculate_k}")
+        if speculate_k > 0 and self.draft is None:
+            raise ValueError(
+                "speculate_k > 0 needs a draft provider on the engine")
+        if speculate_k > 0 and self.temperature > 0.0:
+            raise ValueError(
+                "speculative decoding is greedy-only (temperature=0)")
+        # speculative verify probes up to speculate_k tokens past the
+        # last emitted one; the softmax KV caches must have room for it
+        if len(prompt) + max_new_tokens + speculate_k > self.max_len + 1:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new_tokens "
-                f"({max_new_tokens}) exceeds engine max_len "
-                f"{self.max_len} + 1")
+                f"({max_new_tokens}) + speculate_k ({speculate_k}) "
+                f"exceeds engine max_len {self.max_len} + 1")
         uid = self._next_uid
         self._next_uid += 1
         # sorted insertion: an early-arriving request submitted late must
@@ -201,7 +285,8 @@ class DecodeEngine:
         bisect.insort(
             self._queue,
             Request(uid=uid, prompt=prompt,
-                    max_new_tokens=max_new_tokens, arrival=arrival),
+                    max_new_tokens=max_new_tokens, arrival=arrival,
+                    speculate_k=speculate_k),
             key=lambda r: (r.arrival, r.uid))
         return uid
 
@@ -239,9 +324,13 @@ class DecodeEngine:
         self._pos[slot] = len(req.prompt)
         self._active[slot] = True
         self._remaining[slot] = req.max_new_tokens - 1
+        self._spec_k[slot] = req.speculate_k
         self._slot_req[slot] = req
         self._slot_toks[slot] = [tok0]
         self._slot_admitted[slot] = self._clock
+        if req.speculate_k > 0:
+            self.draft.admit(
+                slot, np.concatenate([req.prompt, [tok0]]).astype(np.int32))
 
     def _admissible(self) -> bool:
         return bool(self._queue) and self._queue[0].arrival <= self._clock
@@ -256,42 +345,165 @@ class DecodeEngine:
                 self._admit_one(slot)
 
     def step_segment(self) -> None:
-        """Run one ``segment_len``-step scan segment and drain finished
-        slots. One device dispatch + one host sync."""
-        active_before = self._active.copy()
+        """Run one ``segment_len``-step scan segment over the PLAIN
+        (non-speculative) slots and drain finished ones. Speculative
+        slots ride along frozen bit-for-bit (the scan's inactive-slot
+        masking) — they advance in :meth:`step_spec_round` instead.
+        One device dispatch + one host sync."""
+        run_active = self._active & (self._spec_k == 0)
         toks, carry = self._segment(
             self.params, self.state,
             jnp.asarray(self._tok), jnp.asarray(self._pos),
-            jnp.asarray(self._active), jnp.asarray(self._remaining),
+            jnp.asarray(run_active), jnp.asarray(self._remaining),
             self._key)
         emitted = np.asarray(toks)                      # (S, W)
         self.state = carry["state"]
         # np.array (copy): views of device arrays are read-only and the
-        # scheduler mutates these per-slot on admission
+        # scheduler mutates these per-slot on admission. Slots masked out
+        # of this segment (speculative ones) come back with tok/pos/
+        # remaining untouched, but their `active` flag must be restored.
         self._tok = np.array(carry["tok"])
         self._pos = np.array(carry["pos"])
         self._remaining = np.array(carry["remaining"])
-        self._active = np.array(carry["active"])
+        carried = np.array(carry["active"])
+        self._active = np.where(run_active, carried, self._active)
         self._key = carry["key"]
         self._clock += self.segment_len
         self.stats.segments += 1
         self.stats.emitted_tokens += int((emitted != PAD_ID).sum())
 
         for slot in range(self.n_slots):
-            if not active_before[slot]:
+            if not run_active[slot]:
                 continue
             row = emitted[slot]
             self._slot_toks[slot].extend(int(t) for t in row[row != PAD_ID])
             if not self._active[slot]:                  # finished mid-segment
-                req = self._slot_req[slot]
-                self._complete(req, self._slot_toks[slot],
-                               admitted_step=self._slot_admitted[slot])
-                self._slot_req[slot] = None
-                self._slot_toks[slot] = []
+                self._free_slot(slot)
+
+    def _free_slot(self, slot: int) -> None:
+        req = self._slot_req[slot]
+        self._complete(req, self._slot_toks[slot],
+                       admitted_step=self._slot_admitted[slot])
+        self._slot_req[slot] = None
+        self._slot_toks[slot] = []
+        if self._spec_k[slot] > 0:
+            self.draft.release(slot)
+        self._spec_k[slot] = 0
+        self._active[slot] = False
+
+    # ------------------------------------------------------------------
+    # speculative rounds
+    # ------------------------------------------------------------------
+
+    def step_spec_round(self) -> None:
+        """One draft/verify round, batched across every speculative slot.
+
+        1. The draft provider proposes K tokens per speculative slot.
+        2. ONE ``decode_window`` launch verifies the (K+1)-token windows
+           [current input, d₁..d_K] at every slot's own position and
+           returns the target's greedy token after each window prefix.
+        3. Per slot, the longest draft prefix matching the target's
+           greedy tokens is accepted and the target's own next token is
+           appended — 1..K+1 tokens of the exact plain-greedy sequence.
+        4. Slots that accepted the whole window commit the verify state
+           via one masked select; partial acceptors rewind by
+           re-advancing their accepted prefix from the pre-round
+           snapshot (``snapshot_state`` → ``decode_window`` →
+           ``restore_state``). The paper's fixed-size states make both
+           paths O(k²)-per-layer copies.
+
+        Rewinds run per slot (3 dispatches each, one compiled program
+        per accepted-prefix length ≤ K): accepted prefixes differ in
+        length across slots and the recurrence cannot mask within a
+        window, so batching them would re-advance tokens the slot
+        rejected. The engine is therefore tuned for the high-acceptance
+        regime — at low acceptance rounds degrade to rewind-dominated
+        (still bit-correct, just slow), which the acceptance-rate stat
+        makes visible to callers choosing K.
+        """
+        spec = self._active & (self._spec_k > 0)
+        slots = np.nonzero(spec)[0]
+        assert slots.size, "step_spec_round with no speculative slot"
+        w = int(self._spec_k[slots].max())
+
+        drafts = np.asarray(
+            self.draft.propose(self._tok, self._pos, spec, w), np.int32)
+        window = np.zeros((self.n_slots, w + 1), np.int32)
+        window[:, 0] = self._tok
+        window[:, 1:] = drafts
+
+        state_pre = self.state
+        greedy, st_verify = self._verify(
+            self.params, state_pre, jnp.asarray(window),
+            jnp.asarray(self._pos))
+        greedy = np.asarray(greedy)                     # (S, w+1)
+        self.stats.spec_rounds += 1
+
+        # -- host-side acceptance, budget and EOS resolution per slot --
+        commit_full = np.zeros((self.n_slots,), bool)
+        rewinds = []                   # (slot, n_consumed) re-advances
+        max_emitted = 1
+        for slot in slots:
+            slot = int(slot)
+            ks = int(self._spec_k[slot])
+            g = greedy[slot]
+            a = 0
+            while a < ks and drafts[slot, a] == g[a]:
+                a += 1
+            self.stats.spec_drafted += ks
+            self.stats.spec_accepted += a
+
+            # emit g[0..a] one at a time under the segment stop rules:
+            # budget decrements per token, EOS stops inclusively
+            emitted = []
+            finished = False
+            for t in g[:a + 1]:
+                emitted.append(int(t))
+                self._remaining[slot] -= 1
+                if ((self.eos_id is not None and int(t) == self.eos_id)
+                        or self._remaining[slot] <= 0):
+                    finished = True
+                    break
+            self._slot_toks[slot].extend(emitted)
+            self.stats.spec_emitted += len(emitted)
+            max_emitted = max(max_emitted, len(emitted))
+
+            if finished:
+                self._free_slot(slot)
+                continue
+            # continuing: the slot consumed window[:a+1]; its next input
+            # is the last emitted token (the target's own next token)
+            n_cons = a + 1
+            assert len(emitted) == n_cons
+            self.draft.commit(slot, np.asarray(emitted, np.int32))
+            self._tok[slot] = emitted[-1]
+            if a == w:
+                commit_full[slot] = True    # verify state is exact
+            else:
+                rewinds.append((slot, n_cons))
+            self._pos[slot] += n_cons
+
+        # -- apply state: masked select for full acceptors, snapshot
+        #    re-advance for partial acceptors --
+        if commit_full.any():
+            self.state = self._select(jnp.asarray(commit_full),
+                                      st_verify, self.state)
+        for slot, n_cons in rewinds:
+            snap = self._snapshot(state_pre, jnp.int32(slot))
+            _, st_r = self._verify(
+                self.params, snap,
+                jnp.asarray(window[slot:slot + 1, :n_cons]),
+                jnp.asarray(self._pos[slot:slot + 1] - n_cons))
+            self.state = self._admit(self.state, st_r, slot)
+            self.stats.spec_rewinds += 1
+
+        self._clock += max_emitted
 
     def run(self, policy: str = "continuous") -> List[Completion]:
         """Drive queued requests to completion. Returns completions in
-        uid order."""
+        uid order. Plain slots advance through slot-masked segments,
+        speculative slots through draft/verify rounds; both phases run
+        per outer iteration when the slot batch mixes the two kinds."""
         assert policy in ("continuous", "static"), policy
         while self._queue or self._active.any():
             self._admit_pass(policy)
@@ -306,5 +518,8 @@ class DecodeEngine:
                     skip = max(1, -int(-ahead // self.segment_len))
                     self._clock += skip * self.segment_len
                 continue
-            self.step_segment()
+            if (self._active & (self._spec_k == 0)).any():
+                self.step_segment()
+            if (self._active & (self._spec_k > 0)).any():
+                self.step_spec_round()
         return [self._completions[u] for u in sorted(self._completions)]

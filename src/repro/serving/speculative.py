@@ -1,0 +1,263 @@
+"""Draft providers for speculative lookahead decoding.
+
+Speculative decoding splits a greedy generation step into DRAFT (cheap,
+proposes K tokens) and VERIFY (the target model scores all K+1 window
+positions in ONE ``lm.decode_window`` launch per layer). The paper's
+fixed-size O(Dk·Dv) state is what makes the verify/rewind machinery
+cheap: committing or rewinding a slot moves one k×k matrix per layer
+instead of replaying a KV cache.
+
+A draft provider is anything that implements the four-slot-call
+protocol the engine drives:
+
+* ``admit(slot, context)``  — a request enters ``slot``; ``context`` is
+  every token known so far INCLUDING the current input token (prompt +
+  the prefill-sampled first token).
+* ``propose(tok, pos, mask, k)`` — propose up to ``k`` continuation
+  tokens per slot where ``mask`` is True; ``tok``/``pos`` are the
+  engine's per-slot current input token and its position. Returns an
+  (S, k) int array; rows of unmasked slots are ignored.
+* ``commit(slot, emitted)`` — the verifier accepted/emitted these
+  tokens for ``slot`` (the last one is the slot's next input token).
+* ``release(slot)``         — the slot's request finished.
+
+Three providers:
+
+* :class:`NgramDraft`   — suffix-match lookup over the request's own
+  token history (prompt-lookup / n-gram drafting). Zero device cost;
+  high acceptance on repetitive continuations.
+* :class:`ModelDraft`   — a small LM drafting through its own stacked
+  slot states (the classic two-model setup). Drafting is one masked
+  ``lm.generate_segment`` dispatch across all speculative slots; rewind
+  re-advances the accepted prefix from a round-start snapshot via
+  ``lm.snapshot_state``/``lm.restore_state``, exactly like the target.
+* :class:`ReplayDraft`  — replays known continuations (an oracle).
+  Benchmark/test harness: it pins the acceptance rate so the verify
+  machinery is measured in isolation.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@runtime_checkable
+class DraftProvider(Protocol):
+    def admit(self, slot: int, context: np.ndarray) -> None: ...
+
+    def propose(self, tok: np.ndarray, pos: np.ndarray,
+                mask: np.ndarray, k: int) -> np.ndarray: ...
+
+    def commit(self, slot: int, emitted: np.ndarray) -> None: ...
+
+    def release(self, slot: int) -> None: ...
+
+    def reset(self) -> None: ...
+
+
+class NgramDraft:
+    """Prompt-lookup drafting: propose the continuation that followed the
+    most recent earlier occurrence of the current suffix n-gram.
+
+    Host-side only — no draft model, no device launches. Acceptance is
+    high exactly when the target's output is locally repetitive (code,
+    extraction, cycles), which is the regime speculative decoding pays
+    off in anyway; on miss the verifier still emits one real token per
+    round, so a bad draft costs bandwidth, never correctness.
+    """
+
+    def __init__(self, max_ngram: int = 3):
+        assert max_ngram >= 1
+        self.max_ngram = max_ngram
+        self._hist: Dict[int, List[int]] = {}
+
+    def admit(self, slot: int, context: np.ndarray) -> None:
+        self._hist[slot] = [int(t) for t in context]
+
+    def _lookup(self, h: List[int], k: int) -> np.ndarray:
+        for n in range(min(self.max_ngram, len(h) - 1), 0, -1):
+            suffix = h[-n:]
+            # most recent earlier occurrence of the suffix
+            for i in range(len(h) - n - 1, -1, -1):
+                if h[i:i + n] == suffix:
+                    cont = h[i + n:i + n + k]
+                    if cont:
+                        pad = [cont[-1]] * (k - len(cont))
+                        return np.asarray(cont + pad, np.int32)
+        return np.full((k,), h[-1], np.int32)    # repeat-last fallback
+
+    def propose(self, tok: np.ndarray, pos: np.ndarray,
+                mask: np.ndarray, k: int) -> np.ndarray:
+        out = np.zeros((len(tok), k), np.int32)
+        for s in np.nonzero(mask)[0]:
+            out[s] = self._lookup(self._hist[int(s)], k)
+        return out
+
+    def commit(self, slot: int, emitted: np.ndarray) -> None:
+        self._hist[slot].extend(int(t) for t in emitted)
+
+    def release(self, slot: int) -> None:
+        self._hist.pop(slot, None)
+
+    def reset(self) -> None:
+        self._hist.clear()
+
+
+class ReplayDraft:
+    """Oracle drafting from known continuations, keyed by prompt.
+
+    ``continuations[prompt_bytes]`` is the request's full greedy output
+    (first element = the prefill-sampled token). Used by the speculative
+    benchmark to pin acceptance at ~1.0 (the high-acceptance synthetic
+    mix) and by tests to force the all-accepted path; desyncs degrade to
+    rejected drafts, never wrong tokens — the verifier owns correctness.
+    """
+
+    @staticmethod
+    def key(prompt: np.ndarray) -> bytes:
+        return np.asarray(prompt, np.int32).tobytes()
+
+    def __init__(self, continuations: Dict[bytes, np.ndarray]):
+        self._seqs = {k: np.asarray(v, np.int32).reshape(-1)
+                      for k, v in continuations.items()}
+        self._slot_seq: Dict[int, np.ndarray] = {}
+        self._cursor: Dict[int, int] = {}
+
+    def admit(self, slot: int, context: np.ndarray) -> None:
+        # context = prompt + [first sampled token]
+        seq = self._seqs.get(self.key(context[:-1]))
+        self._slot_seq[slot] = (seq if seq is not None
+                                else np.zeros((0,), np.int32))
+        self._cursor[slot] = 1        # seq[0] is the already-known tok0
+
+    def propose(self, tok: np.ndarray, pos: np.ndarray,
+                mask: np.ndarray, k: int) -> np.ndarray:
+        out = np.zeros((len(tok), k), np.int32)
+        for s in np.nonzero(mask)[0]:
+            s = int(s)
+            seq, c = self._slot_seq[s], self._cursor[s]
+            cont = seq[c:c + k]
+            out[s, :len(cont)] = cont
+        return out
+
+    def commit(self, slot: int, emitted: np.ndarray) -> None:
+        self._cursor[slot] += len(emitted)
+
+    def release(self, slot: int) -> None:
+        self._slot_seq.pop(slot, None)
+        self._cursor.pop(slot, None)
+
+    def reset(self) -> None:
+        self._slot_seq.clear()
+        self._cursor.clear()
+
+
+class ModelDraft:
+    """A small LM drafting through its own stacked slot states.
+
+    Mirrors the target engine's slot discipline: one whole-stack decode
+    state of ``n_slots`` batch rows, admission = prefill + slot write,
+    drafting = ONE masked ``lm.generate_segment`` dispatch proposing K
+    greedy tokens for every speculative slot at once. After verification
+    the draft state is rewound the same way the target is: restore the
+    slot's round-start snapshot and re-advance the accepted window
+    prefix with ``lm.decode_window`` — cheap because the draft state is
+    fixed-size too.
+    """
+
+    def __init__(self, params: Any, cfg: Any, rules: Any = None, *,
+                 n_slots: int = 4, max_len: int = 512):
+        from repro.models import lm
+        from repro.sharding import Rules
+
+        self.params = params
+        self.cfg = cfg
+        self.rules = rules if rules is not None else Rules.null()
+        self.n_slots = n_slots
+        self.max_len = max_len
+        cfg_, rules_ = cfg, self.rules
+
+        @jax.jit
+        def _prefill(params, prompt):
+            _, st = lm.prefill(params, prompt, cfg_, rules_)
+            return lm.pad_decode_state(st, cfg_, max_len=max_len)
+
+        @jax.jit
+        def _restore(state, snap, slot):
+            return lm.restore_state(state, snap, slot)
+
+        @jax.jit
+        def _snapshot(state, slot):
+            return lm.snapshot_state(state, slot)
+
+        @jax.jit
+        def _window(params, state, tokens, pos0):
+            _, st = lm.decode_window(params, state, tokens, pos0,
+                                     cfg_, rules_)
+            return st
+
+        def _segment(params, state, tok, pos, active, k):
+            toks, carry = lm.generate_segment(
+                params, state, tok, pos, active,
+                jnp.full(tok.shape, k + 1, jnp.int32), k, cfg_, rules_)
+            return toks, carry["state"]
+
+        self._prefill = _prefill
+        self._restore = _restore
+        self._snapshot = _snapshot
+        self._window = _window
+        self._segment = jax.jit(_segment, static_argnames="k")
+        self.reset()
+
+    def reset(self) -> None:
+        from repro.models import lm
+        self.state = lm.init_decode_state(
+            self.cfg, batch=self.n_slots, max_len=self.max_len,
+            rules=self.rules)
+        self._pos = np.zeros((self.n_slots,), np.int32)
+        self._round_tok: Optional[np.ndarray] = None
+        self._round_pos: Optional[np.ndarray] = None
+        self._pre_state: Any = None
+
+    def admit(self, slot: int, context: np.ndarray) -> None:
+        # the draft state consumes everything BEFORE the current input
+        # token (context[-1]); that token is fed at the next propose()
+        prompt = np.asarray(context[:-1], np.int32)
+        st = self._prefill(self.params, jnp.asarray(prompt)[None])
+        self.state = self._restore(self.state, st, slot)
+        self._pos[slot] = len(prompt)
+
+    def propose(self, tok: np.ndarray, pos: np.ndarray,
+                mask: np.ndarray, k: int) -> np.ndarray:
+        # snapshot the whole pre-round state (a pytree reference — free);
+        # commit() rewinds per slot from it
+        self._pre_state = self.state
+        self._round_tok = np.asarray(tok, np.int32).copy()
+        self._round_pos = self._pos.copy()
+        toks, self.state = self._segment(
+            self.params, self.state, jnp.asarray(tok, jnp.int32),
+            jnp.asarray(self._pos), jnp.asarray(mask, bool), k=k)
+        return np.asarray(toks)
+
+    def commit(self, slot: int, emitted: np.ndarray) -> None:
+        # re-advance the accepted prefix [tok0, g1..g_{a}] from the
+        # round-start snapshot (the drafting trajectory consumed its own
+        # proposals, which may have been rejected). Uniform per-slot
+        # rewind keeps the invariant trivially; a full-acceptance fast
+        # path (advance the live state by the one unconsumed trailing
+        # token, batched across slots) is the known optimisation for
+        # the high-acceptance regime (ROADMAP: batched rewind).
+        window = np.concatenate(
+            [[self._round_tok[slot]], np.asarray(emitted[:-1], np.int32)])
+        snap = self._snapshot(self._pre_state, slot)
+        st = self._window(self.params, snap, jnp.asarray(window)[None],
+                          jnp.int32(self._round_pos[slot]))
+        self.state = self._restore(self.state, st, slot)
+        self._pos[slot] = self._round_pos[slot] + len(window)
+
+    def release(self, slot: int) -> None:
+        pass   # slot state is overwritten at the next admit

@@ -1,11 +1,18 @@
+import os
+
 import jax
 import pytest
 
 # Tests run on the default single CPU device; the 512-device dry-run
 # environment is exercised ONLY by repro.launch.dryrun (per the
 # assignment, smoke tests must see 1 device).
+#
+# x64 stays off by default, but the CI decode-parity matrix runs the
+# suite under JAX_ENABLE_X64=1 (wider accumulators shake out dtype
+# assumptions in the decode paths) — honour an explicit opt-in.
 
-jax.config.update("jax_enable_x64", False)
+if os.environ.get("JAX_ENABLE_X64", "0").lower() in ("", "0", "false"):
+    jax.config.update("jax_enable_x64", False)
 
 
 @pytest.fixture

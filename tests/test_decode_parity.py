@@ -1,0 +1,246 @@
+"""Property-based differential suite over the whole decode surface.
+
+One property, many configurations: advancing the decode state over W
+known tokens must give the same logits and the same final state no
+matter which path computes it —
+
+    prefill(T+W)                      (chunk-parallel training kernels)
+ == prefill(T) + decode_step × W      (the sequential serving recurrence)
+ == prefill(T) + decode_window(W)     (the fused verify/teacher window)
+
+for every (backend × feature_map × dtype × decode_kernel × T × W)
+combination, with ``decode_kernel="fused"`` exercising the exact Pallas
+kernel code through interpret mode on CPU. The deterministic grid below
+always runs; a Hypothesis fuzz layer widens the sweep when hypothesis
+is installed (CI installs it; the container may not have it).
+
+The suite also pins the per-slot-position window contract used by
+speculative verification: ``decode_window`` with a (B,) ``pos0`` vector
+equals the scalar path, and equals per-slot batch-1 windows at
+staggered depths through ``snapshot_state``/``restore_state``.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.sharding import Rules
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+RULES = Rules.null()
+
+
+def _cfg(backend, feature_map="elu1", dtype="float32", kernel="reference",
+         **kw):
+    cfg = get_smoke_config("yi-34b").with_backend(backend)
+    if backend == "softmax":
+        return dataclasses.replace(cfg, dtype=dtype, **kw)
+    return dataclasses.replace(cfg, feature_map=feature_map, dtype=dtype,
+                               decode_kernel=kernel, **kw)
+
+
+def _tol(dtype):
+    # bf16 activations round every matmul; fp32 differences are pure
+    # reassociation (chunked vs sequential accumulation order)
+    return (dict(rtol=6e-2, atol=6e-2) if dtype == "bfloat16"
+            else dict(rtol=2e-3, atol=2e-3))
+
+
+def _f32(x):
+    return np.asarray(x, np.float32)
+
+
+def check_decode_parity(cfg, seed, t, w, batch=2):
+    """The differential property: all three decode paths agree on the
+    W-token advance after a T-token prefill."""
+    key = jax.random.PRNGKey(seed)
+    params = lm.init_params(key, cfg)
+    toks = jax.random.randint(
+        jax.random.fold_in(key, 1), (batch, t + w), 0, cfg.vocab_size
+    ).astype(jnp.int32)
+    tol = _tol(cfg.dtype)
+
+    # reference: the training/prefill path over the full sequence
+    full_logits, _, _ = lm.forward(params, toks, cfg, RULES)
+
+    _, st0 = lm.prefill(params, toks[:, :t], cfg, RULES)
+    st0 = lm.pad_decode_state(st0, cfg, max_len=t + w)
+
+    # path A: W sequential single-token decode steps
+    st_seq = st0
+    seq_logits = []
+    for i in range(w):
+        lg, st_seq = lm.decode_step(
+            params, st_seq, toks[:, t + i], jnp.int32(t + i), cfg, RULES)
+        seq_logits.append(lg)
+    seq_logits = jnp.stack(seq_logits, 1)
+
+    # path B: one W-token window
+    win_logits, st_win = lm.decode_window(
+        params, st0, toks[:, t:], jnp.int32(t), cfg, RULES)
+
+    np.testing.assert_allclose(_f32(seq_logits), _f32(full_logits[:, t:]),
+                               **tol)
+    np.testing.assert_allclose(_f32(win_logits), _f32(seq_logits), **tol)
+    for a, b in zip(jax.tree.leaves(st_seq), jax.tree.leaves(st_win)):
+        np.testing.assert_allclose(_f32(a), _f32(b), **tol)
+
+    # path B': the same window with a per-slot position VECTOR — the
+    # speculative-verify calling convention must not change the math
+    win_v, st_v = lm.decode_window(
+        params, st0, toks[:, t:], jnp.full((batch,), t, jnp.int32),
+        cfg, RULES)
+    np.testing.assert_allclose(_f32(win_v), _f32(win_logits), **tol)
+    for a, b in zip(jax.tree.leaves(st_v), jax.tree.leaves(st_win)):
+        np.testing.assert_allclose(_f32(a), _f32(b), **tol)
+
+
+# deterministic grid — always runs, no hypothesis needed
+GRID = [
+    # backend, feature_map, dtype, kernel, t, w
+    ("linear", "elu1", "float32", "reference", 5, 3),
+    ("linear", "elu1", "float32", "fused", 5, 3),
+    ("linear", "elu1", "float32", "fused", 1, 1),
+    ("linear", "identity", "float32", "reference", 4, 4),
+    ("linear", "identity", "float32", "fused", 4, 4),
+    ("linear", "relu", "float32", "fused", 3, 2),
+    ("linear", "elu1", "bfloat16", "fused", 5, 3),
+    ("gated_linear", "elu1", "float32", "reference", 5, 3),
+    ("gated_linear", "elu1", "float32", "fused", 5, 3),
+    ("gated_linear", "elu1", "float32", "fused", 1, 1),
+    ("gated_linear", "identity", "float32", "fused", 4, 2),
+    ("gated_linear", "elu1", "bfloat16", "reference", 5, 3),
+    ("softmax", None, "float32", None, 5, 3),
+    ("softmax", None, "bfloat16", None, 4, 4),
+]
+
+
+class TestDecodeParityGrid:
+    @pytest.mark.parametrize(
+        "backend,fmap,dtype,kernel,t,w", GRID,
+        ids=[f"{b}-{f}-{d}-{k}-T{t}W{w}" for b, f, d, k, t, w in GRID])
+    def test_paths_agree(self, backend, fmap, dtype, kernel, t, w):
+        cfg = _cfg(backend, feature_map=fmap, dtype=dtype, kernel=kernel)
+        check_decode_parity(cfg, seed=0, t=t, w=w)
+
+    def test_unnormalized_linear(self):
+        cfg = dataclasses.replace(_cfg("linear", kernel="fused"),
+                                  linear_normalize=False)
+        check_decode_parity(cfg, seed=1, t=4, w=3)
+
+    def test_scalar_decay_gated(self):
+        cfg = dataclasses.replace(_cfg("gated_linear", kernel="fused"),
+                                  decay_mode="scalar")
+        check_decode_parity(cfg, seed=1, t=4, w=3)
+
+    def test_feature_gate(self):
+        cfg = dataclasses.replace(_cfg("linear", kernel="fused"),
+                                  feature_gate=True)
+        check_decode_parity(cfg, seed=2, t=4, w=3)
+
+
+class TestStaggeredWindowDepths:
+    """Per-slot window starts: decode_window with a (B,) pos0 vector at
+    DIFFERENT depths equals batch-1 windows per slot — the speculative
+    slot-engine verify path, stitched through snapshot/restore."""
+
+    @pytest.mark.parametrize("backend", ["linear", "gated_linear",
+                                         "softmax"])
+    def test_vector_pos_matches_per_slot(self, key, backend):
+        cfg = _cfg(backend, kernel="reference")
+        params = lm.init_params(key, cfg)
+        depths = [3, 7]
+        w, max_len = 4, 16
+        toks = jax.random.randint(
+            jax.random.fold_in(key, 1), (2, max(depths) + w), 0,
+            cfg.vocab_size).astype(jnp.int32)
+
+        # build a 2-slot state whose rows sit at different depths
+        state = lm.init_decode_state(cfg, batch=2, max_len=max_len)
+        snaps = []
+        for s, t in enumerate(depths):
+            _, st = lm.prefill(params, toks[s:s + 1, :t], cfg, RULES)
+            st = lm.pad_decode_state(st, cfg, max_len=max_len)
+            snaps.append(st)
+            state = lm.restore_state(state, st, s)
+
+        windows = jnp.stack(
+            [toks[s, t:t + w] for s, t in enumerate(depths)])
+        pos0 = jnp.asarray(depths, jnp.int32)
+        lg_vec, st_vec = lm.decode_window(params, state, windows, pos0,
+                                          cfg, RULES)
+
+        tol = _tol(cfg.dtype)
+        for s, t in enumerate(depths):
+            lg_1, st_1 = lm.decode_window(
+                params, snaps[s], windows[s:s + 1], jnp.int32(t), cfg,
+                RULES)
+            np.testing.assert_allclose(_f32(lg_vec[s:s + 1]), _f32(lg_1),
+                                       **tol)
+            snap_s = lm.snapshot_state(st_vec, s)
+            for a, b in zip(jax.tree.leaves(snap_s),
+                            jax.tree.leaves(st_1)):
+                np.testing.assert_allclose(_f32(a), _f32(b), **tol)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        backend=st.sampled_from(["linear", "gated_linear", "softmax"]),
+        fmap=st.sampled_from(["elu1", "identity", "relu"]),
+        dtype=st.sampled_from(["float32", "bfloat16"]),
+        kernel=st.sampled_from(["fused", "reference"]),
+        t=st.integers(min_value=1, max_value=8),
+        w=st.integers(min_value=1, max_value=6),
+        seed=st.integers(min_value=0, max_value=2**16),
+    )
+    def test_fuzz_decode_surface(backend, fmap, dtype, kernel, t, w,
+                                 seed):
+        """Hypothesis-driven widening of the deterministic grid."""
+        cfg = _cfg(backend, feature_map=fmap, dtype=dtype, kernel=kernel)
+        check_decode_parity(cfg, seed=seed, t=t, w=w)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        b=st.integers(min_value=1, max_value=3),
+        h=st.integers(min_value=1, max_value=4),
+        w=st.integers(min_value=1, max_value=8),
+        dk=st.sampled_from([8, 16]),
+        gated=st.booleans(),
+        seed=st.integers(min_value=0, max_value=2**16),
+    )
+    def test_fuzz_fused_kernel_vs_ref(b, h, w, dk, gated, seed):
+        """Op-level: the Pallas kernels (interpret mode = the exact TPU
+        kernel code) match the jnp scan reference at fuzzed shapes."""
+        from repro.kernels.fused_recurrent import ops as FR
+        from repro.kernels.fused_recurrent import ref as FRref
+        key = jax.random.PRNGKey(seed)
+        ks = jax.random.split(key, 5)
+        q = jax.random.normal(ks[0], (b, h, w, dk))
+        k = jax.random.normal(ks[1], (b, h, w, dk))
+        v = jax.random.normal(ks[2], (b, h, w, dk))
+        s = jax.random.normal(ks[3], (b, h, dk, dk))
+        if gated:
+            g = -jax.nn.softplus(jax.random.normal(ks[4], (b, h, w, dk)))
+            o_f, s_f = FR.fused_recurrent_gated(s, q, k, v, g,
+                                                interpret=True)
+            o_r, s_r = FRref.fused_recurrent_gated_ref(s, q, k, v, g)
+        else:
+            o_f, s_f, _ = FR.fused_recurrent_linear(s, q, k, v,
+                                                    interpret=True)
+            o_r, s_r, _ = FRref.fused_recurrent_linear_ref(s, q, k, v)
+        np.testing.assert_allclose(_f32(o_f), _f32(o_r), rtol=1e-4,
+                                   atol=1e-4)
+        np.testing.assert_allclose(_f32(s_f), _f32(s_r), rtol=1e-4,
+                                   atol=1e-4)

@@ -253,6 +253,58 @@ class TestGenerateSegment:
                 bool(jnp.all(leaf[:, 2] == 0))
 
 
+class TestSnapshotRestore:
+    """snapshot_state / restore_state — the shared slot-slice primitive
+    behind engine admission AND speculative rewind. Stacked leaves carry
+    (reps, S, …) with the slot axis at 1; tail leaves (S, …) at 0."""
+
+    @pytest.mark.parametrize("backend", ["linear", "softmax"])
+    def test_snapshot_reads_one_slot(self, key, backend):
+        cfg = get_smoke_config("yi-34b").with_backend(backend)
+        state = lm.init_decode_state(cfg, batch=3, max_len=8)
+        # give every slot a distinct fill value along its slot axis
+        def fill(x, axis):
+            shape = [1] * x.ndim
+            shape[axis] = 3
+            vals = jnp.arange(1, 4, dtype=x.dtype).reshape(shape)
+            return jnp.broadcast_to(vals, x.shape)
+        state = lm._map_slots(fill, state)
+        for slot in range(3):
+            snap = lm.snapshot_state(state, slot)
+            for leaf in jax.tree.leaves(snap["tail"]):
+                assert leaf.shape[0] == 1
+                assert bool(jnp.all(leaf == slot + 1))
+            for leaf in jax.tree.leaves(snap["stack"]):
+                assert leaf.shape[1] == 1
+                assert bool(jnp.all(leaf == slot + 1))
+
+    @pytest.mark.parametrize("backend", ["linear", "gated_linear",
+                                         "softmax"])
+    def test_snapshot_restore_roundtrip(self, key, backend):
+        """restore(state, snapshot(state, i), i) == state, bit for bit,
+        and restoring into a DIFFERENT slot moves exactly that slot."""
+        cfg = get_smoke_config("yi-34b").with_backend(backend)
+        params = lm.init_params(key, cfg)
+        prompt = jax.random.randint(key, (3, 6), 0, cfg.vocab_size)
+        _, st = lm.prefill(params, prompt, cfg, RULES)
+        st = lm.pad_decode_state(st, cfg, max_len=16)
+
+        snap = lm.snapshot_state(st, 1)
+        back = lm.restore_state(st, snap, 1)
+        for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        moved = lm.restore_state(st, snap, 2)
+        moved_snap = lm.snapshot_state(moved, 2)
+        for a, b in zip(jax.tree.leaves(snap),
+                        jax.tree.leaves(moved_snap)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # slot 0 untouched
+        for a, b in zip(jax.tree.leaves(lm.snapshot_state(moved, 0)),
+                        jax.tree.leaves(lm.snapshot_state(st, 0))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 class TestPadDecodeState:
     """pad_decode_state + softmax decode past the prompt on stacked
     states — the ``st.k_cache.ndim - 3`` axis arithmetic."""
@@ -322,6 +374,82 @@ class TestGenerateEdges:
             segment_len=4, n_requests=5, arrival_rate=0.4,
             prompt_len=8, gen_len=12, temperature=0.0, seed=0)
         assert serve.stream(args) == 0
+
+
+class TestMixedSpeculativePlain:
+    """Mixing speculative and plain requests in ONE slot batch never
+    changes anyone's tokens: plain slots advance in slot-masked segments
+    with speculative slots frozen, speculative slots advance in verify
+    rounds with plain slots frozen (extends the bit-identity harness)."""
+
+    def _workload(self, cfg, n=6):
+        rng = np.random.default_rng(7)
+        prompts = [rng.integers(0, cfg.vocab_size, size=8,
+                                dtype=np.int64).astype(np.int32)
+                   for _ in range(n)]
+        gens = [12, 7, 15, 5, 10, 9][:n]
+        return prompts, gens
+
+    @pytest.mark.parametrize("backend", ["linear", "softmax"])
+    def test_mixed_equals_homogeneous(self, key, backend):
+        from repro.serving import ModelDraft
+
+        cfg = dataclasses.replace(
+            get_smoke_config("yi-34b").with_backend(backend),
+            dtype="float32")
+        params = lm.init_params(key, cfg)
+        prompts, gens = self._workload(cfg)
+        eng = DecodeEngine(
+            params, cfg, n_slots=3, segment_len=4, max_len=64,
+            draft=ModelDraft(params, cfg, n_slots=3, max_len=64))
+
+        def run(ks):
+            eng.reset()
+            for p, g, k in zip(prompts, gens, ks):
+                eng.submit(p, g, speculate_k=k)
+            return eng.run("continuous")
+
+        all_plain = run([0] * len(prompts))
+        all_spec = run([3] * len(prompts))
+        mixed = run([0, 3, 0, 3, 0, 3])
+        segs, rounds = eng.stats.segments, eng.stats.spec_rounds
+
+        for a, b, c in zip(all_plain, all_spec, mixed):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            np.testing.assert_array_equal(a.tokens, c.tokens)
+        # the mixed run actually interleaved both phase kinds
+        assert segs > 0 and rounds > 0
+
+    def test_mixed_with_arrivals_and_eos(self, key):
+        """Admission churn + EOS stops while the batch mixes kinds."""
+        from repro.serving import NgramDraft
+
+        cfg = dataclasses.replace(
+            get_smoke_config("yi-34b").with_backend("linear"),
+            dtype="float32")
+        params = lm.init_params(key, cfg)
+        prompts, gens = self._workload(cfg)
+        eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                           max_len=64)
+        eng.reset()
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g)
+        plain = eng.run("continuous")
+        eos_id = next(int(t) for c in plain for t in c.tokens[1:-1])
+
+        def run(draft, ks, arrivals):
+            e = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                             max_len=64, eos_id=eos_id, draft=draft)
+            for p, g, k, t in zip(prompts, gens, ks, arrivals):
+                e.submit(p, g, speculate_k=k, arrival=t)
+            return e.run("continuous")
+
+        refs = run(None, [0] * 6, [0.0] * 6)
+        mixed = run(NgramDraft(), [0, 2, 0, 4, 2, 0],
+                    [0.0, 0.0, 3.0, 5.0, 9.0, 11.0])
+        for a, b in zip(refs, mixed):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            assert a.finish_reason == b.finish_reason
 
 
 class TestDecodeNumerics:

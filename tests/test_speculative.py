@@ -1,0 +1,233 @@
+"""Speculative lookahead decoding: the draft/verify/rewind machinery.
+
+Acceptance contract (ISSUE 3): greedy speculative output is
+BIT-IDENTICAL to plain greedy decode for every backend — speculation
+changes how fast the greedy sequence is produced, never which tokens.
+The edges that could break it are pinned explicitly: K=1 windows,
+all-accepted rounds (state committed straight from the verify window),
+all-rejected rounds (every round rewinds from the snapshot), EOS landing
+inside an accepted draft window, and budget exhaustion mid-window.
+
+fp32 activations: the verify window and the sequential decode path are
+mathematically identical but associatively different; fp32 keeps the
+greedy argmax margins far above the reassociation noise.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.serving import DecodeEngine, ModelDraft, NgramDraft, ReplayDraft
+from repro.sharding import Rules
+
+RULES = Rules.null()
+BACKENDS = ["linear", "gated_linear", "softmax"]
+
+
+def _cfg(backend):
+    return dataclasses.replace(
+        get_smoke_config("yi-34b").with_backend(backend), dtype="float32")
+
+
+def _workload(cfg, n=4, prompt_len=8, seed=0, gens=(20, 13, 20, 7)):
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, size=prompt_len,
+                            dtype=np.int64).astype(np.int32)
+               for _ in range(n)]
+    return prompts, list(gens)[:n]
+
+
+def _run(engine, prompts, gens, speculate_k=0, **submit_kw):
+    engine.reset()
+    for p, g in zip(prompts, gens):
+        engine.submit(p, g, speculate_k=speculate_k, **submit_kw)
+    return engine.run("continuous")
+
+
+def _assert_same(plain, spec):
+    assert len(plain) == len(spec)
+    for a, b in zip(plain, spec):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert a.finish_reason == b.finish_reason
+
+
+class TestSpeculativeBitIdentity:
+    """spec == plain greedy, token for token, on every backend."""
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_all_accepted(self, key, backend):
+        """Draft model == target model: every draft token matches, every
+        round commits the verify-window state directly (zero rewinds)."""
+        cfg = _cfg(backend)
+        params = lm.init_params(key, cfg)
+        prompts, gens = _workload(cfg)
+        eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                           max_len=64)
+        plain = _run(eng, prompts, gens)
+        eng.draft = ModelDraft(params, cfg, n_slots=2, max_len=64)
+        spec = _run(eng, prompts, gens, speculate_k=3)
+        _assert_same(plain, spec)
+        assert eng.stats.acceptance_rate == 1.0
+        assert eng.stats.spec_rewinds == 0
+        assert eng.stats.spec_rounds > 0
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_all_rejected(self, key, backend):
+        """An unrelated draft model: (almost) nothing is accepted, every
+        round emits exactly the target's own next token after a snapshot
+        rewind — slow, never wrong."""
+        cfg = _cfg(backend)
+        params = lm.init_params(key, cfg)
+        prompts, gens = _workload(cfg)
+        eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                           max_len=64)
+        plain = _run(eng, prompts, gens)
+        dparams = lm.init_params(jax.random.PRNGKey(123), cfg)
+        eng.draft = ModelDraft(dparams, cfg, n_slots=2, max_len=64)
+        spec = _run(eng, prompts, gens, speculate_k=3)
+        _assert_same(plain, spec)
+        assert eng.stats.acceptance_rate < 0.2
+        assert eng.stats.spec_rewinds > 0
+
+    def test_k_equals_one(self, key):
+        """The smallest window: 1 draft + 1 bonus token per round."""
+        cfg = _cfg("linear")
+        params = lm.init_params(key, cfg)
+        prompts, gens = _workload(cfg)
+        eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                           max_len=64,
+                           draft=ModelDraft(params, cfg, n_slots=2,
+                                            max_len=64))
+        plain = _run(eng, prompts, gens)
+        spec = _run(eng, prompts, gens, speculate_k=1)
+        _assert_same(plain, spec)
+        # K=1 all-accepted advances exactly 2 tokens per round-slot
+        assert eng.stats.acceptance_rate == 1.0
+
+    def test_ngram_draft(self, key):
+        """Prompt-lookup drafting: arbitrary acceptance, same tokens."""
+        cfg = _cfg("linear")
+        params = lm.init_params(key, cfg)
+        prompts, gens = _workload(cfg)
+        eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                           max_len=64, draft=NgramDraft())
+        plain = _run(eng, prompts, gens)
+        spec = _run(eng, prompts, gens, speculate_k=4)
+        _assert_same(plain, spec)
+        assert eng.stats.spec_drafted > 0
+
+    def test_eos_inside_draft_window(self, key):
+        """EOS emitted as an ACCEPTED draft token mid-window truncates
+        the emission exactly where plain decoding stops (inclusive)."""
+        cfg = _cfg("linear")
+        params = lm.init_params(key, cfg)
+        prompts, gens = _workload(cfg, gens=(16, 16, 16, 16))
+        eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                           max_len=64)
+        plain = _run(eng, prompts, gens)
+        # an EOS id that occurs strictly inside some output
+        eos_id = next(int(t) for c in plain for t in c.tokens[1:-1])
+
+        eng_eos = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                               max_len=64, eos_id=eos_id)
+        refs = _run(eng_eos, prompts, gens)
+        assert any(c.finish_reason == "eos" for c in refs)
+
+        # oracle draft replays the full no-EOS continuations, so the EOS
+        # token is drafted AND accepted inside a window
+        draft = ReplayDraft({ReplayDraft.key(p): c.tokens
+                             for p, c in zip(prompts, plain)})
+        eng_eos.draft = draft
+        spec = _run(eng_eos, prompts, gens, speculate_k=5)
+        _assert_same(refs, spec)
+
+    def test_budget_exhausted_inside_window(self, key):
+        """max_new_tokens not a multiple of the round size: the last
+        round truncates mid-window, byte-for-byte like plain decode."""
+        cfg = _cfg("linear")
+        params = lm.init_params(key, cfg)
+        prompts, gens = _workload(cfg, gens=(5, 9, 2, 11))
+        eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                           max_len=64)
+        plain = _run(eng, prompts, gens)
+        draft = ReplayDraft({ReplayDraft.key(p): c.tokens
+                             for p, c in zip(prompts, plain)})
+        eng.draft = draft
+        spec = _run(eng, prompts, gens, speculate_k=6)
+        _assert_same(plain, spec)
+        for c, g in zip(spec, gens):
+            assert len(c.tokens) == g and c.finish_reason == "length"
+
+    def test_mixed_speculate_k_values(self, key):
+        """Different K per request in one slot batch (the per-request
+        policy): smaller-K slots always take the rewind path."""
+        cfg = _cfg("linear")
+        params = lm.init_params(key, cfg)
+        prompts, gens = _workload(cfg)
+        eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                           max_len=64)
+        plain = _run(eng, prompts, gens)
+        eng.draft = ModelDraft(params, cfg, n_slots=2, max_len=64)
+        eng.reset()
+        for i, (p, g) in enumerate(zip(prompts, gens)):
+            eng.submit(p, g, speculate_k=2 + (i % 2) * 3)
+        spec = eng.run("continuous")
+        _assert_same(plain, spec)
+
+
+class TestSpeculativeValidation:
+    def test_speculate_k_requires_draft(self, key):
+        cfg = _cfg("linear")
+        params = lm.init_params(key, cfg)
+        eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                           max_len=64)
+        with pytest.raises(ValueError, match="draft provider"):
+            eng.submit(np.arange(4), 5, speculate_k=2)
+
+    def test_speculate_greedy_only(self, key):
+        cfg = _cfg("linear")
+        params = lm.init_params(key, cfg)
+        eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                           max_len=64, temperature=0.7,
+                           draft=NgramDraft())
+        with pytest.raises(ValueError, match="greedy"):
+            eng.submit(np.arange(4), 5, speculate_k=2)
+
+    def test_speculate_k_counts_against_max_len(self, key):
+        cfg = _cfg("linear")
+        params = lm.init_params(key, cfg)
+        eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                           max_len=16, draft=NgramDraft())
+        eng.submit(np.arange(8), 5, speculate_k=4)      # 8+5+4 ≤ 17
+        with pytest.raises(ValueError, match="speculate_k"):
+            eng.submit(np.arange(8), 6, speculate_k=4)  # 8+6+4 > 17
+
+
+class TestNgramDraft:
+    def test_copies_repeating_continuation(self):
+        d = NgramDraft(max_ngram=3)
+        d.admit(0, np.asarray([5, 1, 2, 3, 9, 1, 2, 3], np.int32))
+        # suffix [1,2,3] last occurred at the start, followed by 9, 1, 2
+        out = d.propose(np.zeros(1, np.int32), np.zeros(1, np.int32),
+                        np.asarray([True]), 3)
+        np.testing.assert_array_equal(out[0], [9, 1, 2])
+
+    def test_fallback_repeats_last(self):
+        d = NgramDraft()
+        d.admit(0, np.asarray([1, 2, 3], np.int32))
+        out = d.propose(np.zeros(1, np.int32), np.zeros(1, np.int32),
+                        np.asarray([True]), 4)
+        np.testing.assert_array_equal(out[0], [3, 3, 3, 3])
+
+    def test_commit_extends_history(self):
+        d = NgramDraft(max_ngram=2)
+        d.admit(0, np.asarray([1, 2], np.int32))
+        d.commit(0, np.asarray([3, 1, 2], np.int32))
+        out = d.propose(np.zeros(1, np.int32), np.zeros(1, np.int32),
+                        np.asarray([True]), 1)
+        # suffix [1,2] seen before, followed by 3
+        np.testing.assert_array_equal(out[0], [3])
