@@ -1,23 +1,29 @@
-"""Continuous vs. static batching on a skewed request-length mix.
+"""Continuous vs. static batching, and batched vs. per-request admission.
 
-The paper's fixed-size O(k²) states make slot admission a cheap copy, so
-the serving engine can refill freed slots *between scan segments*
-instead of waiting for the whole batch to drain. This benchmark measures
-what that scheduling freedom is worth on the workload it exists for —
-a skewed generation-length mix (most requests short, every 4th a long
-straggler), the shape under which batch-synchronous ("static") serving
-idles most of its slots behind the straggler.
+Part 1 — scheduling (PR 2): the paper's fixed-size O(k²) states make
+slot admission a cheap copy, so the serving engine can refill freed
+slots *between scan segments* instead of waiting for the whole batch to
+drain. Measured on a skewed generation-length mix (most requests short,
+every 4th a long straggler), the shape under which batch-synchronous
+("static") serving idles most of its slots behind the straggler.
+Both policies run through the SAME engine instance and compiled
+programs, so the comparison isolates scheduling; claimed ≥ 1.5×
+continuous over static for the linear backend.
 
-Both policies run through the SAME engine instance and the same
-compiled segment/prefill programs (``DecodeEngine.run(policy=...)``), so
-the comparison isolates scheduling: identical per-segment device cost,
-identical prefill count, identical per-request outputs (the engine's
-bit-identity contract). Reported per backend (linear = fixed-state
-admission, softmax = KV-cache baseline):
-
-* aggregate tokens/s over the full workload (wall clock, post-compile),
-* slot utilization (fraction of scanned slot-steps emitting a token),
-* continuous/static speedup — claimed ≥ 1.5× for the linear backend.
+Part 2 — admission (PR 4): the per-request prefill-on-admit path pays
+one host-blocking batch-1 ``lm.prefill`` per request — and one jit
+compile per DISTINCT prompt length — then a slot write, stalling the
+fused decode loop at every admission. Batched admission bucket-pads the
+whole admission wave to a power-of-2 width and encodes it with ONE
+``lm.prefill_varlen`` dispatch (per-row masking keeps every row
+bit-identical to prefilling alone); prompts longer than
+``prefill_chunk`` continue through ``lm.decode_window_varlen`` chunks
+INTERLEAVED with decode segments. Measured on the long-prompt skewed
+mix (every 4th prompt 8× longer, prompt lengths varied so the
+per-request path actually recompiles): claimed ≥ 1.3× aggregate
+tokens/s with bit-identical greedy outputs on linear, gated_linear and
+softmax, plus deterministic dispatch-count / jit-miss / interleave
+claims for CI.
 
 Results land in ``BENCH_serving.json`` at the repo root so the serving
 trajectory is tracked across PRs (CPU smoke config: RATIOS are the
@@ -119,6 +125,172 @@ def run(backends=("linear", "softmax")) -> List[Dict]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Part 2 — batched + chunked admission vs per-request prefill-on-admit
+# ---------------------------------------------------------------------------
+
+ADM_N_REQUESTS = 16
+ADM_PROMPT_BASES = list(range(5, 17))   # varied lengths → jit churn
+ADM_LONG_FACTOR = 8                 # every 4th prompt 8× longer
+ADM_GEN_LEN = 12
+ADM_PREFILL_CHUNK = 16              # long prompts take 3-6 chunks
+
+
+def _admission_workload(vocab_size: int):
+    """Long-prompt skewed mix: every 4th prompt 8× longer, lengths
+    varied within the mix (12 distinct lengths across 16 requests —
+    the shape of real traffic) so per-request admission compiles a new
+    prefill program per length while batched admission reuses its
+    power-of-2 bucket programs."""
+    rng = np.random.default_rng(1)
+    out = []
+    for i in range(ADM_N_REQUESTS):
+        base = ADM_PROMPT_BASES[i % len(ADM_PROMPT_BASES)]
+        p_len = base * ADM_LONG_FACTOR if i % 4 == 0 else base
+        prompt = rng.integers(0, vocab_size, size=p_len,
+                              dtype=np.int64).astype(np.int32)
+        out.append((prompt, ADM_GEN_LEN))
+    return out
+
+
+def _run_admission(engine: DecodeEngine, workload):
+    engine.reset()
+    for prompt, g in workload:
+        engine.submit(prompt, g)
+    t0 = time.perf_counter()
+    completions = engine.run("continuous")
+    dt = time.perf_counter() - t0
+    return completions, dt
+
+
+def run_admission() -> Dict:
+    """Batched+chunked vs per-request admission.
+
+    The HEADLINE number is first-service (cold) aggregate tokens/s on a
+    fresh engine: per-request admission host-blocks on one batch-1
+    ``lm.prefill`` compile per DISTINCT prompt length (12 in this mix —
+    and real traffic never stops producing new lengths), while batched
+    admission compiles one program per power-of-2 bucket width, a
+    fixed O(log prefill_chunk) set. Steady-state (warm, best-of) is
+    reported alongside: on this compute-bound CPU smoke the bucket
+    padding costs real FLOPs, so the warm ratio underestimates what a
+    dispatch-bound accelerator sees; the deterministic dispatch/miss
+    counts are the device-independent form. Bit-identity of greedy
+    outputs vs the per-request path is asserted on all three backends.
+    """
+    key = jax.random.PRNGKey(0)
+    max_prompt = max(ADM_PROMPT_BASES) * ADM_LONG_FACTOR
+    max_len = max_prompt + ADM_GEN_LEN + SEGMENT_LEN
+
+    def make_engine(cfg, params, admission):
+        return DecodeEngine(
+            params, cfg, RULES, n_slots=N_SLOTS,
+            segment_len=SEGMENT_LEN, max_len=max_len,
+            admission=admission, prefill_chunk=ADM_PREFILL_CHUNK)
+
+    rows = []
+    identical = True
+    for backend in ("linear", "gated_linear", "softmax"):
+        # fp32: argmax margins far above the chunked-ingest vs one-shot
+        # prefill reassociation noise (the same precedent as spec mode)
+        cfg = dataclasses.replace(
+            get_smoke_config("yi-34b").with_backend(backend),
+            dtype="float32")
+        params = lm.init_params(key, cfg)
+        workload = _admission_workload(cfg.vocab_size)
+        engines = {adm: make_engine(cfg, params, adm)
+                   for adm in ("per_request", "batched")}
+
+        cold_t: Dict[str, float] = {}
+        stats: Dict[str, Dict] = {}
+        comps: Dict[str, list] = {}
+        for adm, eng in engines.items():
+            # first service on a fresh engine: admission compiles land
+            # here, exactly as they would on a serving process meeting
+            # this traffic for the first time
+            comps[adm], cold_t[adm] = _run_admission(eng, workload)
+            st = eng.stats
+            stats[adm] = {
+                "jit_misses": st.prefill_jit_misses,
+                "admission_dispatches": st.admission_dispatches,
+                "admission_batches": st.admission_batches,
+                "mean_admission_batch": st.mean_admission_batch,
+                "ingest_chunks": st.ingest_chunks,
+                "interleave_ratio": st.interleave_ratio,
+                "segments": st.segments,
+            }
+        # the bit-identity bar: batched+chunked admission must not
+        # change a single greedy token vs the PR-3 per-request path
+        for a, b in zip(comps["per_request"], comps["batched"]):
+            if not (a.uid == b.uid and np.array_equal(a.tokens,
+                                                      b.tokens)):
+                identical = False
+
+        warm = {adm: float("inf") for adm in engines}
+        if backend == "linear":                 # wall clock: linear only
+            for _ in range(REPEATS):
+                for adm, eng in engines.items():
+                    _, dt = _run_admission(eng, workload)
+                    warm[adm] = min(warm[adm], dt)
+        total = sum(len(c.tokens) for c in comps["batched"])
+        lin_only = backend == "linear"
+        rows.append({
+            "backend": backend,
+            "total_tokens": total,
+            "per_request": stats["per_request"],
+            "batched": stats["batched"],
+            "cold_per_request_tokens_per_s":
+                total / cold_t["per_request"] if lin_only else None,
+            "cold_batched_tokens_per_s":
+                total / cold_t["batched"] if lin_only else None,
+            "admission_speedup":
+                (cold_t["per_request"] / cold_t["batched"]
+                 if lin_only else None),
+            "warm_per_request_tokens_per_s":
+                total / warm["per_request"] if lin_only else None,
+            "warm_batched_tokens_per_s":
+                total / warm["batched"] if lin_only else None,
+            "warm_admission_speedup":
+                (warm["per_request"] / warm["batched"]
+                 if lin_only else None),
+        })
+
+    lin = next(r for r in rows if r["backend"] == "linear")
+    claims = {
+        # the acceptance bar: ≥1.3× first-service aggregate tokens/s on
+        # the long-prompt skewed mix (the recompile-bound regime the
+        # bucketing exists for)
+        "admission_1p3x_over_per_request":
+            lin["admission_speedup"] >= 1.3,
+        # deterministic forms for CI (wall clock flakes under load):
+        # the batched path issues ≥1.3× fewer admission device calls...
+        "admission_fewer_dispatches": all(
+            r["per_request"]["admission_dispatches"]
+            >= 1.3 * r["batched"]["admission_dispatches"] for r in rows),
+        # ...compiles ≥2× fewer admission programs (a FIXED set of
+        # power-of-2 bucket programs vs one compile per distinct prompt
+        # length — the per-request count keeps growing with traffic
+        # diversity, the bucket count cannot exceed O(log prefill_chunk))
+        "admission_2x_fewer_jit_misses": all(
+            r["per_request"]["jit_misses"]
+            >= 2 * r["batched"]["jit_misses"] for r in rows),
+        # ...and long-prompt chunked ingest ran with decode slots live
+        "chunked_prefill_interleaves_decode": all(
+            r["batched"]["ingest_chunks"] > 0
+            and r["batched"]["interleave_ratio"] > 0 for r in rows),
+        "admission_outputs_bit_identical": identical,
+    }
+    return {
+        "n_slots": N_SLOTS, "segment_len": SEGMENT_LEN,
+        "prefill_chunk": ADM_PREFILL_CHUNK,
+        "workload": {"n_requests": ADM_N_REQUESTS,
+                     "prompt_bases": ADM_PROMPT_BASES,
+                     "long_factor": ADM_LONG_FACTOR,
+                     "gen_len": ADM_GEN_LEN},
+        "rows": rows, "claims": claims,
+    }
+
+
 def main() -> List[str]:
     rows = run()
     out = ["continuous_batching,backend,static_tok_s,continuous_tok_s,"
@@ -148,13 +320,38 @@ def main() -> List[str]:
     for name, ok in claims.items():
         out.append(f"continuous_batching_claim,{name},"
                    f"{'PASS' if ok else 'FAIL'}")
+
+    adm = run_admission()
+    out.append("admission,backend,cold_pr_tok_s,cold_batched_tok_s,"
+               "cold_speedup,warm_speedup,pr_dispatches,"
+               "batched_dispatches,pr_misses,batched_misses,chunks,"
+               "interleave")
+    for r in adm["rows"]:
+        spd = r["admission_speedup"]
+        wspd = r["warm_admission_speedup"]
+        out.append(
+            f"admission,{r['backend']},"
+            f"{(r['cold_per_request_tokens_per_s'] or 0):.0f},"
+            f"{(r['cold_batched_tokens_per_s'] or 0):.0f},"
+            f"{(spd if spd is not None else 0):.2f},"
+            f"{(wspd if wspd is not None else 0):.2f},"
+            f"{r['per_request']['admission_dispatches']},"
+            f"{r['batched']['admission_dispatches']},"
+            f"{r['per_request']['jit_misses']},"
+            f"{r['batched']['jit_misses']},"
+            f"{r['batched']['ingest_chunks']},"
+            f"{r['batched']['interleave_ratio']:.2f}")
+    for name, ok in adm["claims"].items():
+        out.append(f"admission_claim,{name},{'PASS' if ok else 'FAIL'}")
+
     with open(BENCH_PATH, "w") as f:
         json.dump({"n_slots": N_SLOTS, "segment_len": SEGMENT_LEN,
                    "workload": {"n_requests": N_REQUESTS,
                                 "prompt_len": PROMPT_LEN,
                                 "gen_long": GEN_LONG,
                                 "gen_short": GEN_SHORT},
-                   "rows": rows, "claims": claims}, f, indent=2)
+                   "rows": rows, "claims": claims,
+                   "admission": adm}, f, indent=2)
     return out
 
 

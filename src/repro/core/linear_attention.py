@@ -183,6 +183,7 @@ def causal_linear_attention_chunked(
     *,
     chunk_size: int = DEFAULT_CHUNK,
     initial_state: Optional[Array] = None,
+    initial_z: Optional[Array] = None,
     normalize: bool = False,
     eps: float = 1e-6,
 ) -> Tuple[Array, Array]:
@@ -192,6 +193,12 @@ def causal_linear_attention_chunked(
 
     Mathematically identical to ``causal_linear_attention_scan`` (exact in
     fp32; the intra-chunk term is an MXU-shaped masked matmul).
+
+    ``initial_state`` / ``initial_z`` continue a previously-encoded
+    prefix: the state (and, under ``normalize``, the key-sum normaliser
+    entering the denominators) start from the carried values instead of
+    zero — the chunked-prefill continuation path, where a long prompt is
+    ingested window by window.
     """
     b, h, t, dk = q.shape
     dv = v.shape[-1]
@@ -209,7 +216,11 @@ def causal_linear_attention_chunked(
         if initial_state is None
         else initial_state.astype(acc_dtype)
     )
-    z0 = jnp.zeros((b, h, dk), acc_dtype)
+    z0 = (
+        jnp.zeros((b, h, dk), acc_dtype)
+        if initial_z is None
+        else initial_z.astype(acc_dtype)
+    )
 
     def step(carry, qkv_i):
         s, z = carry

@@ -28,6 +28,14 @@ Three variants share the structure:
   ``decode_linear``             S ← S + k vᵀ ;               o = Sᵀ q
   ``decode_linear`` (normalize) additionally z ← z + k ;     o /= q·z
   ``decode_gated``              S ← diag(exp(g)) S + k vᵀ ;  o = Sᵀ q
+
+Every variant also has a **variable-length masked** form (``lens=...``):
+each of the N rows carries its own valid length, and at window step w a
+row with ``w >= lens`` is inert — no state update, no normaliser update,
+zero output. That per-row masking inside the VMEM-resident scan is what
+lets ONE launch advance a batch of slots by *different* numbers of
+tokens (bucket-padded chunked prefill, batched speculative rewind),
+instead of one launch per distinct window length.
 """
 
 from __future__ import annotations
@@ -136,6 +144,82 @@ def _gated_kernel(s_ref, q_ref, k_ref, v_ref, g_ref, o_ref, s_out_ref,
         s_out_ref[...] = s_scratch[...].astype(s_out_ref.dtype)
 
 
+def _linear_varlen_kernel(lens_ref, s_ref, q_ref, k_ref, v_ref,
+                          o_ref, s_out_ref, s_scratch):
+    w = pl.program_id(1)
+
+    @pl.when(w == 0)
+    def _load():
+        s_scratch[...] = s_ref[...].astype(jnp.float32)
+
+    valid = lens_ref[...] > w                    # (N, 1) bool
+    q = q_ref[:, 0].astype(jnp.float32)          # (N, Dk)
+    k = k_ref[:, 0].astype(jnp.float32)
+    v = v_ref[:, 0].astype(jnp.float32)          # (N, Dv)
+    s_prev = s_scratch[...]
+    s = jnp.where(valid[:, :, None], _rank1_update(s_prev, k, v), s_prev)
+    s_scratch[...] = s
+    o_ref[:, 0] = jnp.where(valid, _lookup(s, q), 0.0).astype(o_ref.dtype)
+
+    @pl.when(w == pl.num_programs(1) - 1)
+    def _store():
+        s_out_ref[...] = s_scratch[...].astype(s_out_ref.dtype)
+
+
+def _linear_norm_varlen_kernel(lens_ref, s_ref, z_ref, q_ref, k_ref,
+                               v_ref, o_ref, s_out_ref, z_out_ref,
+                               s_scratch, z_scratch, *, eps):
+    w = pl.program_id(1)
+
+    @pl.when(w == 0)
+    def _load():
+        s_scratch[...] = s_ref[...].astype(jnp.float32)
+        z_scratch[...] = z_ref[...].astype(jnp.float32)
+
+    valid = lens_ref[...] > w                    # (N, 1) bool
+    q = q_ref[:, 0].astype(jnp.float32)
+    k = k_ref[:, 0].astype(jnp.float32)
+    v = v_ref[:, 0].astype(jnp.float32)
+    s_prev = s_scratch[...]
+    z_prev = z_scratch[...]
+    s = jnp.where(valid[:, :, None], _rank1_update(s_prev, k, v), s_prev)
+    z = jnp.where(valid, z_prev + k, z_prev)     # (N, Dk)
+    s_scratch[...] = s
+    z_scratch[...] = z
+    denom = safe_denom(jnp.sum(q * z, axis=1), eps)    # (N,)
+    o = _lookup(s, q) / denom[:, None]
+    o_ref[:, 0] = jnp.where(valid, o, 0.0).astype(o_ref.dtype)
+
+    @pl.when(w == pl.num_programs(1) - 1)
+    def _store():
+        s_out_ref[...] = s_scratch[...].astype(s_out_ref.dtype)
+        z_out_ref[...] = z_scratch[...].astype(z_out_ref.dtype)
+
+
+def _gated_varlen_kernel(lens_ref, s_ref, q_ref, k_ref, v_ref, g_ref,
+                         o_ref, s_out_ref, s_scratch):
+    w = pl.program_id(1)
+
+    @pl.when(w == 0)
+    def _load():
+        s_scratch[...] = s_ref[...].astype(jnp.float32)
+
+    valid = lens_ref[...] > w                    # (N, 1) bool
+    q = q_ref[:, 0].astype(jnp.float32)
+    k = k_ref[:, 0].astype(jnp.float32)
+    v = v_ref[:, 0].astype(jnp.float32)
+    a = jnp.exp(g_ref[:, 0].astype(jnp.float32))  # (N, Dk)
+    s_prev = s_scratch[...]
+    s = jnp.where(valid[:, :, None],
+                  _rank1_update(a[:, :, None] * s_prev, k, v), s_prev)
+    s_scratch[...] = s
+    o_ref[:, 0] = jnp.where(valid, _lookup(s, q), 0.0).astype(o_ref.dtype)
+
+    @pl.when(w == pl.num_programs(1) - 1)
+    def _store():
+        s_out_ref[...] = s_scratch[...].astype(s_out_ref.dtype)
+
+
 def _row(bn, dim):
     """One (bn, 1, dim) token row of a (N, W, dim) input."""
     return pl.BlockSpec((bn, 1, dim), lambda b, w: (b, w, 0))
@@ -147,42 +231,59 @@ def _state(bn, dk, dv):
     return pl.BlockSpec((bn, dk, dv), lambda b, w: (b, 0, 0))
 
 
+def _lens_spec(bn):
+    """The (bn, 1) per-row valid-length block — same block at every w."""
+    return pl.BlockSpec((bn, 1), lambda b, w: (b, 0))
+
+
 def decode_linear(s, q, k, v, *, z=None, normalize=False,
-                  eps: float = 1e-6, interpret: bool = False):
+                  eps: float = 1e-6, lens=None, interpret: bool = False):
     """W fused decode steps of the plain linear recurrence.
 
     s: (N, Dk, Dv); q, k: (N, W, Dk); v: (N, W, Dv); z: (N, Dk) or None.
-    Returns (o: (N, W, Dv), s_new, z_new) with s (and z) updated in place
-    via input/output aliasing.
+    ``lens``: (N,) int32 per-row valid lengths — row n consumes only its
+    first lens[n] window tokens (masked steps are inert; lens=0 rows are
+    untouched bit-for-bit). Returns (o: (N, W, Dv), s_new, z_new) with s
+    (and z) updated in place via input/output aliasing.
     """
     n, dk, dv = s.shape
     w_steps = q.shape[1]
     bn = _block_bh(n, dk, dv)
     grid = (n // bn, w_steps)
+    varlen = lens is not None
+    if varlen:
+        lens = lens.astype(jnp.int32).reshape(n, 1)
     if not normalize:
+        kern = (_linear_varlen_kernel if varlen else _linear_kernel)
+        pre = (lens,) if varlen else ()
         o, s_new = pl.pallas_call(
-            _linear_kernel,
+            kern,
             grid=grid,
-            in_specs=[_state(bn, dk, dv), _row(bn, dk), _row(bn, dk),
-                      _row(bn, dv)],
+            in_specs=([_lens_spec(bn)] if varlen else [])
+            + [_state(bn, dk, dv), _row(bn, dk), _row(bn, dk),
+               _row(bn, dv)],
             out_specs=[_row(bn, dv), _state(bn, dk, dv)],
             out_shape=[
                 jax.ShapeDtypeStruct((n, w_steps, dv), v.dtype),
                 jax.ShapeDtypeStruct((n, dk, dv), s.dtype),
             ],
             scratch_shapes=[pltpu.VMEM((bn, dk, dv), jnp.float32)],
-            input_output_aliases={0: 1},
+            input_output_aliases={len(pre): 1},
             interpret=interpret,
-        )(s, q, k, v)
+        )(*pre, s, q, k, v)
         return o, s_new, None
 
     assert z is not None, "normalize=True needs the key-sum normaliser z"
     zspec = pl.BlockSpec((bn, dk), lambda b, w: (b, 0))
+    kern = (functools.partial(_linear_norm_varlen_kernel, eps=eps)
+            if varlen else functools.partial(_linear_norm_kernel, eps=eps))
+    pre = (lens,) if varlen else ()
     o, s_new, z_new = pl.pallas_call(
-        functools.partial(_linear_norm_kernel, eps=eps),
+        kern,
         grid=grid,
-        in_specs=[_state(bn, dk, dv), zspec, _row(bn, dk), _row(bn, dk),
-                  _row(bn, dv)],
+        in_specs=([_lens_spec(bn)] if varlen else [])
+        + [_state(bn, dk, dv), zspec, _row(bn, dk), _row(bn, dk),
+           _row(bn, dv)],
         out_specs=[_row(bn, dv), _state(bn, dk, dv), zspec],
         out_shape=[
             jax.ShapeDtypeStruct((n, w_steps, dv), v.dtype),
@@ -193,35 +294,41 @@ def decode_linear(s, q, k, v, *, z=None, normalize=False,
             pltpu.VMEM((bn, dk, dv), jnp.float32),
             pltpu.VMEM((bn, dk), jnp.float32),
         ],
-        input_output_aliases={0: 1, 1: 2},
+        input_output_aliases={len(pre): 1, len(pre) + 1: 2},
         interpret=interpret,
-    )(s, z, q, k, v)
+    )(*pre, s, z, q, k, v)
     return o, s_new, z_new
 
 
-def decode_gated(s, q, k, v, g, *, interpret: bool = False):
+def decode_gated(s, q, k, v, g, *, lens=None, interpret: bool = False):
     """W fused decode steps of the gated recurrence (inclusive form).
 
     s: (N, Dk, Dv); q, k, g: (N, W, Dk); v: (N, W, Dv). g is the
     per-token log-decay (a = exp(g)); pass a broadcasted row for scalar
-    per-head decay. Returns (o: (N, W, Dv), s_new) with s updated in
-    place via input/output aliasing.
+    per-head decay. ``lens``: (N,) int32 per-row valid lengths (masked
+    steps are inert — no decay, no update). Returns (o: (N, W, Dv),
+    s_new) with s updated in place via input/output aliasing.
     """
     n, dk, dv = s.shape
     w_steps = q.shape[1]
     bn = _block_bh(n, dk, dv)
+    varlen = lens is not None
+    if varlen:
+        lens = lens.astype(jnp.int32).reshape(n, 1)
+    pre = (lens,) if varlen else ()
     o, s_new = pl.pallas_call(
-        _gated_kernel,
+        _gated_varlen_kernel if varlen else _gated_kernel,
         grid=(n // bn, w_steps),
-        in_specs=[_state(bn, dk, dv), _row(bn, dk), _row(bn, dk),
-                  _row(bn, dv), _row(bn, dk)],
+        in_specs=([_lens_spec(bn)] if varlen else [])
+        + [_state(bn, dk, dv), _row(bn, dk), _row(bn, dk),
+           _row(bn, dv), _row(bn, dk)],
         out_specs=[_row(bn, dv), _state(bn, dk, dv)],
         out_shape=[
             jax.ShapeDtypeStruct((n, w_steps, dv), v.dtype),
             jax.ShapeDtypeStruct((n, dk, dv), s.dtype),
         ],
         scratch_shapes=[pltpu.VMEM((bn, dk, dv), jnp.float32)],
-        input_output_aliases={0: 1},
+        input_output_aliases={len(pre): 1},
         interpret=interpret,
-    )(s, q, k, v, g)
+    )(*pre, s, q, k, v, g)
     return o, s_new

@@ -4,6 +4,12 @@ Handles (B, H, …) ↔ (BH, …) reshaping and the interpret-mode fallback
 used for CPU validation (the deployment target is TPU; on CPU the
 kernels run through the Pallas interpreter, so tests exercise the exact
 kernel code path).
+
+``lens`` (a (B,) int32 vector of per-row valid window lengths) selects
+the variable-length masked kernels: row b advances only its first
+lens[b] tokens, masked steps are inert, and lens[b] = 0 leaves the row's
+state untouched bit-for-bit — ONE launch serves a batch of slots at
+different depths consuming different numbers of tokens.
 """
 
 from __future__ import annotations
@@ -11,6 +17,7 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.fused_recurrent import kernel as _k
 
@@ -19,6 +26,14 @@ Array = jax.Array
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
+
+
+def _lens_bh(lens: Optional[Array], b: int, h: int) -> Optional[Array]:
+    """Broadcast a per-batch (B,) length vector over heads → (B·H,)."""
+    if lens is None:
+        return None
+    lens = jnp.asarray(lens, jnp.int32)
+    return jnp.broadcast_to(lens[:, None], (b, h)).reshape(b * h)
 
 
 def fused_recurrent_linear(
@@ -30,14 +45,16 @@ def fused_recurrent_linear(
     z: Optional[Array] = None,
     normalize: bool = False,
     eps: float = 1e-6,
+    lens: Optional[Array] = None,
     interpret: bool | None = None,
 ) -> Tuple[Array, Array, Optional[Array]]:
     """W fused decode steps, plain linear recurrence.
 
     s: (B, H, Dk, Dv); q, k: (B, H, W, Dk); v: (B, H, W, Dv);
-    z: (B, H, Dk) or None. Returns (o: (B, H, W, Dv), s_new, z_new) with
-    the state updated in place (input/output aliased) — one kernel
-    launch and one HBM state round-trip for the whole window.
+    z: (B, H, Dk) or None; lens: (B,) int32 per-row valid lengths or
+    None (full window everywhere). Returns (o: (B, H, W, Dv), s_new,
+    z_new) with the state updated in place (input/output aliased) — one
+    kernel launch and one HBM state round-trip for the whole window.
     """
     if interpret is None:
         interpret = _on_cpu()
@@ -49,7 +66,8 @@ def fused_recurrent_linear(
         k.reshape(b * h, w, dk),
         v.reshape(b * h, w, dv),
         z=None if z is None else z.reshape(b * h, dk),
-        normalize=normalize, eps=eps, interpret=interpret,
+        normalize=normalize, eps=eps, lens=_lens_bh(lens, b, h),
+        interpret=interpret,
     )
     return (
         o.reshape(b, h, w, dv),
@@ -65,12 +83,14 @@ def fused_recurrent_gated(
     v: Array,
     g: Array,
     *,
+    lens: Optional[Array] = None,
     interpret: bool | None = None,
 ) -> Tuple[Array, Array]:
     """W fused decode steps, gated (decay) recurrence, inclusive form.
 
     s: (B, H, Dk, Dv); q, k, g: (B, H, W, Dk); v: (B, H, W, Dv).
-    g is the log-decay (state is scaled by exp(g) each step). Returns
+    g is the log-decay (state is scaled by exp(g) each step); lens:
+    (B,) int32 per-row valid lengths or None. Returns
     (o: (B, H, W, Dv), s_new) with the state updated in place.
     """
     if interpret is None:
@@ -83,6 +103,7 @@ def fused_recurrent_gated(
         k.reshape(b * h, w, dk),
         v.reshape(b * h, w, dv),
         g.reshape(b * h, w, dk),
+        lens=_lens_bh(lens, b, h),
         interpret=interpret,
     )
     return o.reshape(b, h, w, dv), s_new.reshape(b, h, dk, dv)

@@ -6,6 +6,14 @@ serving recurrence — expressed as one ``lax.scan`` so it stays traceable
 at any W. Kernel-vs-ref equality IS the fused-matches-sequential
 acceptance check, and the model layer uses these as the
 ``decode_kernel="reference"`` fallback.
+
+The variable-length form (``lens``) applies the same per-row masking the
+varlen kernels do: at window step w, a row with ``w >= lens`` keeps its
+state (and normaliser) bit-for-bit and emits a zero output — because the
+masked select wraps the *identical* ``decode_step`` computation, a row
+with lens = n is bitwise the same as running that row alone through an
+n-token window, which is the property batched rewind/chunked admission
+rely on.
 """
 
 from __future__ import annotations
@@ -30,23 +38,36 @@ def fused_recurrent_linear_ref(
     z: Optional[Array] = None,
     normalize: bool = False,
     eps: float = 1e-6,
+    lens: Optional[Array] = None,
 ) -> Tuple[Array, Array, Optional[Array]]:
     """s: (B, H, Dk, Dv); q, k: (B, H, W, Dk); v: (B, H, W, Dv);
-    z: (B, H, Dk) or None. Returns (o: (B, H, W, Dv), s_new, z_new)."""
-    if q.shape[2] == 1:  # W == 1: no scan machinery in the hot loop
+    z: (B, H, Dk) or None; lens: (B,) int32 per-row valid lengths or
+    None. Returns (o: (B, H, W, Dv), s_new, z_new)."""
+    if lens is None and q.shape[2] == 1:
+        # W == 1: no scan machinery in the hot loop
         o, s_f, z_f = decode_step(s, q[:, :, 0], k[:, :, 0], v[:, :, 0],
                                   z=z, normalize=normalize, eps=eps)
         return o[:, :, None], s_f, z_f
 
-    def step(carry, qkv):
-        s, z = carry
-        q_w, k_w, v_w = qkv
-        o, s, z = decode_step(s, q_w, k_w, v_w, z=z,
-                              normalize=normalize, eps=eps)
-        return (s, z), o
+    lens_b = None if lens is None else lens.astype(jnp.int32)
 
-    qkv = tuple(jnp.moveaxis(x, 2, 0) for x in (q, k, v))
-    (s_f, z_f), o = jax.lax.scan(step, (s, z), qkv)
+    def step(carry, qkvw):
+        s, z = carry
+        q_w, k_w, v_w, w = qkvw
+        o, s_n, z_n = decode_step(s, q_w, k_w, v_w, z=z,
+                                  normalize=normalize, eps=eps)
+        if lens_b is not None:
+            valid = (w < lens_b)[:, None]                     # (B, 1)
+            s_n = jnp.where(valid[..., None, None], s_n, s)
+            if z_n is not None:
+                z_n = jnp.where(valid[..., None], z_n, z)
+            o = jnp.where(valid[..., None], o, 0.0).astype(o.dtype)
+        return (s_n, z_n), o
+
+    w_steps = q.shape[2]
+    qkvw = tuple(jnp.moveaxis(x, 2, 0) for x in (q, k, v)) + (
+        jnp.arange(w_steps),)
+    (s_f, z_f), o = jax.lax.scan(step, (s, z), qkvw)
     return jnp.moveaxis(o, 0, 2), s_f, z_f
 
 
@@ -56,19 +77,31 @@ def fused_recurrent_gated_ref(
     k: Array,
     v: Array,
     g: Array,
+    *,
+    lens: Optional[Array] = None,
 ) -> Tuple[Array, Array]:
-    """s: (B, H, Dk, Dv); q, k, g: (B, H, W, Dk); v: (B, H, W, Dv).
+    """s: (B, H, Dk, Dv); q, k, g: (B, H, W, Dk); v: (B, H, W, Dv);
+    lens: (B,) int32 per-row valid lengths or None.
     Returns (o: (B, H, W, Dv), s_new)."""
-    if q.shape[2] == 1:  # W == 1: no scan machinery in the hot loop
+    if lens is None and q.shape[2] == 1:
+        # W == 1: no scan machinery in the hot loop
         o, s_f = gated_decode_step(s, q[:, :, 0], k[:, :, 0], v[:, :, 0],
                                    g[:, :, 0])
         return o[:, :, None], s_f
 
-    def step(s, qkvg):
-        q_w, k_w, v_w, g_w = qkvg
-        o, s = gated_decode_step(s, q_w, k_w, v_w, g_w)
-        return s, o
+    lens_b = None if lens is None else lens.astype(jnp.int32)
 
-    qkvg = tuple(jnp.moveaxis(x, 2, 0) for x in (q, k, v, g))
-    s_f, o = jax.lax.scan(step, s, qkvg)
+    def step(s, qkvgw):
+        q_w, k_w, v_w, g_w, w = qkvgw
+        o, s_n = gated_decode_step(s, q_w, k_w, v_w, g_w)
+        if lens_b is not None:
+            valid = (w < lens_b)[:, None]                     # (B, 1)
+            s_n = jnp.where(valid[..., None, None], s_n, s)
+            o = jnp.where(valid[..., None], o, 0.0).astype(o.dtype)
+        return s_n, o
+
+    w_steps = q.shape[2]
+    qkvgw = tuple(jnp.moveaxis(x, 2, 0) for x in (q, k, v, g)) + (
+        jnp.arange(w_steps),)
+    s_f, o = jax.lax.scan(step, s, qkvgw)
     return jnp.moveaxis(o, 0, 2), s_f

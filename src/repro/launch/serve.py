@@ -22,9 +22,15 @@ Three modes:
   problem): requests with exponential inter-arrival times and a skewed
   generation-length mix are driven through the fixed-slot
   :class:`repro.serving.DecodeEngine`. Freed slots are refilled between
-  scan segments (prefill-on-admit + O(k²) state swap-in for the linear
-  family), so a long straggler no longer idles the rest of the batch.
-  Reports aggregate tokens/s and slot utilization.
+  scan segments by bucket-padded BATCHED varlen prefill (one dispatch
+  per admission wave, O(log prefill_chunk) compiled programs total);
+  prompts longer than ``--prefill-chunk`` are ingested in masked
+  varlen-window chunks interleaved with decode segments, so neither a
+  long straggler nor a long prompt idles the rest of the batch
+  (``--admission per_request`` selects the PR-2 host-blocking
+  prefill-on-admit baseline). Reports aggregate tokens/s, slot
+  utilization and admission stats (batch sizes, jit misses,
+  chunk-interleave ratio).
 
 * ``spec`` — speculative lookahead decoding through the slot engine: a
   draft provider proposes K tokens per round and ONE ``lm.decode_window``
@@ -153,7 +159,9 @@ def stream(args) -> int:
     engine = DecodeEngine(
         params, cfg, rules, n_slots=args.slots,
         segment_len=args.segment_len, max_len=max_len,
-        temperature=args.temperature, seed=args.seed)
+        temperature=args.temperature, seed=args.seed,
+        admission=getattr(args, "admission", "auto"),
+        prefill_chunk=getattr(args, "prefill_chunk", 64))
     rng = np.random.default_rng(args.seed)
     requests = make_request_mix(rng, args.n_requests, args.prompt_len,
                                 args.gen_len, cfg.vocab_size,
@@ -171,9 +179,16 @@ def stream(args) -> int:
           f"slots={args.slots} segment={args.segment_len}")
     print(f"stream: {len(completions)} requests, {total} tokens in "
           f"{dt:.2f} s ({total/dt:.0f} tok/s incl. compile)")
-    print(f"slot utilization {engine.stats.slot_utilization:.2f} over "
-          f"{engine.stats.segments} segments; mean latency "
+    st = engine.stats
+    print(f"slot utilization {st.slot_utilization:.2f} over "
+          f"{st.segments} segments; mean latency "
           f"{np.mean(lat):.0f} decode steps")
+    print(f"admission={engine.admission} chunk={engine.prefill_chunk}: "
+          f"{st.prefills} prompts in {st.admission_batches} batched "
+          f"waves (mean batch {st.mean_admission_batch:.1f}), "
+          f"{st.ingest_chunks} ingest chunks "
+          f"(interleave {st.interleave_ratio:.2f}), "
+          f"{st.prefill_jit_misses} admission jit misses")
     assert len(completions) == args.n_requests
     return 0
 
@@ -208,7 +223,8 @@ def spec(args) -> int:
     engine = DecodeEngine(
         params, cfg, rules, n_slots=args.slots,
         segment_len=args.segment_len, max_len=max_len, seed=args.seed,
-        draft=draft)
+        draft=draft, admission=getattr(args, "admission", "auto"),
+        prefill_chunk=getattr(args, "prefill_chunk", 64))
     rng = np.random.default_rng(args.seed)
     requests = [(rng.integers(0, cfg.vocab_size, size=args.prompt_len,
                               dtype=np.int64).astype(np.int32),
@@ -237,7 +253,8 @@ def spec(args) -> int:
     print(f"spec:  {total} tokens in {t_spec:.2f} s "
           f"({total/t_spec:.0f} tok/s) — acceptance "
           f"{st.acceptance_rate:.2f}, {st.spec_rounds} rounds, "
-          f"{st.spec_rewinds} rewinds")
+          f"{st.spec_rewinds} rewinds in "
+          f"{st.spec_rewind_dispatches} varlen dispatches")
     print(f"plain: {total} tokens in {t_plain:.2f} s "
           f"({total/t_plain:.0f} tok/s) — speculative speedup "
           f"{t_plain/t_spec:.2f}x, outputs bit-identical")
@@ -289,6 +306,15 @@ def main() -> int:
     ap.add_argument("--n-requests", type=int, default=16)
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="requests per decode step (0 = all at t=0)")
+    ap.add_argument("--admission", default="auto",
+                    choices=["auto", "batched", "per_request"],
+                    help="prompt ingestion: bucket-padded batched varlen"
+                         " prefill + chunked ingest (batched) vs the"
+                         " host-blocking prefill-on-admit baseline")
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="max prompt tokens per ingest dispatch (rounded"
+                         " up to a power of two); longer prompts are"
+                         " chunked and interleaved with decode segments")
     # spec mode (speculative lookahead)
     ap.add_argument("--speculate-k", type=int, default=6,
                     help="draft tokens per verify round")

@@ -337,18 +337,33 @@ def attention_apply(
     *,
     positions: Optional[Array] = None,
     want_state: bool = False,
+    varlen: Optional[Array] = None,
 ) -> Tuple[Array, Optional[AttnState]]:
     """Full-sequence attention. x: (B, T, D) → (B, T, D).
 
     ``want_state=True`` additionally returns the decode state after the
     last position (prefill → decode handoff). For the linear backends the
     state is the paper's fixed-size k×k representation of the prefix.
+
+    ``varlen``: (B,) int32 per-row valid prompt lengths for bucket-padded
+    batched prefill. Rows are END-padded; the pad positions' key/value
+    (and decay) contributions are zeroed before the state accumulation,
+    so each row's state — and its logits at positions < varlen[b] — are
+    BIT-IDENTICAL to prefilling that row alone unpadded: zero terms add
+    exactly, exp(0)=1 decays multiply exactly, and causality already
+    keeps later pad keys out of valid softmax queries. Outputs at pad
+    positions are garbage the caller must ignore.
     """
     b, t, _ = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     g = h // hkv
     if positions is None:
         positions = jnp.arange(t)
+    vmask = None
+    if varlen is not None:
+        # (B, 1, T, 1) over the flat-head (B, H, T, D) layout
+        vmask = (jnp.arange(t)[None, :] <
+                 jnp.asarray(varlen, jnp.int32)[:, None])[:, None, :, None]
 
     q, k, v = _project_qkv(p, x, cfg, rules)
     if cfg.rope:
@@ -402,6 +417,10 @@ def attention_apply(
         vh = constrain(_pad_head_dim(jnp.broadcast_to(
             v[:, None], (b, g, hkv, t, dh)).reshape(b, h, t, dh), hp),
             rules, "batch", "heads_lin", None, None)
+        if vmask is not None:
+            # zero pad-position k/v so they are inert in the state sum
+            kh = jnp.where(vmask, kh, 0).astype(kh.dtype)
+            vh = jnp.where(vmask, vh, 0).astype(vh.dtype)
 
         if backend == "linear":
             from repro.core.linear_attention import (
@@ -431,6 +450,9 @@ def attention_apply(
             from repro.core.gated import chunked_gla, \
                 gated_linear_attention
             gd = _pad_head_dim(_decay(p, x, cfg), hp)
+            if vmask is not None:
+                # pad positions must not decay the state: log-decay 0
+                gd = jnp.where(vmask[:, :, :, :1], gd, 0.0)
             if want_state:
                 o_h, s_f = chunked_gla(
                     qh, kh, vh, gd, chunk_size=cfg.linear_chunk,
@@ -491,28 +513,30 @@ def _use_fused_decode(cfg: ModelConfig) -> bool:
     return False
 
 
-def _recurrent_linear(s, q, k, v, z, cfg: ModelConfig):
+def _recurrent_linear(s, q, k, v, z, cfg: ModelConfig, lens=None):
     """W-step linear decode recurrence behind ``cfg.decode_kernel``:
     the fused Pallas kernel (VMEM-resident state, in-place HBM update)
     or the jnp scan reference. Shapes: s (B,H,Dk,Dv); q,k (B,H,W,Dk);
-    v (B,H,W,Dv); z (B,H,Dk)|None."""
+    v (B,H,W,Dv); z (B,H,Dk)|None; lens (B,)|None per-row valid
+    lengths (varlen masked kernels)."""
     from repro.kernels.fused_recurrent import ops as FR
     from repro.kernels.fused_recurrent import ref as FRref
     if _use_fused_decode(cfg):
         return FR.fused_recurrent_linear(
-            s, q, k, v, z=z, normalize=cfg.linear_normalize)
+            s, q, k, v, z=z, normalize=cfg.linear_normalize, lens=lens)
     return FRref.fused_recurrent_linear_ref(
-        s, q, k, v, z=z, normalize=cfg.linear_normalize)
+        s, q, k, v, z=z, normalize=cfg.linear_normalize, lens=lens)
 
 
-def _recurrent_gated(s, q, k, v, g, cfg: ModelConfig):
+def _recurrent_gated(s, q, k, v, g, cfg: ModelConfig, lens=None):
     """W-step gated decode recurrence behind ``cfg.decode_kernel``.
-    Shapes: s (B,H,Dk,Dv); q,k,g (B,H,W,Dk); v (B,H,W,Dv)."""
+    Shapes: s (B,H,Dk,Dv); q,k,g (B,H,W,Dk); v (B,H,W,Dv);
+    lens (B,)|None."""
     from repro.kernels.fused_recurrent import ops as FR
     from repro.kernels.fused_recurrent import ref as FRref
     if _use_fused_decode(cfg):
-        return FR.fused_recurrent_gated(s, q, k, v, g)
-    return FRref.fused_recurrent_gated_ref(s, q, k, v, g)
+        return FR.fused_recurrent_gated(s, q, k, v, g, lens=lens)
+    return FRref.fused_recurrent_gated_ref(s, q, k, v, g, lens=lens)
 
 
 def attention_decode(
@@ -522,6 +546,8 @@ def attention_decode(
     pos: Array,
     cfg: ModelConfig,
     rules: Rules,
+    *,
+    active: Optional[Array] = None,
 ) -> Tuple[Array, AttnState]:
     """One decode step. x: (B, D); pos: () current position, or (B,)
     per-sequence positions (continuous batching: each slot sits at its
@@ -529,6 +555,14 @@ def attention_decode(
 
     softmax: O(pos) cache read. linear family: O(k²) — independent of pos
     (the paper's constant-time lookup).
+
+    ``active``: (B,) bool slot mask. An inactive row's state is frozen
+    bit-for-bit AT ROW GRANULARITY: the linear family selects its O(k²)
+    matrix (cheap either way), but the softmax baseline gates the ONE
+    written KV-cache row — reading the current row back and writing
+    where(active, new, current) — instead of a whole-(max_len) cache
+    select per step, which is what makes slot masking affordable for
+    the KV-cache backend at large max_len.
     """
     b, _ = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -544,17 +578,31 @@ def attention_decode(
     if backend == "softmax":
         k_new = jnp.transpose(k, (0, 2, 1, 3)).astype(state.k_cache.dtype)
         v_new = jnp.transpose(v, (0, 2, 1, 3)).astype(state.v_cache.dtype)
-        if pos.ndim == 0:
+        if pos.ndim == 0 and active is None:
             k_cache = jax.lax.dynamic_update_slice_in_dim(
                 state.k_cache, k_new, pos, axis=1)
             v_cache = jax.lax.dynamic_update_slice_in_dim(
                 state.v_cache, v_new, pos, axis=1)
-        else:  # per-slot positions: one scatter row per sequence
+        elif active is None:  # per-slot positions: one row per sequence
             upd = jax.vmap(
                 lambda c, u, p_i: jax.lax.dynamic_update_slice_in_dim(
                     c, u, p_i, axis=0))
             k_cache = upd(state.k_cache, k_new, pos)
             v_cache = upd(state.v_cache, v_new, pos)
+        else:
+            # row-level slot masking: write where(active, new, current)
+            # back to the row — an inactive slot's cache is untouched
+            # bit-for-bit at O(row) cost instead of an O(max_len) select
+            posb = jnp.broadcast_to(pos, (b,))
+
+            def upd_row(c, u, p_i, a_i):
+                cur = jax.lax.dynamic_slice_in_dim(c, p_i, 1, axis=0)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    c, jnp.where(a_i, u, cur), p_i, axis=0)
+
+            upd = jax.vmap(upd_row)
+            k_cache = upd(state.k_cache, k_new, posb, active)
+            v_cache = upd(state.v_cache, v_new, posb, active)
         kc = jnp.transpose(k_cache, (0, 2, 1, 3))
         vc = jnp.transpose(v_cache, (0, 2, 1, 3))
         o = xattn.decode_attention(q[:, :, :, 0], kc, vc, pos + 1)
@@ -579,6 +627,11 @@ def attention_decode(
                 state.s, qh[:, :, None], kh[:, :, None], vh[:, :, None],
                 state.z, cfg)
             o_h = o_w[:, :, 0]
+            if active is not None:  # O(k²) per-row freeze
+                sel = active[:, None, None, None]
+                s_new = jnp.where(sel, s_new, state.s)
+                if z_new is not None:
+                    z_new = jnp.where(sel[..., 0], z_new, state.z)
             new_state = AttnState(k_cache=None, v_cache=None,
                                   s=s_new, z=z_new)
         else:
@@ -593,6 +646,9 @@ def attention_decode(
             o_h = L.groupnorm_heads(
                 o_h[:, :h][:, None], p["gn_scale"].astype(jnp.float32),
                 p["gn_bias"].astype(jnp.float32))[:, 0]
+            if active is not None:  # O(k²) per-row freeze
+                s_new = jnp.where(active[:, None, None, None],
+                                  s_new, state.s)
             new_state = AttnState(k_cache=None, v_cache=None,
                                   s=s_new, z=None)
         o = o_h[:, :h].reshape(b, g, hkv, dh)
@@ -608,6 +664,8 @@ def attention_decode_window(
     pos0: Array,
     cfg: ModelConfig,
     rules: Rules,
+    *,
+    lens: Optional[Array] = None,
 ) -> Tuple[Array, AttnState]:
     """Decode W known tokens in one fused kernel launch.
 
@@ -618,6 +676,12 @@ def attention_decode_window(
     HBM state traffic is O(Dk·Dv) instead of O(W·Dk·Dv). The softmax
     KV-cache backend has no such recurrence; callers fall back to
     scanning single-token decode (see blocks.block_decode_window).
+
+    ``lens``: (B,) int32 per-row valid window lengths — row b advances
+    only its first lens[b] tokens through the varlen masked kernels
+    (lens=0 rows frozen bit-for-bit), so ONE launch serves slots
+    consuming different token counts (chunked admission, batched
+    speculative rewind).
     """
     backend = cfg.attention_backend
     assert backend in ("linear", "gated_linear"), backend
@@ -642,9 +706,11 @@ def attention_decode_window(
     vh = _pad_head_dim(jnp.broadcast_to(
         v[:, None], (b, g, hkv, w, dh)).reshape(b, h, w, dh), hp)
 
+    if lens is not None:
+        lens = jnp.clip(jnp.asarray(lens, jnp.int32), 0, w)
     if backend == "linear":
         o_w, s_new, z_new = _recurrent_linear(
-            state.s, qh, kh, vh, state.z, cfg)
+            state.s, qh, kh, vh, state.z, cfg, lens=lens)
         new_state = AttnState(k_cache=None, v_cache=None,
                               s=s_new, z=z_new)
     else:
@@ -652,7 +718,90 @@ def attention_decode_window(
         gd = jnp.broadcast_to(gd, (b, h, w, dh)) if gd.shape[-1] == 1 \
             else gd
         gd = _pad_head_dim(gd, hp)
-        o_w, s_new = _recurrent_gated(state.s, qh, kh, vh, gd, cfg)
+        o_w, s_new = _recurrent_gated(state.s, qh, kh, vh, gd, cfg,
+                                      lens=lens)
+        o_w = L.groupnorm_heads(
+            jnp.transpose(o_w[:, :h], (0, 2, 1, 3)),
+            p["gn_scale"].astype(jnp.float32),
+            p["gn_bias"].astype(jnp.float32),
+        )
+        o_w = jnp.transpose(o_w, (0, 2, 1, 3))
+        new_state = AttnState(k_cache=None, v_cache=None,
+                              s=s_new, z=None)
+
+    o = o_w[:, :h].reshape(b, g, hkv, w, dh)
+    y = _merge_heads(p, o, cfg, x.dtype)
+    return y, new_state
+
+
+def attention_ingest_window(
+    p: Params,
+    x: Array,
+    state: AttnState,
+    pos0: Array,
+    cfg: ModelConfig,
+    rules: Rules,
+    *,
+    lens: Array,
+) -> Tuple[Array, AttnState]:
+    """Chunk-PARALLEL variable-length window: continue a partially
+    encoded prefix over up to W more known tokens per row.
+
+    x: (B, W, D); pos0: (B,) per-row window start positions; lens: (B,)
+    valid counts (0 = inert row). Linear family only. Unlike
+    :func:`attention_decode_window` (the sequential recurrent form, one
+    state update per token), this runs the same chunk-parallel kernels
+    as prefill — masked pad/invalid positions contribute zero key/value
+    terms and exp(0)=1 decay — CONTINUING from the carried state (and
+    key-sum normaliser), so long-prompt ingestion costs prefill FLOPs,
+    not W sequential decode steps. Chunked-prefill continuation is the
+    intended caller; outputs at masked positions are garbage.
+    """
+    backend = cfg.attention_backend
+    assert backend in ("linear", "gated_linear"), backend
+    b, w, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // hkv
+    lens = jnp.clip(jnp.asarray(lens, jnp.int32), 0, w)
+    q, k, v = _project_qkv(p, x, cfg, rules)
+    if cfg.rope:
+        pos0 = jnp.asarray(pos0, jnp.int32)
+        positions = jnp.broadcast_to(pos0, (b,))[:, None] + jnp.arange(w)
+        q, k = _rope(q, k, positions, cfg)
+
+    qf = feature_map(q, cfg.feature_map)       # (B, G, Hkv, W, Dh)
+    kf = feature_map(k, cfg.feature_map)       # (B, Hkv, W, Dh)
+    if cfg.feature_gate:
+        kf, v = _gate_kv(p, x, kf, v, cfg)
+    hp = state.s.shape[1]          # padded head count (≥ h)
+    qh = _pad_head_dim(qf.reshape(b, h, w, dh), hp)
+    kh = _pad_head_dim(jnp.broadcast_to(
+        kf[:, None], (b, g, hkv, w, dh)).reshape(b, h, w, dh), hp)
+    vh = _pad_head_dim(jnp.broadcast_to(
+        v[:, None], (b, g, hkv, w, dh)).reshape(b, h, w, dh), hp)
+    vmask = (jnp.arange(w)[None, :] < lens[:, None])[:, None, :, None]
+    kh = jnp.where(vmask, kh, 0).astype(kh.dtype)
+    vh = jnp.where(vmask, vh, 0).astype(vh.dtype)
+
+    if backend == "linear":
+        from repro.core.linear_attention import (
+            causal_linear_attention_chunked)
+        o_w, s_new = causal_linear_attention_chunked(
+            qh, kh, vh, chunk_size=cfg.linear_chunk,
+            initial_state=state.s, initial_z=state.z,
+            normalize=cfg.linear_normalize)
+        z_new = (state.z + jnp.sum(kh.astype(jnp.float32), axis=2)
+                 if cfg.linear_normalize else None)
+        new_state = AttnState(k_cache=None, v_cache=None,
+                              s=s_new, z=z_new)
+    else:
+        from repro.core.gated import chunked_gla
+        gd = _decay(p, x, cfg)                             # (B, H, W, gd)
+        gd = _pad_head_dim(gd, hp)
+        gd = jnp.where(vmask[:, :, :, :1], gd, 0.0)  # inert: exp(0)=1
+        o_w, s_new = chunked_gla(
+            qh, kh, vh, gd, chunk_size=cfg.linear_chunk,
+            initial_state=state.s)
         o_w = L.groupnorm_heads(
             jnp.transpose(o_w[:, :h], (0, 2, 1, 3)),
             p["gn_scale"].astype(jnp.float32),

@@ -142,17 +142,22 @@ def block_apply(
     shared: Optional[Params] = None,
     memory: Optional[Array] = None,
     want_state: bool = False,
+    varlen: Optional[Array] = None,
 ) -> Tuple[Array, Any, Array]:
-    """Returns (x, state_or_None, aux_loss)."""
+    """Returns (x, state_or_None, aux_loss). ``varlen``: (B,) per-row
+    valid lengths for bucket-padded batched prefill (attention blocks
+    only — callers guard the pattern)."""
     zero = jnp.zeros((), jnp.float32)
     if kind == "shared_attn":
         p = shared
     if kind == "mamba":
+        assert varlen is None, "varlen prefill: attention blocks only"
         h, st = M.mamba2_apply(p["mamba"], L.apply_norm(cfg.norm,
                                p["norm1"], x), cfg, rules,
                                want_state=want_state)
         return x + h, st, zero
     if kind == "rwkv":
+        assert varlen is None, "varlen prefill: attention blocks only"
         x, st = R.rwkv6_apply(p, x, cfg, rules, want_state=want_state)
         return x, st, zero
 
@@ -162,13 +167,14 @@ def block_apply(
     # slice — Megatron-SP's ḡ, 1/3 less wire per sub-block (§Perf iter 10).
     h1 = L.apply_norm(cfg.norm, p["norm1"], x)
     if kind == "cross":
+        assert varlen is None, "varlen prefill: attention blocks only"
         mem = A.encode_cross_memory(p["cross"], memory, cfg)
         att = A.cross_attention_apply(p["cross"], h1, mem, cfg, rules)
         att = jnp.tanh(p["xgate"]).astype(att.dtype) * att
         st = mem if want_state else None
     else:
         att, st = A.attention_apply(p["attn"], h1, cfg, rules,
-                                    want_state=want_state)
+                                    want_state=want_state, varlen=varlen)
     x = x + constrain(att, rules, "batch", "seq_sp", "embed")
     h2 = L.apply_norm(cfg.norm, p["norm2"], x)
     if _uses_moe(kind, cfg):
@@ -182,6 +188,17 @@ def block_apply(
 # decode (single token)
 # ---------------------------------------------------------------------------
 
+def _freeze_rows(active: Array, new: Any, old: Any) -> Any:
+    """Per-row (slot-axis-0) select over a block state pytree — the
+    generic inactive-slot freeze for state kinds without a row-level
+    masked write (Mamba conv/SSM states, RWKV mix states)."""
+    def sel(n, o):
+        shape = [1] * n.ndim
+        shape[0] = active.shape[0]
+        return jnp.where(active.reshape(shape), n, o)
+    return jax.tree.map(sel, new, old)
+
+
 def block_decode(
     kind: str,
     p: Optional[Params],
@@ -192,18 +209,27 @@ def block_decode(
     rules: Rules,
     *,
     shared: Optional[Params] = None,
+    active: Optional[Array] = None,
 ) -> Tuple[Array, Any]:
     """x: (B, D) one token per sequence; pos: () shared position or (B,)
-    per-slot positions (continuous batching). Returns (x, new_state)."""
+    per-slot positions (continuous batching). ``active``: (B,) bool slot
+    mask — inactive rows keep their state bit-for-bit (attention blocks
+    mask at row granularity inside ``attention_decode``; other kinds via
+    a generic per-leaf select). Returns (x, new_state)."""
     if kind == "shared_attn":
         p = shared
     if kind == "mamba":
         h, st = M.mamba2_decode(
             p["mamba"], L.apply_norm(cfg.norm, p["norm1"], x), state, cfg,
             rules)
+        if active is not None:
+            st = _freeze_rows(active, st, state)
         return x + h, st
     if kind == "rwkv":
-        return R.rwkv6_decode(p, x, state, cfg, rules)
+        x_out, st = R.rwkv6_decode(p, x, state, cfg, rules)
+        if active is not None:
+            st = _freeze_rows(active, st, state)
+        return x_out, st
 
     h1 = L.apply_norm(cfg.norm, p["norm1"], x)
     if kind == "cross":
@@ -212,7 +238,8 @@ def block_decode(
         att = jnp.tanh(p["xgate"]).astype(att.dtype) * att
         st = state   # memory is static during decode
     else:
-        att, st = A.attention_decode(p["attn"], h1, state, pos, cfg, rules)
+        att, st = A.attention_decode(p["attn"], h1, state, pos, cfg,
+                                     rules, active=active)
     x = x + att
     h2 = L.apply_norm(cfg.norm, p["norm2"], x)
     if _uses_moe(kind, cfg):
@@ -236,17 +263,22 @@ def block_decode_window(
     rules: Rules,
     *,
     shared: Optional[Params] = None,
+    lens: Optional[Array] = None,
 ) -> Tuple[Array, Any]:
     """x: (B, W, D) — W known tokens per sequence; pos0: () shared
     window start or (B,) per-sequence starts (speculative verify in the
-    slot engine). Returns (x, new_state).
+    slot engine). ``lens``: (B,) int32 per-row valid window lengths
+    (variable-length masked windows; lens=0 rows frozen bit-for-bit).
+    Returns (x, new_state).
 
     Attention blocks under the linear backends advance their fixed-size
-    state W steps inside ONE fused recurrent kernel; cross blocks are
-    position-independent lookups against static memory; every other kind
-    (softmax KV cache, Mamba, RWKV) falls back to scanning the
-    single-token ``block_decode`` over the window — per-slot positions
-    flow through ``pos0 + w`` into the per-slot KV-cache row writes.
+    state W steps inside ONE fused recurrent kernel (masked per-row when
+    ``lens`` is given); cross blocks are position-independent lookups
+    against static memory; every other kind (softmax KV cache, Mamba,
+    RWKV) falls back to scanning the single-token ``block_decode`` over
+    the window — per-slot positions flow through ``pos0 + w`` into the
+    per-slot KV-cache row writes, and ``lens`` becomes a per-step
+    ``active = w < lens`` row mask on those writes.
     """
     if kind == "shared_attn":
         p = shared
@@ -260,12 +292,13 @@ def block_decode_window(
     elif linear_attn:
         h1 = L.apply_norm(cfg.norm, p["norm1"], x)
         att, st = A.attention_decode_window(
-            p["attn"], h1, state, pos0, cfg, rules)
+            p["attn"], h1, state, pos0, cfg, rules, lens=lens)
     else:
         def step(st, xw):
             x_t, w = xw
+            act = None if lens is None else w < lens
             y, st = block_decode(kind, p, x_t, st, pos0 + w, cfg, rules,
-                                 shared=shared)
+                                 shared=shared, active=act)
             return st, y
 
         st, y = jax.lax.scan(
@@ -273,6 +306,47 @@ def block_decode_window(
             (jnp.moveaxis(x, 1, 0), jnp.arange(x.shape[1])))
         return jnp.moveaxis(y, 0, 1), st
 
+    x = x + att
+    h2 = L.apply_norm(cfg.norm, p["norm2"], x)
+    if _uses_moe(kind, cfg):
+        ff, _ = MOE.moe_apply(p["moe"], h2, cfg, rules)
+    else:
+        ff = L.mlp(p["mlp"], h2, cfg.act)
+    return x + ff, st
+
+
+# ---------------------------------------------------------------------------
+# ingest (chunk-PARALLEL varlen window — chunked-prefill continuation)
+# ---------------------------------------------------------------------------
+
+def block_ingest_window(
+    kind: str,
+    p: Optional[Params],
+    x: Array,
+    state: Any,
+    pos0: Array,
+    cfg: ModelConfig,
+    rules: Rules,
+    *,
+    shared: Optional[Params] = None,
+    lens: Optional[Array] = None,
+) -> Tuple[Array, Any]:
+    """Like :func:`block_decode_window`, but attention blocks under the
+    linear backends continue their state through the chunk-PARALLEL
+    prefill kernels (``attention_ingest_window``) instead of the
+    sequential recurrence — prefill FLOPs per ingested chunk rather than
+    W decode steps. Every other kind keeps the masked per-step fallback
+    (the softmax cache has no cheap parallel continuation)."""
+    linear_attn = (kind in ("attn", "shared_attn")
+                   and cfg.attention_backend in ("linear", "gated_linear"))
+    if not linear_attn or lens is None:
+        return block_decode_window(kind, p, x, state, pos0, cfg, rules,
+                                   shared=shared, lens=lens)
+    if kind == "shared_attn":
+        p = shared
+    h1 = L.apply_norm(cfg.norm, p["norm1"], x)
+    att, st = A.attention_ingest_window(
+        p["attn"], h1, state, pos0, cfg, rules, lens=lens)
     x = x + att
     h2 = L.apply_norm(cfg.norm, p["norm2"], x)
     if _uses_moe(kind, cfg):

@@ -156,11 +156,19 @@ def forward(
     *,
     memory: Optional[Array] = None,
     want_state: bool = False,
+    varlen: Optional[Array] = None,
 ) -> Tuple[Array, Array, Any]:
     """tokens: (B, T) int32 → (logits (B, T, V), aux_loss, states|None).
 
     ``memory``: (B, N_img, D) precomputed modality embeddings for "cross"
     blocks (frontend stub per the assignment).
+
+    ``varlen``: (B,) int32 per-row valid lengths for bucket-padded
+    batched prefill (rows END-padded to T). Pad positions are inert in
+    every attention state accumulation, so row b's states and its logits
+    at positions < varlen[b] are bit-identical to an unpadded forward of
+    that row alone; logits at pad positions are garbage. Attention-only
+    layer patterns (see :func:`prefill_varlen`).
     """
     adt = _dtype(cfg.dtype)
     pattern, reps, tail = cfg.pattern_and_repeats
@@ -190,7 +198,7 @@ def forward(
             x, st, a = B.block_apply(
                 kind, unit_params[pos] if kind != "shared_attn" else None,
                 x, cfg, rules, shared=shared, memory=mem,
-                want_state=want_state)
+                want_state=want_state, varlen=varlen)
             x = constrain(x, rules, "batch", "seq_sp", "embed")
             aux = aux + a
             states.append(st)
@@ -210,7 +218,7 @@ def forward(
         x, st, a = B.block_apply(
             kind, params["tail"][i] if kind != "shared_attn" else None,
             x, cfg, rules, shared=shared, memory=mem,
-            want_state=want_state)
+            want_state=want_state, varlen=varlen)
         x = constrain(x, rules, "batch", "seq_sp", "embed")
         aux = aux + a
         tail_states.append(st)
@@ -318,10 +326,16 @@ def decode_step(
     pos: Array,
     cfg: ModelConfig,
     rules: Rules,
+    active: Optional[Array] = None,
 ) -> Tuple[Array, Any]:
     """One autoregressive step. token: (B,) int32; pos: () int32 shared
     position, or (B,) int32 per-sequence positions (continuous batching:
     every slot decodes at its own depth in its own request).
+
+    ``active``: (B,) bool slot mask — inactive rows keep their state
+    bit-for-bit, masked at ROW granularity inside each block (the
+    softmax backend gates the one written KV-cache row instead of
+    selecting whole caches; see ``attention_decode``).
 
     Returns (logits (B, V), new_state). For the linear backends the cost
     is O(k²) per layer — independent of pos (paper's fast lookup).
@@ -348,7 +362,8 @@ def decode_step(
         for p_i, kind in enumerate(pattern):
             x, st = B.block_decode(
                 kind, unit_params[p_i] if kind != "shared_attn" else None,
-                x, unit_state[p_i], pos, cfg, rules, shared=shared)
+                x, unit_state[p_i], pos, cfg, rules, shared=shared,
+                active=active)
             new_states.append(st)
         return x, tuple(new_states)
 
@@ -359,7 +374,8 @@ def decode_step(
     for i, kind in enumerate(tail):
         x, st = B.block_decode(
             kind, params["tail"][i] if kind != "shared_attn" else None,
-            x, state["tail"][i], pos, cfg, rules, shared=shared)
+            x, state["tail"][i], pos, cfg, rules, shared=shared,
+            active=active)
         new_tail.append(st)
 
     x = L.apply_norm(cfg.norm, params["final_norm"], x)
@@ -511,9 +527,11 @@ def where_state(active: Array, new: Any, old: Any) -> Any:
     Cost: one select per state leaf. O(k²) per layer for the linear
     family (why slot masking is cheap for this paper's states); for the
     softmax baseline the select spans the full (S, max_len, Hkv, Dh)
-    caches even though the step wrote one row — acceptable for the
-    baseline, but a row-level mask inside ``attention_decode`` would be
-    needed to serve softmax competitively at large max_len."""
+    caches. The decode hot loop therefore does NOT use this anymore —
+    ``decode_step(active=...)`` masks at row granularity inside each
+    block (softmax gates its one written cache row) — but it remains
+    the right tool for whole-state merges outside the step, e.g.
+    committing a speculative verify state into accepting slots."""
     def sel(n, o, axis):
         shape = [1] * n.ndim
         shape[axis] = active.shape[0]
@@ -585,7 +603,11 @@ def generate_segment(
 
     def step(carry, _):
         tok, st, pos, act, rem, k = carry
-        logits, st_new = decode_step(params, st, tok, pos, cfg, rules)
+        # inactive-slot freezing happens at ROW granularity inside the
+        # step (softmax: the one written KV-cache row is gated on act,
+        # not the whole cache — the row-level slot-masking optimisation)
+        logits, st = decode_step(params, st, tok, pos, cfg, rules,
+                                 active=act)
         if greedy:
             sub = None          # no PRNG consumed in the hot loop
         else:
@@ -596,7 +618,6 @@ def generate_segment(
         done = rem <= 0
         if eos_id is not None:
             done = done | (nxt == eos_id)
-        st = where_state(act, st_new, st)
         pos = jnp.where(act, pos + 1, pos)
         tok = jnp.where(act, nxt, tok)
         return (tok, st, pos, act & ~done, rem, k), emitted
@@ -607,6 +628,66 @@ def generate_segment(
     return jnp.moveaxis(toks, 0, 1), {
         "tok": tok_f, "pos": pos_f, "active": act_f,
         "remaining": rem_f, "state": st_f, "key": key_f}
+
+
+def _window_forward(
+    params: Params,
+    state: Any,
+    tokens: Array,
+    pos0: Array,
+    cfg: ModelConfig,
+    rules: Rules,
+    block_fn,
+    **block_kw,
+) -> Tuple[Array, Any]:
+    """Shared driver for every W-token window pass (embed → stacked-unit
+    scan → tail → final norm → lm head); ``block_fn`` is the per-block
+    window primitive (``B.block_decode_window`` /
+    ``B.block_ingest_window``) and ``block_kw`` its extra row-masking
+    arguments. The three public windows below differ ONLY here."""
+    adt = _dtype(cfg.dtype)
+    pattern, reps, tail = cfg.pattern_and_repeats
+
+    params = cast_params(params, adt)
+    if rules.model_size > 1:
+        # same vocab-sharded one-hot contraction as decode_step: a local
+        # matmul + tiny psum instead of all-gathering the embedding
+        # table every window.
+        onehot = jax.nn.one_hot(tokens, cfg.vocab_size, dtype=adt)
+        onehot = constrain(onehot, rules, "batch", "seq", "vocab")
+        x = onehot @ params["embed"].astype(adt)            # (B, W, D)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(adt)
+    x = constrain(x, rules, "batch", "seq", "embed")
+    shared = params["shared"]
+
+    def unit(x, scanned):
+        unit_params, unit_state = scanned
+        new_states = []
+        for p_i, kind in enumerate(pattern):
+            x, st = block_fn(
+                kind, unit_params[p_i] if kind != "shared_attn" else None,
+                x, unit_state[p_i], pos0, cfg, rules, shared=shared,
+                **block_kw)
+            new_states.append(st)
+        return x, tuple(new_states)
+
+    x, new_stack = jax.lax.scan(
+        unit, x, (params["stack"], state["stack"]), length=reps)
+
+    new_tail = []
+    for i, kind in enumerate(tail):
+        x, st = block_fn(
+            kind, params["tail"][i] if kind != "shared_attn" else None,
+            x, state["tail"][i], pos0, cfg, rules, shared=shared,
+            **block_kw)
+        new_tail.append(st)
+
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(adt)
+    logits = constrain(logits, rules, "batch", "seq", "vocab")
+    return logits, {"stack": new_stack, "tail": tuple(new_tail)}
 
 
 def decode_window(
@@ -632,48 +713,79 @@ def decode_window(
     decode over the window (see blocks.block_decode_window), writing its
     KV cache rows per slot position.
     """
-    adt = _dtype(cfg.dtype)
-    pattern, reps, tail = cfg.pattern_and_repeats
     pos0 = jnp.asarray(pos0, jnp.int32)
+    return _window_forward(params, state, tokens, pos0, cfg, rules,
+                           B.block_decode_window)
 
-    params = cast_params(params, adt)
-    if rules.model_size > 1:
-        # same vocab-sharded one-hot contraction as decode_step: a local
-        # matmul + tiny psum instead of all-gathering the embedding
-        # table every verify window.
-        onehot = jax.nn.one_hot(tokens, cfg.vocab_size, dtype=adt)
-        onehot = constrain(onehot, rules, "batch", "seq", "vocab")
-        x = onehot @ params["embed"].astype(adt)            # (B, W, D)
-    else:
-        x = jnp.take(params["embed"], tokens, axis=0).astype(adt)
-    x = constrain(x, rules, "batch", "seq", "embed")
-    shared = params["shared"]
 
-    def unit(x, scanned):
-        unit_params, unit_state = scanned
-        new_states = []
-        for p_i, kind in enumerate(pattern):
-            x, st = B.block_decode_window(
-                kind, unit_params[p_i] if kind != "shared_attn" else None,
-                x, unit_state[p_i], pos0, cfg, rules, shared=shared)
-            new_states.append(st)
-        return x, tuple(new_states)
+def decode_window_varlen(
+    params: Params,
+    state: Any,
+    tokens: Array,
+    pos0: Array,
+    lens: Array,
+    cfg: ModelConfig,
+    rules: Rules,
+    *,
+    active: Optional[Array] = None,
+) -> Tuple[Array, Any]:
+    """Variable-length masked window: advance each row of the decode
+    state over ITS OWN number of known tokens in one dispatch.
 
-    x, new_stack = jax.lax.scan(
-        unit, x, (params["stack"], state["stack"]), length=reps)
+    tokens: (B, W) int32, row b's valid tokens END-padded to W;
+    pos0: (B,) per-row start positions; lens: (B,) int32 valid counts
+    (0 ≤ lens ≤ W); active: optional (B,) bool (False rows behave as
+    lens = 0). Row b consumes tokens[b, :lens[b]] starting at position
+    pos0[b]; masked rows/steps are inert — state untouched bit-for-bit,
+    zero/garbage logits the caller must ignore. Returns
+    (logits (B, W, V), new_state) with logits[b, i] the next-token
+    distribution after tokens[b, i] (valid for i < lens[b]).
 
-    new_tail = []
-    for i, kind in enumerate(tail):
-        x, st = B.block_decode_window(
-            kind, params["tail"][i] if kind != "shared_attn" else None,
-            x, state["tail"][i], pos0, cfg, rules, shared=shared)
-        new_tail.append(st)
+    This is the serving engine's workhorse for everything that advances
+    *different slots by different amounts* in one launch: bucket-padded
+    chunked prompt ingestion interleaved with decode, and batched
+    speculative rewind (re-advancing accepted prefixes of differing
+    lengths). Linear backends run the masked fused recurrent kernels
+    (per-row valid-length masking inside the VMEM-resident W-step scan);
+    the softmax baseline scans single-token decode with a per-step
+    ``w < lens`` row mask gating its one written KV-cache row.
+    """
+    w = tokens.shape[1]
+    pos0 = jnp.broadcast_to(jnp.asarray(pos0, jnp.int32),
+                            (tokens.shape[0],))
+    lens = jnp.clip(jnp.asarray(lens, jnp.int32), 0, w)
+    if active is not None:
+        lens = jnp.where(jnp.asarray(active, jnp.bool_), lens, 0)
+    return _window_forward(params, state, tokens, pos0, cfg, rules,
+                           B.block_decode_window, lens=lens)
 
-    x = L.apply_norm(cfg.norm, params["final_norm"], x)
-    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
-    logits = x @ head.astype(adt)
-    logits = constrain(logits, rules, "batch", "seq", "vocab")
-    return logits, {"stack": new_stack, "tail": tuple(new_tail)}
+
+def ingest_window_varlen(
+    params: Params,
+    state: Any,
+    tokens: Array,
+    pos0: Array,
+    lens: Array,
+    cfg: ModelConfig,
+    rules: Rules,
+) -> Tuple[Array, Any]:
+    """Chunk-parallel sibling of :func:`decode_window_varlen` for prompt
+    INGESTION: same signature and row-masking semantics, but attention
+    blocks under the linear backends continue their fixed-size state
+    through the chunk-parallel prefill kernels (with carried
+    state/normaliser) instead of the sequential recurrence — ingesting a
+    W-token chunk costs prefill FLOPs, not W decode steps. The softmax
+    baseline (and any non-attention kind) keeps the masked per-step
+    path, which is what its KV cache needs anyway. Used by the serving
+    engine for prompts longer than ``prefill_chunk``; returns
+    (logits (B, W, V), new_state) with valid logits at i < lens[b].
+    """
+    w = tokens.shape[1]
+    pos0 = jnp.broadcast_to(jnp.asarray(pos0, jnp.int32),
+                            (tokens.shape[0],))
+    lens = jnp.clip(jnp.asarray(lens, jnp.int32), 0, w)
+    return _window_forward(params, state, tokens, pos0, cfg, rules,
+                           B.block_ingest_window, lens=lens)
 
 
 def pad_decode_state(states: Any, cfg: ModelConfig, max_len: int) -> Any:
@@ -720,3 +832,52 @@ def prefill(
     logits, _, states = forward(
         params, tokens, cfg, rules, memory=memory, want_state=True)
     return logits[:, -1], states
+
+
+def supports_varlen_prefill(cfg: ModelConfig) -> bool:
+    """True when every block kind masks correctly under per-row varlen
+    prefill (attention-family blocks only; the Mamba/RWKV recurrences
+    and cross-memory encode have no varlen masking yet)."""
+    pattern, _, tail = cfg.pattern_and_repeats
+    return set(pattern) | set(tail) <= {"attn", "shared_attn"}
+
+
+def prefill_varlen(
+    params: Params,
+    tokens: Array,
+    lens: Array,
+    cfg: ModelConfig,
+    rules: Rules,
+) -> Tuple[Array, Any]:
+    """Batched bucket-padded prefill: encode B prompts of DIFFERENT
+    lengths in one dispatch.
+
+    tokens: (B, W) int32, row b's prompt END-padded to the bucket width
+    W; lens: (B,) int32 true prompt lengths (lens = 0 rows are dummies —
+    zero linear states, garbage caches). Returns (last-valid logits
+    (B, V), decode states).
+
+    Pad positions are inert in every state accumulation (zero key/value
+    terms, exp(0) = 1 decay, causally-masked softmax), so each row's
+    states and its lens-1 logits are BIT-IDENTICAL to prefilling that
+    row alone unpadded — which is what lets a serving engine admit a
+    whole admission batch with one program compiled per power-of-2
+    bucket width instead of one ``lm.prefill`` compile per distinct
+    prompt length. Requires an attention-only layer pattern
+    (:func:`supports_varlen_prefill`).
+
+    (Caveat, pinned by tests/test_decode_parity.py: the math is exact,
+    but bitwise equality additionally needs the backend to lower the
+    padded and unpadded projections to the same matmul kernel — true on
+    CPU for every row length except 1, where XLA picks gemv for the
+    unpadded call. Length-1 rows agree to ~1e-6 instead.)
+    """
+    assert supports_varlen_prefill(cfg), (
+        "varlen prefill needs an attention-only layer pattern; "
+        f"got {cfg.layer_pattern} + {cfg.tail}")
+    lens = jnp.asarray(lens, jnp.int32)
+    logits, _, states = forward(
+        params, tokens, cfg, rules, want_state=True, varlen=lens)
+    last = jnp.take_along_axis(
+        logits, jnp.maximum(lens - 1, 0)[:, None, None], axis=1)[:, 0]
+    return last, states

@@ -14,14 +14,25 @@ multi-tenant system:
   without holding the others up.
 
 * **Scheduler.** Between segments a host-side scheduler drains finished
-  slots and admits queued requests into the freed ones:
-  prefill-on-admit (:func:`lm.prefill` compresses the whole prompt into
-  per-layer states), then a slot swap-in via
-  :func:`lm.write_slot_state` — a ``dynamic_update_slice`` over the
-  stacked state pytree. For the linear family that admission cost is an
-  O(k²)-per-layer copy regardless of prompt length (the paper's
-  fixed-size representation); only the softmax baseline pays O(T·k)
-  KV-cache bytes.
+  slots and admits queued requests into the freed ones. The default
+  ``admission="batched"`` path admits ALL queue-head requests at once:
+  prompts are END-padded to a power-of-2 bucket width (bounding jit
+  recompiles to log₂(prefill_chunk) programs instead of one per
+  distinct prompt length) and encoded by ONE
+  :func:`lm.prefill_varlen` dispatch whose per-row length masking makes
+  every row bit-identical to prefilling it alone; one masked select
+  swaps the whole admission batch into its slots. Prompts longer than
+  ``prefill_chunk`` are ingested chunk-by-chunk through
+  :func:`lm.decode_window_varlen` — the variable-length masked window
+  primitive — with chunk dispatches INTERLEAVED with decode segments,
+  so a long prompt never stalls tokens streaming from live slots.
+  (``admission="per_request"`` keeps the PR-2 host-blocking
+  prefill-on-admit path: one :func:`lm.prefill` + one
+  :func:`lm.write_slot_state` per request — the benchmark baseline, and
+  the fallback for layer patterns without varlen prefill support.)
+  For the linear family the swap-in cost is an O(k²)-per-layer copy
+  regardless of prompt length (the paper's fixed-size representation);
+  only the softmax baseline pays O(T·k) KV-cache bytes.
 
 * **Isolation.** Inactive slots are masked bit-for-bit inside the scan
   (state frozen, outputs padded), so per-slot outputs under greedy
@@ -51,13 +62,15 @@ launch verifies all K+1 window positions at every slot's own depth
 (per-slot positions), and the longest matching greedy prefix plus the
 target's own next token are emitted — between 1 and K+1 tokens of the
 EXACT plain-greedy sequence per round. Slots that accepted the whole
-window commit the verify state with one masked select; a slot that
-rejected mid-window rewinds by re-advancing the accepted prefix from
-its pre-round snapshot (``lm.snapshot_state``/``lm.restore_state``) —
-cheap because the state is the paper's fixed-size representation, not a
-KV cache. Plain and speculative requests share the slot batch: plain
-slots advance in slot-masked segments with speculative slots frozen,
-and vice versa, so mixing them never changes anyone's tokens.
+window commit the verify state with one masked select; slots that
+rejected mid-window (accepted prefixes of DIFFERING lengths) rewind
+together — ONE ``lm.decode_window_varlen`` dispatch re-advances every
+rewinding slot's accepted prefix from the pre-round state under per-row
+length masks, then one masked select lands the rows — cheap because the
+state is the paper's fixed-size representation, not a KV cache. Plain
+and speculative requests share the slot batch: plain slots advance in
+slot-masked segments with speculative slots frozen, and vice versa, so
+mixing them never changes anyone's tokens.
 """
 
 from __future__ import annotations
@@ -75,6 +88,11 @@ from repro.models import lm
 from repro.sharding import Rules
 
 PAD_ID = -1  # emitted by masked slots; never a vocabulary id
+
+
+def _pow2_ceil(n: int) -> int:
+    """Smallest power of two >= n (bucket widths for padded admission)."""
+    return 1 << (int(n) - 1).bit_length()
 
 
 @dataclasses.dataclass
@@ -103,15 +121,24 @@ class Completion:
 class EngineStats:
     segments: int = 0
     emitted_tokens: int = 0       # scan-emitted (excludes prefill-sampled)
-    prefills: int = 0
+    prefills: int = 0             # admitted (prompt-encoded) requests
     n_slots: int = 0
     segment_len: int = 0
+    # admission (batched/chunked path)
+    admission_batches: int = 0    # batched-admission waves
+    prefill_dispatches: int = 0   # lm.prefill_varlen launches
+    ingest_chunks: int = 0        # decode_window_varlen ingest launches
+    ingest_interleaved: int = 0   # ...issued while decode slots were live
+    admission_dispatches: int = 0  # total admission-path device calls
+    prefill_jit_misses: int = 0   # new admission program shapes compiled
     # speculative rounds
     spec_rounds: int = 0          # batched draft/verify rounds
     spec_drafted: int = 0         # draft tokens proposed to the verifier
     spec_accepted: int = 0        # draft tokens the target agreed with
     spec_emitted: int = 0         # tokens emitted by rounds (incl. bonus)
-    spec_rewinds: int = 0         # partial-acceptance snapshot re-advances
+    spec_rewinds: int = 0         # partial-acceptance slot re-advances
+    spec_rewind_rounds: int = 0   # rounds that had >= 1 partial acceptor
+    spec_rewind_dispatches: int = 0  # varlen rewind launches (1 per round)
 
     @property
     def slot_utilization(self) -> float:
@@ -133,6 +160,20 @@ class EngineStats:
         return (self.spec_emitted / self.spec_rounds
                 if self.spec_rounds else 0.0)
 
+    @property
+    def mean_admission_batch(self) -> float:
+        """Requests admitted per batched-admission wave."""
+        return (self.prefills / self.admission_batches
+                if self.admission_batches else 0.0)
+
+    @property
+    def interleave_ratio(self) -> float:
+        """Fraction of chunked-prefill ingest dispatches issued while at
+        least one decode slot was live — 1.0 means long-prompt ingestion
+        never ran with the decode loop idle."""
+        return (self.ingest_interleaved / self.ingest_chunks
+                if self.ingest_chunks else 0.0)
+
 
 class DecodeEngine:
     """Continuous-batching decode over a fixed number of state slots.
@@ -149,6 +190,20 @@ class DecodeEngine:
     :class:`repro.serving.speculative.DraftProvider` (NgramDraft /
     ModelDraft / ReplayDraft). Requests opt in per-submit with
     ``speculate_k``.
+
+    ``admission`` selects the prompt-ingestion path: "batched" (bucket-
+    padded varlen prefill of the whole admission wave in one dispatch,
+    long prompts chunked through ``decode_window_varlen`` interleaved
+    with decode segments), "per_request" (the PR-2 host-blocking
+    prefill-on-admit baseline), or "auto" (batched when the layer
+    pattern supports varlen prefill). ``prefill_chunk`` (rounded up to a
+    power of two) bounds both the ingest chunk size and the bucket
+    widths — so admission compiles O(log prefill_chunk) programs total
+    instead of one per distinct prompt length. ``ingest`` picks the
+    continuation-chunk program: "parallel" (chunk-parallel prefill
+    kernels continuing from carried state — MXU-shaped), "recurrent"
+    (the masked fused-recurrent window), or "auto" (parallel on TPU,
+    recurrent elsewhere — the decode_kernel="auto" idiom).
     """
 
     def __init__(
@@ -164,6 +219,9 @@ class DecodeEngine:
         temperature: float = 0.0,
         seed: int = 0,
         draft: Optional[Any] = None,
+        admission: str = "auto",
+        prefill_chunk: int = 64,
+        ingest: str = "auto",
     ):
         self.params = params
         self.cfg = cfg
@@ -175,6 +233,27 @@ class DecodeEngine:
         self.temperature = temperature
         self._seed = seed
         self.draft = draft
+        assert admission in ("auto", "batched", "per_request"), admission
+        if admission == "auto":
+            admission = ("batched" if lm.supports_varlen_prefill(cfg)
+                         else "per_request")
+        if admission == "batched":
+            assert lm.supports_varlen_prefill(cfg), (
+                "admission='batched' needs an attention-only layer "
+                "pattern (varlen prefill masking)")
+        self.admission = admission
+        assert ingest in ("auto", "parallel", "recurrent"), ingest
+        if ingest == "auto":
+            # same resolution idiom as ModelConfig.decode_kernel: the
+            # chunk-parallel continuation is MXU-shaped and wins on TPU;
+            # at smoke scale on CPU the masked recurrent scan is
+            # cheaper per chunk (the chunk machinery doesn't amortise)
+            ingest = ("parallel" if jax.default_backend() == "tpu"
+                      else "recurrent")
+        self.ingest = ingest
+        # power-of-2 chunk so every bucket width is a power of two too
+        self.prefill_chunk = min(_pow2_ceil(max(1, prefill_chunk)),
+                                 max_len)
 
         cfg_ = cfg
         rules_ = self.rules
@@ -186,6 +265,54 @@ class DecodeEngine:
             # break the run-alone equivalence contract
             logits, st = lm.prefill(params, prompt, cfg_, rules_)
             return logits, lm.pad_decode_state(st, cfg_, max_len=max_len)
+
+        @jax.jit
+        def _prefill_varlen(params, state, tokens, lens, mask):
+            # one compile per power-of-2 bucket width; per-row length
+            # masking keeps each row bit-identical to an unpadded
+            # batch-1 prefill, so bucket padding is free of the state
+            # pollution the per-request path avoided by not padding.
+            # The admitted rows are selected into the engine state
+            # INSIDE the program — one dispatch admits the whole wave.
+            last, st = lm.prefill_varlen(params, tokens, lens, cfg_,
+                                         rules_)
+            st = lm.pad_decode_state(st, cfg_, max_len=max_len)
+            return last, lm.where_state(mask, st, state)
+
+        @jax.jit
+        def _prefill_varlen_one(params, state, tokens, lens, slot):
+            # the steady-state wave of ONE: a freed slot refills from a
+            # compact batch-1 bucket-padded prefill + slot write, so a
+            # single admission never pays n_slots× padded FLOPs
+            last, st = lm.prefill_varlen(params, tokens, lens, cfg_,
+                                         rules_)
+            st = lm.pad_decode_state(st, cfg_, max_len=max_len)
+            return last, lm.restore_state(state, st, slot)
+
+        @jax.jit
+        def _window_varlen(params, state, tokens, pos0, lens):
+            # the variable-length masked RECURRENT window: batched
+            # speculative rewind (re-advance must follow the exact
+            # decode-step chain the plain greedy path runs)
+            logits, st = lm.decode_window_varlen(
+                params, state, tokens, pos0, lens, cfg_, rules_)
+            last = jnp.take_along_axis(
+                logits, jnp.maximum(lens - 1, 0)[:, None, None],
+                axis=1)[:, 0]
+            return last, st
+
+        @jax.jit
+        def _ingest_varlen(params, state, tokens, pos0, lens):
+            # chunked-prefill continuation: same masking semantics, but
+            # the linear family continues through the chunk-PARALLEL
+            # prefill kernels (prefill FLOPs per chunk, not W decode
+            # steps); softmax falls back to the per-step cache writes
+            logits, st = lm.ingest_window_varlen(
+                params, state, tokens, pos0, lens, cfg_, rules_)
+            last = jnp.take_along_axis(
+                logits, jnp.maximum(lens - 1, 0)[:, None, None],
+                axis=1)[:, 0]
+            return last, st
 
         @jax.jit
         def _admit(engine_state, request_state, slot):
@@ -216,11 +343,18 @@ class DecodeEngine:
             return lm.snapshot_state(state, slot)
 
         self._prefill = _prefill
+        self._prefill_varlen = _prefill_varlen
+        self._prefill_varlen_one = _prefill_varlen_one
+        self._window_varlen = _window_varlen
+        self._ingest_varlen = _ingest_varlen
         self._admit = _admit
         self._segment = _segment
         self._verify = _verify
         self._select = _select
         self._snapshot = _snapshot
+        # admission program shapes seen — the host-side mirror of the
+        # jit cache, so EngineStats can report compile (miss) counts
+        self._seen_shapes: set = set()
         self.reset()
 
     # ------------------------------------------------------------------
@@ -241,6 +375,11 @@ class DecodeEngine:
         self._slot_req: List[Optional[Request]] = [None] * s
         self._slot_toks: List[List[int]] = [[] for _ in range(s)]
         self._slot_admitted: List[int] = [0] * s
+        # chunked-ingestion bookkeeping: a slot holding a request whose
+        # prompt is still being consumed (cursor < len(prompt)) is
+        # occupied but not yet decode-active
+        self._ingest_req: List[Optional[Request]] = [None] * s
+        self._ingest_cursor = np.zeros((s,), np.int64)
         self._queue: List[Request] = []   # kept sorted by (arrival, uid)
         self._completions: Dict[int, Completion] = {}
         self._clock = 0
@@ -304,15 +443,26 @@ class DecodeEngine:
             tokens=np.asarray(tokens, np.int32), finish_reason=reason,
             admitted_step=admitted_step, finished_step=self._clock)
 
+    def _miss(self, kind: str, width: int) -> None:
+        """Count an admission-program compile the jit cache hasn't seen."""
+        key = (kind, width)
+        if key not in self._seen_shapes:
+            self._seen_shapes.add(key)
+            self.stats.prefill_jit_misses += 1
+
     def _admit_one(self, slot: int) -> None:
         """Pop the queue head into ``slot``: prefill, sample the first
         token, swap the state in. Requests whose budget is a single
         token (or whose first token is EOS) complete at admission and
-        never occupy the slot."""
+        never occupy the slot. (The ``admission="per_request"`` path:
+        one host-blocking batch-1 prefill — and one jit compile per
+        DISTINCT prompt length — plus one slot write per request.)"""
         req = self._queue.pop(0)
+        self._miss("prefill_raw", len(req.prompt))
         logits, st_req = self._prefill(
             self.params, jnp.asarray(req.prompt)[None, :])
         self.stats.prefills += 1
+        self.stats.admission_dispatches += 1
         self._key, sub = jax.random.split(self._key)
         tok0 = int(lm.sample_token(logits, self.temperature, sub)[0])
         hit_eos = self.eos_id is not None and tok0 == self.eos_id
@@ -320,6 +470,11 @@ class DecodeEngine:
             self._complete(req, [tok0], admitted_step=self._clock)
             return
         self.state = self._admit(self.state, st_req, slot)
+        self.stats.admission_dispatches += 1
+        self._activate_slot(slot, req, tok0)
+
+    def _activate_slot(self, slot: int, req: Request, tok0: int) -> None:
+        """Flip a slot whose prompt is fully encoded to decode-active."""
         self._tok[slot] = tok0
         self._pos[slot] = len(req.prompt)
         self._active[slot] = True
@@ -335,14 +490,167 @@ class DecodeEngine:
     def _admissible(self) -> bool:
         return bool(self._queue) and self._queue[0].arrival <= self._clock
 
+    def _any_ingesting(self) -> bool:
+        return any(r is not None for r in self._ingest_req)
+
     def _admit_pass(self, policy: str) -> None:
-        if policy == "static" and self._active.any():
-            return  # batch-synchronous: wait for the whole batch
-        for slot in range(self.n_slots):
-            # keep feeding the same slot while requests complete at
-            # admission (gen_len=1 / instant EOS never occupy it)
-            while not self._active[slot] and self._admissible():
-                self._admit_one(slot)
+        if self.admission == "per_request":
+            if policy == "static" and self._active.any():
+                return  # batch-synchronous: wait for the whole batch
+            for slot in range(self.n_slots):
+                # keep feeding the same slot while requests complete at
+                # admission (gen_len=1 / instant EOS never occupy it)
+                while not self._active[slot] and self._admissible():
+                    self._admit_one(slot)
+            return
+
+        # batched admission: fill EVERY free slot from the queue head,
+        # then encode the whole wave's first chunks in ONE bucket-padded
+        # varlen prefill dispatch. Loop because requests completing at
+        # admission (gen_len=1 / instant EOS) free their slot within the
+        # same pass at the same logical clock.
+        if policy == "static" and (self._active.any()
+                                   or self._any_ingesting()):
+            return
+        while self._admissible():
+            newly = []
+            for slot in range(self.n_slots):
+                if (self._active[slot] or self._ingest_req[slot]
+                        is not None):
+                    continue
+                if not self._admissible():
+                    break
+                self._ingest_req[slot] = self._queue.pop(0)
+                self._ingest_cursor[slot] = 0
+                newly.append(slot)
+            if not newly:
+                break
+            self._ingest_chunk(newly, first=True)
+
+    def _bucket(self, n: int) -> int:
+        return min(_pow2_ceil(max(1, n)), self.max_len)
+
+    def _ingest_chunk(self, slots: List[int], *, first: bool) -> None:
+        """Consume the next ≤ ``prefill_chunk`` prompt tokens of every
+        ingesting slot in ``slots`` with ONE device dispatch.
+
+        ``first=True`` rows start from nothing: the wave is encoded by
+        ``lm.prefill_varlen`` (bucket-padded, per-row masked, bit-exact
+        per row) and landed with one masked select. Continuation rows
+        advance the live engine state in place through
+        ``lm.decode_window_varlen`` — masked rows (every slot NOT in
+        this chunk) are inert by construction, so no select is needed.
+
+        Length-1 prompts are carved out of the wave and encoded by the
+        exact-shape batch-1 prefill: a single-token forward is the one
+        shape where XLA lowers the unpadded projections differently
+        (gemv) from the padded bucket (gemm), so padding it would break
+        the bit-identity contract with the per-request path (the
+        lm.prefill_varlen caveat, pinned by tests/test_decode_parity).
+        """
+        if first:
+            ones = [s for s in slots
+                    if len(self._ingest_req[s].prompt) == 1]
+            for slot in ones:
+                req = self._ingest_req[slot]
+                self._miss("prefill_raw", 1)
+                logits, st_req = self._prefill(
+                    self.params, jnp.asarray(req.prompt)[None, :])
+                self.state = self._admit(self.state, st_req, slot)
+                self.stats.prefills += 1
+                self.stats.admission_dispatches += 2
+                self._ingest_cursor[slot] = 1
+                self._finish_ingest(slot, np.asarray(logits)[0])
+            slots = [s for s in slots if s not in ones]
+            if not slots:
+                return
+        counts = {}
+        for slot in slots:
+            req = self._ingest_req[slot]
+            cur = int(self._ingest_cursor[slot])
+            counts[slot] = min(len(req.prompt) - cur, self.prefill_chunk)
+        width = self._bucket(max(counts.values()))
+        tokens = np.zeros((self.n_slots, width), np.int32)
+        lens = np.zeros((self.n_slots,), np.int32)
+        pos0 = np.zeros((self.n_slots,), np.int32)
+        for slot in slots:
+            req = self._ingest_req[slot]
+            cur = int(self._ingest_cursor[slot])
+            c = min(counts[slot], width)
+            tokens[slot, :c] = req.prompt[cur:cur + c]
+            lens[slot] = c
+            pos0[slot] = cur
+
+        if first:
+            if len(slots) == 1:
+                # steady-state: one freed slot refills compactly
+                slot = slots[0]
+                self._miss("prefill_varlen_one", width)
+                last1, self.state = self._prefill_varlen_one(
+                    self.params, self.state,
+                    jnp.asarray(tokens[slot:slot + 1]),
+                    jnp.asarray(lens[slot:slot + 1]), jnp.int32(slot))
+                last = np.zeros((self.n_slots,) + last1.shape[1:],
+                                np.asarray(last1).dtype)
+                last[slot] = np.asarray(last1)[0]
+            else:
+                self._miss("prefill_varlen", width)
+                mask = np.zeros((self.n_slots,), bool)
+                mask[slots] = True
+                last, self.state = self._prefill_varlen(
+                    self.params, self.state, jnp.asarray(tokens),
+                    jnp.asarray(lens), jnp.asarray(mask))
+            self.stats.admission_batches += 1
+            self.stats.prefills += len(slots)
+            self.stats.prefill_dispatches += 1
+            self.stats.admission_dispatches += 1
+        else:
+            # miss keys name the underlying jit program: recurrent
+            # ingest and speculative rewind share _window_varlen, so a
+            # width compiled by one is a cache hit for the other
+            program = (self._ingest_varlen if self.ingest == "parallel"
+                       else self._window_varlen)
+            self._miss("ingest_varlen" if self.ingest == "parallel"
+                       else "window_varlen", width)
+            last, self.state = program(
+                self.params, self.state, jnp.asarray(tokens),
+                jnp.asarray(pos0), jnp.asarray(lens))
+            self.stats.ingest_chunks += 1
+            self.stats.admission_dispatches += 1
+            if self._active.any():
+                self.stats.ingest_interleaved += 1
+
+        last = np.asarray(last)
+        for slot in slots:
+            self._ingest_cursor[slot] += int(lens[slot])
+            req = self._ingest_req[slot]
+            if self._ingest_cursor[slot] >= len(req.prompt):
+                self._finish_ingest(slot, last[slot])
+
+    def _ingest_step(self) -> None:
+        """One continuation-chunk dispatch across every mid-prompt slot.
+        Called once per outer ``run`` iteration, BEFORE the decode
+        segment — long-prompt ingestion therefore interleaves with
+        decode instead of stalling it."""
+        rows = [s for s in range(self.n_slots)
+                if self._ingest_req[s] is not None]
+        if rows:
+            self._ingest_chunk(rows, first=False)
+
+    def _finish_ingest(self, slot: int, logits_row: np.ndarray) -> None:
+        """The slot's whole prompt is consumed: sample the first token
+        and activate (or complete instantly on budget-1 / EOS)."""
+        req = self._ingest_req[slot]
+        self._ingest_req[slot] = None
+        self._ingest_cursor[slot] = 0
+        self._key, sub = jax.random.split(self._key)
+        tok0 = int(lm.sample_token(
+            jnp.asarray(logits_row)[None], self.temperature, sub)[0])
+        hit_eos = self.eos_id is not None and tok0 == self.eos_id
+        if req.max_new_tokens <= 1 or hit_eos:
+            self._complete(req, [tok0], admitted_step=self._clock)
+            return
+        self._activate_slot(slot, req, tok0)
 
     def step_segment(self) -> None:
         """Run one ``segment_len``-step scan segment over the PLAIN
@@ -412,14 +720,14 @@ class DecodeEngine:
            ``restore_state``). The paper's fixed-size states make both
            paths O(k²)-per-layer copies.
 
-        Rewinds run per slot (3 dispatches each, one compiled program
-        per accepted-prefix length ≤ K): accepted prefixes differ in
-        length across slots and the recurrence cannot mask within a
-        window, so batching them would re-advance tokens the slot
-        rejected. The engine is therefore tuned for the high-acceptance
-        regime — at low acceptance rounds degrade to rewind-dominated
-        (still bit-correct, just slow), which the acceptance-rate stat
-        makes visible to callers choosing K.
+        Rewinds are BATCHED: accepted prefixes differ in length across
+        slots, and the varlen masked window advances each rewinding row
+        by exactly its own accepted count from the pre-round state — ONE
+        ``decode_window_varlen`` dispatch plus one masked select per
+        round, however many slots rewind (the per-slot path was 3
+        dispatches per rewinding slot, one compiled program per distinct
+        prefix length). ``spec_rewind_dispatches`` counts the launches;
+        tests assert it equals ``spec_rewind_rounds``.
         """
         spec = self._active & (self._spec_k > 0)
         slots = np.nonzero(spec)[0]
@@ -483,32 +791,48 @@ class DecodeEngine:
                 rewinds.append((slot, n_cons))
             self._pos[slot] += n_cons
 
-        # -- apply state: masked select for full acceptors, snapshot
-        #    re-advance for partial acceptors --
+        # -- apply state: masked select for full acceptors, ONE batched
+        #    varlen re-advance from the pre-round state for partials --
         if commit_full.any():
             self.state = self._select(jnp.asarray(commit_full),
                                       st_verify, self.state)
-        for slot, n_cons in rewinds:
-            snap = self._snapshot(state_pre, jnp.int32(slot))
-            _, st_r = self._verify(
-                self.params, snap,
-                jnp.asarray(window[slot:slot + 1, :n_cons]),
-                jnp.asarray(self._pos[slot:slot + 1] - n_cons))
-            self.state = self._admit(self.state, st_r, slot)
-            self.stats.spec_rewinds += 1
+        if rewinds:
+            wr = max(n for _, n in rewinds)
+            tokens = np.zeros((self.n_slots, wr), np.int32)
+            lens = np.zeros((self.n_slots,), np.int32)
+            pos0 = np.zeros((self.n_slots,), np.int32)
+            mask = np.zeros((self.n_slots,), bool)
+            for slot, n_cons in rewinds:
+                tokens[slot, :n_cons] = window[slot, :n_cons]
+                lens[slot] = n_cons
+                pos0[slot] = self._pos[slot] - n_cons
+                mask[slot] = True
+            self._miss("window_varlen", wr)
+            _, st_r = self._window_varlen(
+                self.params, state_pre, jnp.asarray(tokens),
+                jnp.asarray(pos0), jnp.asarray(lens))
+            self.state = self._select(jnp.asarray(mask), st_r, self.state)
+            self.stats.spec_rewinds += len(rewinds)
+            self.stats.spec_rewind_rounds += 1
+            self.stats.spec_rewind_dispatches += 1
 
         self._clock += max_emitted
 
     def run(self, policy: str = "continuous") -> List[Completion]:
         """Drive queued requests to completion. Returns completions in
-        uid order. Plain slots advance through slot-masked segments,
-        speculative slots through draft/verify rounds; both phases run
-        per outer iteration when the slot batch mixes the two kinds."""
+        uid order. Per outer iteration: one continuation ingest chunk
+        (if any slot is mid-prompt), one slot-masked segment for plain
+        slots, one draft/verify round for speculative slots — chunked
+        prompt ingestion therefore interleaves with decode instead of
+        stalling it."""
         assert policy in ("continuous", "static"), policy
-        while self._queue or self._active.any():
+        while (self._queue or self._active.any()
+               or self._any_ingesting()):
             self._admit_pass(policy)
+            if self._any_ingesting():
+                self._ingest_step()
             if not self._active.any():
-                if self._queue:
+                if not self._any_ingesting() and self._queue:
                     # after an admit pass with no live slot the queue
                     # head must be in the future: fast-forward the
                     # logical clock to it (whole segments, to stay on

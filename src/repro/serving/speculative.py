@@ -163,10 +163,15 @@ class ModelDraft:
     state of ``n_slots`` batch rows, admission = prefill + slot write,
     drafting = ONE masked ``lm.generate_segment`` dispatch proposing K
     greedy tokens for every speculative slot at once. After verification
-    the draft state is rewound the same way the target is: restore the
-    slot's round-start snapshot and re-advance the accepted window
-    prefix with ``lm.decode_window`` — cheap because the draft state is
-    fixed-size too.
+    a fully-accepted slot takes the fast path: its live drafting
+    trajectory already consumed the accepted sequence, so only its one
+    unconsumed trailing token is buffered and ALL of the round's full
+    acceptors are fed in ONE masked ``lm.decode_window_varlen`` step at
+    the next propose (no snapshot, no restore, no per-slot dispatch).
+    Partial acceptors rewind
+    the classic way — restore the slot's round-start snapshot and
+    re-advance the accepted window prefix with ``lm.decode_window`` —
+    cheap because the draft state is fixed-size too.
     """
 
     def __init__(self, params: Any, cfg: Any, rules: Any = None, *,
@@ -200,6 +205,12 @@ class ModelDraft:
                                      cfg_, rules_)
             return st
 
+        @jax.jit
+        def _window_varlen(params, state, tokens, pos0, lens):
+            _, st = lm.decode_window_varlen(params, state, tokens, pos0,
+                                            lens, cfg_, rules_)
+            return st
+
         def _segment(params, state, tok, pos, active, k):
             toks, carry = lm.generate_segment(
                 params, state, tok, pos, active,
@@ -210,6 +221,7 @@ class ModelDraft:
         self._restore = _restore
         self._snapshot = _snapshot
         self._window = _window
+        self._window_varlen = _window_varlen
         self._segment = jax.jit(_segment, static_argnames="k")
         self.reset()
 
@@ -221,7 +233,11 @@ class ModelDraft:
         self._pos = np.zeros((self.n_slots,), np.int32)
         self._round_tok: Optional[np.ndarray] = None
         self._round_pos: Optional[np.ndarray] = None
+        self._round_k: int = 0
         self._pre_state: Any = None
+        # fully-accepted slots' pending trailing tokens, flushed as ONE
+        # masked varlen step at the next propose() (slot → (token, pos))
+        self._pending: Dict[int, tuple] = {}
 
     def admit(self, slot: int, context: np.ndarray) -> None:
         # the draft state consumes everything BEFORE the current input
@@ -235,28 +251,58 @@ class ModelDraft:
                 mask: np.ndarray, k: int) -> np.ndarray:
         # snapshot the whole pre-round state (a pytree reference — free);
         # commit() rewinds per slot from it
+        self._flush_pending()
         self._pre_state = self.state
         self._round_tok = np.asarray(tok, np.int32).copy()
         self._round_pos = self._pos.copy()
+        self._round_k = k
         toks, self.state = self._segment(
             self.params, self.state, jnp.asarray(tok, jnp.int32),
             jnp.asarray(self._pos), jnp.asarray(mask, bool), k=k)
         return np.asarray(toks)
 
+    def _flush_pending(self) -> None:
+        """Apply every fully-accepted slot's buffered trailing token as
+        ONE masked varlen decode step — the round's fast-path commits
+        batch into a single dispatch, mirroring the engine's batched
+        rewind."""
+        if not self._pending:
+            return
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        lens = np.zeros((self.n_slots,), np.int32)
+        pos0 = np.zeros((self.n_slots,), np.int32)
+        for slot, (t, p) in self._pending.items():
+            tokens[slot, 0] = t
+            lens[slot] = 1
+            pos0[slot] = p
+        self._pending.clear()
+        self.state = self._window_varlen(
+            self.params, self.state, jnp.asarray(tokens),
+            jnp.asarray(pos0), jnp.asarray(lens))
+
     def commit(self, slot: int, emitted: np.ndarray) -> None:
-        # re-advance the accepted prefix [tok0, g1..g_{a}] from the
-        # round-start snapshot (the drafting trajectory consumed its own
-        # proposals, which may have been rejected). Uniform per-slot
-        # rewind keeps the invariant trivially; a full-acceptance fast
-        # path (advance the live state by the one unconsumed trailing
-        # token, batched across slots) is the known optimisation for
-        # the high-acceptance regime (ROADMAP: batched rewind).
+        # the verifier accepted [tok0, g1..g_a]; the drafting trajectory
+        # consumed [tok0, d1..d_{k-1}], which may diverge from it past
+        # the accepted prefix
         window = np.concatenate(
             [[self._round_tok[slot]], np.asarray(emitted[:-1], np.int32)])
-        snap = self._snapshot(self._pre_state, slot)
-        st = self._window(self.params, snap, jnp.asarray(window)[None],
-                          jnp.int32(self._round_pos[slot]))
-        self.state = self._restore(self.state, st, slot)
+        if len(window) == self._round_k + 1:
+            # full acceptance: every token the live trajectory consumed
+            # IS the accepted sequence, so the slot only lacks the one
+            # unconsumed trailing token. Buffer it; all of this round's
+            # full acceptors are applied in one masked varlen step at
+            # the next propose() (no snapshot, no restore, no per-slot
+            # dispatch).
+            self._pending[slot] = (int(window[-1]),
+                                   int(self._round_pos[slot])
+                                   + self._round_k)
+        else:
+            # partial acceptance: re-advance the accepted prefix from
+            # the round-start snapshot
+            snap = self._snapshot(self._pre_state, slot)
+            st = self._window(self.params, snap, jnp.asarray(window)[None],
+                              jnp.int32(self._round_pos[slot]))
+            self.state = self._restore(self.state, st, slot)
         self._pos[slot] = self._round_pos[slot] + len(window)
 
     def release(self, slot: int) -> None:

@@ -193,6 +193,179 @@ class TestStaggeredWindowDepths:
                 np.testing.assert_allclose(_f32(a), _f32(b), **tol)
 
 
+class TestVarlenWindow:
+    """The variable-length masked window axis: decode_window_varlen with
+    per-row (pos0, lens) equals per-row batch-1 decode_window on each
+    row's own valid prefix — BITWISE on the reference path and the
+    interpret-mode fused kernels — and lens=0 rows are frozen
+    bit-for-bit. This is the property batched admission/rewind rests
+    on: one masked dispatch must be indistinguishable from running
+    every slot alone."""
+
+    def _staggered_state(self, params, cfg, toks, depths, max_len):
+        state = lm.init_decode_state(cfg, batch=len(depths),
+                                     max_len=max_len)
+        snaps = []
+        for s, t in enumerate(depths):
+            _, st = lm.prefill(params, toks[s:s + 1, :t], cfg, RULES)
+            st = lm.pad_decode_state(st, cfg, max_len=max_len)
+            snaps.append(st)
+            state = lm.restore_state(state, st, s)
+        return state, snaps
+
+    @pytest.mark.parametrize("backend,kernel", [
+        ("linear", "reference"), ("linear", "fused"),
+        ("gated_linear", "reference"), ("gated_linear", "fused"),
+        ("softmax", None),
+    ])
+    def test_varlen_rows_match_per_row_windows(self, key, backend,
+                                               kernel):
+        cfg = _cfg(backend, kernel=kernel)
+        params = lm.init_params(key, cfg)
+        depths = [3, 7, 2]
+        w, max_len = 4, 16
+        toks = jax.random.randint(
+            jax.random.fold_in(key, 1), (3, max(depths) + w), 0,
+            cfg.vocab_size).astype(jnp.int32)
+        state, snaps = self._staggered_state(params, cfg, toks, depths,
+                                             max_len)
+        windows = jnp.stack(
+            [toks[s, t:t + w] for s, t in enumerate(depths)])
+        lens = jnp.asarray([4, 2, 0], jnp.int32)   # incl. a masked row
+        lg, st_v = lm.decode_window_varlen(
+            params, state, windows, jnp.asarray(depths, jnp.int32),
+            lens, cfg, RULES)
+        for s, t in enumerate(depths):
+            n = int(lens[s])
+            row = lm.snapshot_state(st_v, s)
+            if n == 0:     # masked row: untouched, bit for bit
+                ref = snaps[s]
+            else:
+                lg1, ref = lm.decode_window(
+                    params, snaps[s], windows[s:s + 1, :n],
+                    jnp.int32(t), cfg, RULES)
+                np.testing.assert_array_equal(_f32(lg[s, :n]),
+                                              _f32(lg1[0]))
+            for a, b in zip(jax.tree.leaves(row), jax.tree.leaves(ref)):
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(b))
+
+    @pytest.mark.parametrize("backend", ["linear", "gated_linear",
+                                         "softmax"])
+    def test_active_false_equals_lens_zero(self, key, backend):
+        cfg = _cfg(backend, kernel="reference")
+        params = lm.init_params(key, cfg)
+        state = lm.init_decode_state(cfg, batch=2, max_len=8)
+        toks = jax.random.randint(key, (2, 3), 0, cfg.vocab_size
+                                  ).astype(jnp.int32)
+        pos0 = jnp.zeros((2,), jnp.int32)
+        lens = jnp.asarray([3, 3], jnp.int32)
+        _, st_a = lm.decode_window_varlen(
+            params, state, toks, pos0, lens, cfg, RULES,
+            active=jnp.asarray([True, False]))
+        _, st_l = lm.decode_window_varlen(
+            params, state, toks, pos0, jnp.asarray([3, 0], jnp.int32),
+            cfg, RULES)
+        for a, b in zip(jax.tree.leaves(st_a), jax.tree.leaves(st_l)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestVarlenPrefill:
+    """Bucket-padded batched prefill: rows END-padded to a shared width
+    with per-row length masking are BIT-IDENTICAL to prefilling each
+    row alone unpadded (zero key/value terms add exactly, exp(0)=1
+    decay multiplies exactly, causality hides later pads from softmax)
+    — the property that lets batched admission keep the engine's
+    run-alone bit-identity contract."""
+
+    @pytest.mark.parametrize("backend", ["linear", "gated_linear",
+                                         "softmax"])
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    def test_padded_rows_bitwise_equal_unpadded(self, key, backend,
+                                                dtype):
+        cfg = _cfg(backend, dtype=dtype, kernel="reference") \
+            if backend != "softmax" else _cfg(backend, dtype=dtype)
+        params = lm.init_params(key, cfg)
+        w = 8
+        toks = jax.random.randint(
+            jax.random.fold_in(key, 1), (3, w), 0, cfg.vocab_size
+        ).astype(jnp.int32)
+        # lens >= 2: a length-1 row is the one shape where XLA CPU picks
+        # a different matmul kernel (gemv) than the padded batch (gemm),
+        # so its projections differ at the last bit — everything >= 2
+        # is bitwise stable (documented caveat on lm.prefill_varlen)
+        lens = jnp.asarray([8, 5, 2], jnp.int32)
+        last, st = lm.prefill_varlen(params, toks, lens, cfg, RULES)
+        for s in range(3):
+            n = int(lens[s])
+            lg1, st1 = lm.prefill(params, toks[s:s + 1, :n], cfg, RULES)
+            np.testing.assert_array_equal(_f32(last[s]), _f32(lg1[0]))
+            if backend == "softmax":
+                continue   # cache rows past lens are scratch by design
+            row = lm.snapshot_state(st, s)
+            for a, b in zip(jax.tree.leaves(row),
+                            jax.tree.leaves(st1)):
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(b))
+
+    @pytest.mark.parametrize("backend", ["linear", "gated_linear"])
+    def test_chunked_ingest_matches_prefill(self, key, backend):
+        """prefill == chunked varlen prefill == decode_step^T: a prompt
+        ingested as first-chunk prefill_varlen + decode_window_varlen /
+        ingest_window_varlen continuations lands on the same state as
+        one-shot prefill (tolerance: chunked-vs-sequential
+        reassociation) and the recurrent continuation matches the
+        sequential decode_step chain bitwise."""
+        cfg = _cfg(backend, kernel="reference")
+        params = lm.init_params(key, cfg)
+        t_total, chunk = 11, 4
+        toks = jax.random.randint(
+            jax.random.fold_in(key, 2), (1, t_total), 0, cfg.vocab_size
+        ).astype(jnp.int32)
+
+        _, st_ref = lm.prefill(params, toks, cfg, RULES)
+
+        # chunked: prefill_varlen on the first chunk, then varlen
+        # continuations (both the recurrent and chunk-parallel forms)
+        for cont in (lm.decode_window_varlen, lm.ingest_window_varlen):
+            _, st = lm.prefill_varlen(
+                params, toks[:, :chunk],
+                jnp.asarray([chunk], jnp.int32), cfg, RULES)
+            cur = chunk
+            while cur < t_total:
+                n = min(chunk, t_total - cur)
+                win = jnp.zeros((1, chunk), jnp.int32)
+                win = win.at[:, :n].set(toks[:, cur:cur + n])
+                _, st = cont(params, st, win,
+                             jnp.asarray([cur], jnp.int32),
+                             jnp.asarray([n], jnp.int32), cfg, RULES)
+                cur += n
+            for a, b in zip(jax.tree.leaves(st),
+                            jax.tree.leaves(st_ref)):
+                np.testing.assert_allclose(_f32(a), _f32(b),
+                                           **_tol(cfg.dtype))
+
+        # the recurrent continuation == the sequential decode_step
+        # chain, bitwise
+        _, st_seq = lm.prefill(params, toks[:, :chunk], cfg, RULES)
+        st_rec = st_seq
+        for i in range(chunk, t_total):
+            _, st_seq = lm.decode_step(params, st_seq, toks[:, i],
+                                       jnp.int32(i), cfg, RULES)
+        cur = chunk
+        while cur < t_total:
+            n = min(chunk, t_total - cur)
+            win = jnp.zeros((1, chunk), jnp.int32)
+            win = win.at[:, :n].set(toks[:, cur:cur + n])
+            _, st_rec = lm.decode_window_varlen(
+                params, st_rec, win, jnp.asarray([cur], jnp.int32),
+                jnp.asarray([n], jnp.int32), cfg, RULES)
+            cur += n
+        for a, b in zip(jax.tree.leaves(st_rec),
+                        jax.tree.leaves(st_seq)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 if HAVE_HYPOTHESIS:
 
     @settings(max_examples=12, deadline=None)
@@ -244,3 +417,73 @@ if HAVE_HYPOTHESIS:
                                    atol=1e-4)
         np.testing.assert_allclose(_f32(s_f), _f32(s_r), rtol=1e-4,
                                    atol=1e-4)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        b=st.integers(min_value=1, max_value=3),
+        h=st.integers(min_value=1, max_value=3),
+        w=st.integers(min_value=1, max_value=8),
+        dk=st.sampled_from([8, 16]),
+        gated=st.booleans(),
+        seed=st.integers(min_value=0, max_value=2**16),
+        data=st.data(),
+    )
+    def test_fuzz_varlen_kernel_vs_ref(b, h, w, dk, gated, seed, data):
+        """Varlen masked kernels (interpret mode) == masked jnp ref ==
+        per-row unmasked windows of each row's own length (bitwise row
+        isolation) at fuzzed shapes and fuzzed per-row lengths."""
+        from repro.kernels.fused_recurrent import ops as FR
+        from repro.kernels.fused_recurrent import ref as FRref
+        lens_list = data.draw(st.lists(
+            st.integers(min_value=0, max_value=w), min_size=b,
+            max_size=b))
+        lens = jnp.asarray(lens_list, jnp.int32)
+        key = jax.random.PRNGKey(seed)
+        ks = jax.random.split(key, 5)
+        q = jax.random.normal(ks[0], (b, h, w, dk))
+        k = jax.random.normal(ks[1], (b, h, w, dk))
+        v = jax.random.normal(ks[2], (b, h, w, dk))
+        s = jax.random.normal(ks[3], (b, h, dk, dk))
+        if gated:
+            g = -jax.nn.softplus(jax.random.normal(ks[4], (b, h, w, dk)))
+            o_f, s_f = FR.fused_recurrent_gated(s, q, k, v, g, lens=lens,
+                                                interpret=True)
+            o_r, s_r = FRref.fused_recurrent_gated_ref(s, q, k, v, g,
+                                                       lens=lens)
+        else:
+            o_f, s_f, _ = FR.fused_recurrent_linear(s, q, k, v,
+                                                    lens=lens,
+                                                    interpret=True)
+            o_r, s_r, _ = FRref.fused_recurrent_linear_ref(s, q, k, v,
+                                                           lens=lens)
+        np.testing.assert_allclose(_f32(o_f), _f32(o_r), rtol=1e-4,
+                                   atol=1e-4)
+        np.testing.assert_allclose(_f32(s_f), _f32(s_r), rtol=1e-4,
+                                   atol=1e-4)
+        for row, n in enumerate(lens_list):
+            if n == 0:
+                np.testing.assert_array_equal(_f32(s_r[row]),
+                                              _f32(s[row]))
+                continue
+            # bitwise row isolation: masking every OTHER row must not
+            # change this row (same batch extent → same XLA kernels)
+            solo = jnp.zeros_like(lens).at[row].set(n)
+            if gated:
+                _, s_solo = FRref.fused_recurrent_gated_ref(
+                    s, q, k, v, g, lens=solo)
+                _, s_1 = FRref.fused_recurrent_gated_ref(
+                    s[row:row + 1], q[row:row + 1, :, :n],
+                    k[row:row + 1, :, :n], v[row:row + 1, :, :n],
+                    g[row:row + 1, :, :n])
+            else:
+                _, s_solo, _ = FRref.fused_recurrent_linear_ref(
+                    s, q, k, v, lens=solo)
+                _, s_1, _ = FRref.fused_recurrent_linear_ref(
+                    s[row:row + 1], q[row:row + 1, :, :n],
+                    k[row:row + 1, :, :n], v[row:row + 1, :, :n])
+            np.testing.assert_array_equal(_f32(s_r[row]),
+                                          _f32(s_solo[row]))
+            # across batch extents XLA may pick different (equally
+            # valid) kernels — tolerance, not bits
+            np.testing.assert_allclose(_f32(s_r[row]), _f32(s_1[0]),
+                                       rtol=1e-5, atol=1e-5)

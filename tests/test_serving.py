@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_smoke_config
+from repro.configs import SSMConfig, get_smoke_config
 from repro.core.linear_attention import safe_denom
 from repro.models import attention as A
 from repro.models import lm
@@ -450,6 +450,204 @@ class TestMixedSpeculativePlain:
         for a, b in zip(refs, mixed):
             np.testing.assert_array_equal(a.tokens, b.tokens)
             assert a.finish_reason == b.finish_reason
+
+
+class TestBatchedAdmission:
+    """The batched + chunked admission path (ISSUE 4): bucket-padded
+    varlen prefill waves and chunked long-prompt ingestion must leave
+    every request's tokens exactly as the per-request prefill-on-admit
+    path produced them, admission order must be deterministic, and the
+    engine must actually interleave long-prompt chunks with decode."""
+
+    def _mixed_workload(self, cfg, n=8, seed=3):
+        """Mixed prompt lengths incl. prompts longer than prefill_chunk
+        (chunked ingestion) — lens >= 2 (see lm.prefill_varlen caveat)."""
+        rng = np.random.default_rng(seed)
+        p_lens = [6, 8, 21, 5, 8, 40, 7, 8][:n]
+        prompts = [rng.integers(0, cfg.vocab_size, size=pl,
+                                dtype=np.int64).astype(np.int32)
+                   for pl in p_lens]
+        gens = [5, 12, 3, 9, 6, 7, 4, 8][:n]
+        return prompts, gens
+
+    def _engine(self, params, cfg, admission, **kw):
+        return DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                            max_len=96, admission=admission,
+                            prefill_chunk=8, **kw)
+
+    @pytest.mark.parametrize("backend", ["linear", "gated_linear",
+                                         "softmax"])
+    def test_batched_equals_per_request(self, key, backend):
+        """Chunked+batched admission is token-identical to the
+        per-request path on all three backends (fp32: the chunked
+        continuation reassociates, argmax margins dominate)."""
+        cfg = dataclasses.replace(
+            get_smoke_config("yi-34b").with_backend(backend),
+            dtype="float32")
+        params = lm.init_params(key, cfg)
+        prompts, gens = self._mixed_workload(cfg)
+        outs = {}
+        for adm in ("per_request", "batched"):
+            eng = self._engine(params, cfg, adm)
+            for p, g in zip(prompts, gens):
+                eng.submit(p, g)
+            outs[adm] = eng.run("continuous")
+            if adm == "batched":
+                st = eng.stats
+                assert st.admission_batches > 0
+                assert st.ingest_chunks > 0        # 21/40 > chunk of 8
+                assert st.interleave_ratio > 0.0   # decode stayed live
+                assert st.prefills == len(prompts)
+        for a, b in zip(outs["per_request"], outs["batched"]):
+            assert a.uid == b.uid
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            assert a.finish_reason == b.finish_reason
+
+    def test_uniform_prompts_bit_identical_bf16(self, key):
+        """Bucket-width prompts (no row padding) keep the engine's
+        run-alone bit-identity contract even in bf16 — the batched wave
+        is bitwise the per-request prefill."""
+        cfg = get_smoke_config("yi-34b").with_backend("linear")
+        params = lm.init_params(key, cfg)
+        prompts, gens = _make_workload(cfg)   # all length 8 == bucket
+        refs = [_standalone(params, cfg, p, g, 64)
+                for p, g in zip(prompts, gens)]
+        eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                           max_len=64, admission="batched")
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g)
+        for c, ref in zip(eng.run("continuous"), refs):
+            np.testing.assert_array_equal(c.tokens, np.asarray(ref))
+
+    def test_admission_order_deterministic(self, key):
+        """Same submissions → same slot assignment, same admitted
+        steps, same tokens, run after run (the wave fill is queue-order
+        over free slots in index order)."""
+        cfg = dataclasses.replace(
+            get_smoke_config("yi-34b").with_backend("linear"),
+            dtype="float32")
+        params = lm.init_params(key, cfg)
+        prompts, gens = self._mixed_workload(cfg)
+        eng = self._engine(params, cfg, "batched")
+
+        def go():
+            eng.reset()
+            for i, (p, g) in enumerate(zip(prompts, gens)):
+                eng.submit(p, g, arrival=2.0 * (i // 3))
+            return eng.run("continuous")
+
+        a, b = go(), go()
+        for x, y in zip(a, b):
+            assert x.uid == y.uid
+            assert x.admitted_step == y.admitted_step
+            assert x.finished_step == y.finished_step
+            np.testing.assert_array_equal(x.tokens, y.tokens)
+        # equal-arrival requests are admitted in uid order
+        for x, y in zip(a, a[1:]):
+            if x.admitted_step == y.admitted_step:
+                assert x.uid < y.uid
+
+    def test_length_one_prompt_bit_identical(self, key):
+        """A 1-token prompt mixed into a wider wave is carved out to
+        the exact-shape batch-1 prefill (the lm.prefill_varlen gemv
+        caveat), so batched admission stays bit-identical to
+        per-request even in bf16."""
+        cfg = get_smoke_config("yi-34b").with_backend("linear")
+        params = lm.init_params(key, cfg)
+        rng = np.random.default_rng(5)
+        prompts = [rng.integers(0, cfg.vocab_size, size=pl,
+                                dtype=np.int64).astype(np.int32)
+                   for pl in (1, 8, 8, 1)]
+        gens = [6, 9, 4, 7]
+        outs = {}
+        for adm in ("per_request", "batched"):
+            eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                               max_len=64, admission=adm)
+            for p, g in zip(prompts, gens):
+                eng.submit(p, g)
+            outs[adm] = eng.run("continuous")
+        for a, b in zip(outs["per_request"], outs["batched"]):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+
+    def test_instant_completions_batched(self, key):
+        """gen_len=1 requests complete at admission without consuming
+        the slot's turn — batched path, mirroring the per-request
+        behaviour the scheduler tests pin."""
+        cfg = get_smoke_config("yi-34b").with_backend("linear")
+        params = lm.init_params(key, cfg)
+        prompts, _ = _make_workload(cfg, n=4)
+        eng = DecodeEngine(params, cfg, n_slots=1, segment_len=4,
+                           max_len=64, admission="batched")
+        for p, g in zip(prompts, [1, 1, 1, 5]):
+            eng.submit(p, g)
+        comps = eng.run("continuous")
+        assert len(comps) == 4
+        assert comps[3].admitted_step == 0
+
+    def test_auto_falls_back_for_non_attention_patterns(self, key):
+        """Layer patterns without varlen prefill masking (mamba/rwkv/
+        cross) resolve admission='auto' to the per-request path, and
+        forcing 'batched' on them is rejected."""
+        cfg = dataclasses.replace(get_smoke_config("yi-34b"),
+                                  layer_pattern=("attn", "mamba"),
+                                  ssm=SSMConfig())
+        assert not lm.supports_varlen_prefill(cfg)
+        params = lm.init_params(key, cfg)
+        eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                           max_len=32)
+        assert eng.admission == "per_request"
+        with pytest.raises(AssertionError, match="attention-only"):
+            DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                         max_len=32, admission="batched")
+
+
+class TestBatchedRewind:
+    """Partial-acceptance speculative rewind = ONE decode_window_varlen
+    dispatch per round, however many slots rewind."""
+
+    def test_one_dispatch_per_rewinding_round(self, key):
+        from repro.serving import ReplayDraft
+
+        cfg = dataclasses.replace(
+            get_smoke_config("yi-34b").with_backend("linear"),
+            dtype="float32")
+        params = lm.init_params(key, cfg)
+        rng = np.random.default_rng(11)
+        prompts = [rng.integers(0, cfg.vocab_size, size=8,
+                                dtype=np.int64).astype(np.int32)
+                   for _ in range(3)]
+        gens = [10, 10, 10]
+        # plain reference run for tokens + bit-identity
+        eng0 = DecodeEngine(params, cfg, n_slots=3, segment_len=4,
+                            max_len=64)
+        for p, g in zip(prompts, gens):
+            eng0.submit(p, g)
+        plain = eng0.run("continuous")
+
+        # a draft that is right for 2 tokens then wrong: every round is
+        # a partial acceptance on EVERY slot — the old path would pay
+        # 3 dispatches per slot per round
+        class HalfWrongDraft(ReplayDraft):
+            def propose(self, tok, pos, mask, k):
+                out = super().propose(tok, pos, mask, k)
+                out[:, 2:] = 0   # sabotage tails (token 0 ~never greedy)
+                return out
+
+        draft = HalfWrongDraft({ReplayDraft.key(p): c.tokens
+                                for p, c in zip(prompts, plain)})
+        eng = DecodeEngine(params, cfg, n_slots=3, segment_len=4,
+                           max_len=64, draft=draft)
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g, speculate_k=4)
+        comps = eng.run("continuous")
+        st = eng.stats
+        for a, b in zip(plain, comps):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert st.spec_rewind_rounds > 0
+        # the batching claim: one varlen dispatch per rewinding round,
+        # with MORE rewound slots than dispatches (multi-slot rounds)
+        assert st.spec_rewind_dispatches == st.spec_rewind_rounds
+        assert st.spec_rewinds > st.spec_rewind_dispatches
 
 
 class TestDecodeNumerics:
