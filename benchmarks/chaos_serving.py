@@ -1,0 +1,216 @@
+"""Chaos/survival benchmark for the fault-tolerant serving engine.
+
+The paper's fixed-size O(k²) state is what makes every recovery path
+here a few-KB copy: preempting a request is one ``snapshot_state``,
+retrying a NaN-poisoned request is one ``write_slot_state`` from its
+last good checkpoint, and a quarantined slot costs nothing to abandon
+(row masking freezes it). This benchmark drives the
+:class:`repro.serving.lifecycle.FaultInjector` through four scenarios
+and reports survival metrics into ``BENCH_serving.json`` (merged under
+the ``"chaos"`` key — ``continuous_batching.py`` owns the rest of the
+file):
+
+* **baseline** — the fault-free run every chaos run is compared against;
+* **nan_retry** — NaN injected into an occupied slot mid-run: the
+  poisoned request must recover via ONE snapshot-retry and every
+  request (injected one included) must finish bit-identical to the
+  baseline, on linear, gated_linear and softmax;
+* **preempt** — a saturated pool preempted by a high-priority arrival:
+  all streams bit-identical to running alone;
+* **overload** — 2× more work than the bounded queue admits, with
+  degradation armed: the engine sheds per policy (queue never grows
+  past ``max_queue``), everything submitted resolves to a completion,
+  and goodput (ok-status tokens/s) is reported.
+
+All claims are deterministic (logical clock + event-keyed injection),
+so CI greps the claim CSV exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.serving import DecodeEngine, FaultInjector
+from repro.sharding import Rules
+
+RULES = Rules.null()
+N_SLOTS = 2
+SEGMENT_LEN = 4
+MAX_LEN = 96
+BENCH_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          os.pardir, "BENCH_serving.json")
+
+# long enough budgets that every slot is mid-request at injection
+# events (a NaN landing on a freed slot is harmlessly overwritten)
+PROMPT_LENS = (8, 11, 6, 9, 7, 10)
+GEN_LENS = (10, 12, 9, 11, 8, 10)
+
+
+def _workload(vocab_size: int):
+    rng = np.random.default_rng(0)
+    return [(rng.integers(0, vocab_size, size=pl,
+                          dtype=np.int64).astype(np.int32), g)
+            for pl, g in zip(PROMPT_LENS, GEN_LENS)]
+
+
+def _engine(params, cfg, **kw):
+    return DecodeEngine(params, cfg, RULES, n_slots=N_SLOTS,
+                        segment_len=SEGMENT_LEN, max_len=MAX_LEN, **kw)
+
+
+def _drain(eng, workload, **submit_kw):
+    for p, g in workload:
+        eng.submit(p, g, **submit_kw)
+    t0 = time.perf_counter()
+    comps = eng.run("continuous")
+    return comps, time.perf_counter() - t0
+
+
+def run() -> Dict:
+    key = jax.random.PRNGKey(0)
+    per_backend = []
+    unaffected_ok = True
+    nan_retry_ok = True
+    for backend in ("linear", "gated_linear", "softmax"):
+        cfg = dataclasses.replace(
+            get_smoke_config("yi-34b").with_backend(backend),
+            dtype="float32")
+        params = lm.init_params(key, cfg)
+        workload = _workload(cfg.vocab_size)
+
+        base, _ = _drain(_engine(params, cfg), workload)
+
+        # NaN into slot 0 at the first segment boundary; one retry
+        eng = _engine(params, cfg, max_retries=1,
+                      injector=FaultInjector(nan=((0, 0),)))
+        chaos, _ = _drain(eng, workload)
+        st = eng.stats
+        injected_recovered = (st.quarantined == 1 and st.retries == 1
+                              and st.failed == 0)
+        all_identical = all(
+            np.array_equal(a.tokens, b.tokens) and b.status == "ok"
+            for a, b in zip(base, chaos))
+        # "unaffected" = every request the fault did NOT hit; under a
+        # successful retry the injected one is ALSO bit-identical, so
+        # the stronger check subsumes both claims
+        unaffected_ok &= all(
+            np.array_equal(a.tokens, b.tokens)
+            for a, b in zip(base, chaos) if b.retries == 0)
+        nan_retry_ok &= injected_recovered and all_identical
+        per_backend.append({
+            "backend": backend,
+            "quarantined": st.quarantined, "retries": st.retries,
+            "failed": st.failed, "resumes": st.resumes,
+            "finite_checks": st.finite_checks,
+            "all_bit_identical": all_identical,
+        })
+
+    # -- preempt/resume under priority pressure (linear) ---------------
+    cfg = dataclasses.replace(
+        get_smoke_config("yi-34b").with_backend("linear"),
+        dtype="float32")
+    params = lm.init_params(key, cfg)
+    workload = _workload(cfg.vocab_size)
+    jobs = [(workload[0][0], 12, 0.0, 0), (workload[1][0], 12, 0.0, 0),
+            (workload[2][0], 8, 6.0, 5)]
+    solo = []
+    for p, g, *_ in jobs:
+        e = _engine(params, cfg)
+        e.submit(p, g)
+        solo.append(e.run()[0].tokens)
+    eng = _engine(params, cfg)
+    for p, g, arr, pri in jobs:
+        eng.submit(p, g, arrival=arr, priority=pri)
+    comps = eng.run("continuous")
+    preempt_ok = (eng.stats.preemptions >= 1
+                  and eng.stats.resumes == eng.stats.preemptions
+                  and all(np.array_equal(c.tokens, s)
+                          for c, s in zip(comps, solo)))
+    preempt_stats = {"preemptions": eng.stats.preemptions,
+                     "resumes": eng.stats.resumes,
+                     "checkpoints": eng.stats.checkpoints}
+
+    # -- 2x overload against a bounded queue + degradation -------------
+    rng = np.random.default_rng(2)
+    n_over = 4 * N_SLOTS                  # 2x what max_queue+slots hold
+    max_queue = N_SLOTS
+    eng = _engine(params, cfg, max_queue=max_queue,
+                  shed_policy="reject_new", degrade_threshold=1.0)
+    t0 = time.perf_counter()
+    uids = [eng.submit(
+        rng.integers(0, cfg.vocab_size, size=8,
+                     dtype=np.int64).astype(np.int32), 8,
+        arrival=float(i // N_SLOTS), priority=i % 2)
+        for i in range(n_over)]
+    over = eng.run("continuous")
+    dt = time.perf_counter() - t0
+    st = eng.stats
+    ok_tokens = sum(len(c.tokens) for c in over if c.status == "ok")
+    survival = {
+        "submitted": n_over, "max_queue": max_queue,
+        "completed_ok": sum(c.status == "ok" for c in over),
+        "shed": st.shed, "deadline": st.deadline_evictions,
+        "retried": st.retries, "failed": st.failed,
+        "degrade_transitions": st.degrade_transitions,
+        "goodput_tokens_per_s": ok_tokens / dt,
+    }
+    overload_ok = (len(over) == len(uids)        # every submit resolves
+                   and st.shed > 0               # the bound actually bit
+                   and survival["completed_ok"] + st.shed
+                   + st.deadline_evictions + st.failed == n_over)
+
+    claims = {
+        "chaos_unaffected_bit_identical": unaffected_ok,
+        "chaos_nan_retry_bit_identical": nan_retry_ok,
+        "chaos_preempt_resume_bit_identical": preempt_ok,
+        "chaos_overload_sheds_bounded": overload_ok,
+    }
+    return {
+        "n_slots": N_SLOTS, "segment_len": SEGMENT_LEN,
+        "nan_injection": per_backend,
+        "preempt": preempt_stats,
+        "overload": survival,
+        "claims": claims,
+    }
+
+
+def main() -> List[str]:
+    res = run()
+    out = ["chaos,backend,quarantined,retries,failed,resumes,"
+           "finite_checks,bit_identical"]
+    for r in res["nan_injection"]:
+        out.append(f"chaos,{r['backend']},{r['quarantined']},"
+                   f"{r['retries']},{r['failed']},{r['resumes']},"
+                   f"{r['finite_checks']},{r['all_bit_identical']}")
+    s = res["overload"]
+    out.append("chaos_overload,submitted,completed_ok,shed,failed,"
+               "degrade_flips,goodput_tok_s")
+    out.append(f"chaos_overload,{s['submitted']},{s['completed_ok']},"
+               f"{s['shed']},{s['failed']},{s['degrade_transitions']},"
+               f"{s['goodput_tokens_per_s']:.0f}")
+    for name, ok in res["claims"].items():
+        out.append(f"chaos_claim,{name},{'PASS' if ok else 'FAIL'}")
+
+    # merge under "chaos" — continuous_batching.py owns the rest
+    try:
+        with open(BENCH_PATH) as f:
+            bench = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        bench = {}
+    bench["chaos"] = res
+    with open(BENCH_PATH, "w") as f:
+        json.dump(bench, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -161,7 +161,10 @@ def stream(args) -> int:
         segment_len=args.segment_len, max_len=max_len,
         temperature=args.temperature, seed=args.seed,
         admission=getattr(args, "admission", "auto"),
-        prefill_chunk=getattr(args, "prefill_chunk", 64))
+        prefill_chunk=getattr(args, "prefill_chunk", 64),
+        max_queue=getattr(args, "max_queue", None),
+        shed_policy=getattr(args, "shed_policy", "reject_new"),
+        degrade_threshold=getattr(args, "degrade_threshold", None))
     rng = np.random.default_rng(args.seed)
     requests = make_request_mix(rng, args.n_requests, args.prompt_len,
                                 args.gen_len, cfg.vocab_size,
@@ -174,7 +177,11 @@ def stream(args) -> int:
     dt = time.perf_counter() - t0
 
     total = sum(len(c.tokens) for c in completions)
-    lat = [c.finished_step - c.admitted_step for c in completions]
+    served = [c for c in completions if c.admitted_step >= 0]
+    lat = [c.finished_step - c.admitted_step for c in served]
+    statuses = {}
+    for c in completions:
+        statuses[c.status] = statuses.get(c.status, 0) + 1
     print(f"arch={cfg.name} backend={cfg.attention_backend} "
           f"slots={args.slots} segment={args.segment_len}")
     print(f"stream: {len(completions)} requests, {total} tokens in "
@@ -182,13 +189,27 @@ def stream(args) -> int:
     st = engine.stats
     print(f"slot utilization {st.slot_utilization:.2f} over "
           f"{st.segments} segments; mean latency "
-          f"{np.mean(lat):.0f} decode steps")
+          f"{np.mean(lat):.0f} decode steps" if served else
+          "no request was served")
+    print("status: " + " ".join(
+        f"{k}={v}" for k, v in sorted(statuses.items())))
+    if st.shed or st.preemptions or st.quarantined or st.degrade_transitions:
+        print(f"lifecycle: shed={st.shed} preempt={st.preemptions} "
+              f"resume={st.resumes} quarantine={st.quarantined} "
+              f"retries={st.retries} failed={st.failed} "
+              f"degrade_flips={st.degrade_transitions}")
     print(f"admission={engine.admission} chunk={engine.prefill_chunk}: "
           f"{st.prefills} prompts in {st.admission_batches} batched "
           f"waves (mean batch {st.mean_admission_batch:.1f}), "
           f"{st.ingest_chunks} ingest chunks "
           f"(interleave {st.interleave_ratio:.2f}), "
           f"{st.prefill_jit_misses} admission jit misses")
+    if getattr(args, "stats_json", None):
+        with open(args.stats_json, "w") as f:
+            f.write(engine.stats.to_json())
+        print(f"stats written to {args.stats_json}")
+    # every submitted request resolves to a completion — shed/deadline
+    # ones included (that's the bounded-queue contract)
     assert len(completions) == args.n_requests
     return 0
 
@@ -258,6 +279,10 @@ def spec(args) -> int:
     print(f"plain: {total} tokens in {t_plain:.2f} s "
           f"({total/t_plain:.0f} tok/s) — speculative speedup "
           f"{t_plain/t_spec:.2f}x, outputs bit-identical")
+    if getattr(args, "stats_json", None):
+        with open(args.stats_json, "w") as f:
+            f.write(engine.stats.to_json())
+        print(f"stats written to {args.stats_json}")
     return 0
 
 
@@ -315,6 +340,19 @@ def main() -> int:
                     help="max prompt tokens per ingest dispatch (rounded"
                          " up to a power of two); longer prompts are"
                          " chunked and interleaved with decode segments")
+    # robustness knobs (stream mode)
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the admission queue; a full queue sheds"
+                         " per --shed-policy (status='shed')")
+    ap.add_argument("--shed-policy", default="reject_new",
+                    choices=["reject_new", "evict_lowest"])
+    ap.add_argument("--degrade-threshold", type=float, default=None,
+                    help="waiting requests per slot beyond which the"
+                         " engine degrades (spec off, smaller ingest"
+                         " chunks); None disables")
+    ap.add_argument("--stats-json", default=None, metavar="PATH",
+                    help="write EngineStats (counters + lifecycle/chaos"
+                         " fields) to PATH as JSON")
     # spec mode (speculative lookahead)
     ap.add_argument("--speculate-k", type=int, default=6,
                     help="draft tokens per verify round")

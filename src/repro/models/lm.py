@@ -540,6 +540,36 @@ def where_state(active: Array, new: Any, old: Any) -> Any:
     return _over_slots(sel, new, old)
 
 
+def slot_state_finite(state: Any) -> Array:
+    """Per-slot finiteness probe over a stacked engine decode state:
+    returns (S,) bool, True where EVERY float leaf of that slot is
+    finite.
+
+    This is the serving engine's numeric-fault detector: a NaN/Inf that
+    escapes the safe_denom clamps (or is injected by a fault harness)
+    would otherwise sit in a slot's stacked state and silently poison
+    every later tenant of the slot. One fused ``jnp.isfinite`` reduction
+    over all leaves amortises the check to a single tiny device program
+    per segment boundary; the (S,) result is resolved host-side by the
+    scheduler (quarantine + snapshot-retry). Non-float leaves are
+    trivially finite and skipped.
+    """
+    flags = []
+
+    def probe(x, axis):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            m = jnp.moveaxis(x, axis, 0)
+            flags.append(jnp.all(jnp.isfinite(m.reshape(m.shape[0], -1)),
+                                 axis=-1))
+        return x
+
+    _map_slots(probe, state)
+    out = flags[0]
+    for f in flags[1:]:
+        out = out & f
+    return out
+
+
 def write_slot_state(engine_state: Any, request_state: Any,
                      slot: Array) -> Any:
     """Swap a batch-1 request state into slot ``slot`` of the stacked

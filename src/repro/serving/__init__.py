@@ -7,6 +7,17 @@ from repro.serving.engine import (  # noqa: F401
     EngineStats,
     Request,
 )
+from repro.serving.lifecycle import (  # noqa: F401
+    SHED_POLICIES,
+    STATUS_CANCELLED,
+    STATUS_DEADLINE,
+    STATUS_FAILED,
+    STATUS_OK,
+    STATUS_SHED,
+    Checkpoint,
+    FaultInjector,
+    SuspendedRequest,
+)
 from repro.serving.speculative import (  # noqa: F401
     DraftProvider,
     ModelDraft,

@@ -53,6 +53,29 @@ Admission policies:
   baseline: the whole batch runs until its longest request finishes).
   Same compiled segment program, so benchmarks isolate scheduling.
 
+* **Lifecycle & fault tolerance.** The fixed-size representation makes
+  a request *portable*: any active slot can be suspended into a host-
+  side :class:`~repro.serving.lifecycle.SuspendedRequest` (one O(k²)
+  ``snapshot_state`` copy + scalar bookkeeping) and re-admitted later
+  with bit-identical greedy continuation — the primitive behind
+  priority preemption (a high-priority arrival preempts the lowest-
+  progress lower-priority slot when the queue is saturated) and
+  deadline eviction. Requests carry ``priority`` and ``deadline_s``
+  (logical decode steps), can be ``cancel()``-ed, and the admission
+  queue can be bounded with an explicit shed policy (reject-new vs
+  evict-lowest-priority). Under overload the engine degrades
+  gracefully: speculative decoding auto-disables and prefill chunks
+  shrink once queue pressure crosses ``degrade_threshold``, with every
+  transition recorded in :class:`EngineStats`. A per-segment fused
+  ``jnp.isfinite`` probe (``lm.slot_state_finite``) detects numeric
+  faults; a poisoned slot is quarantined (its NaNs are frozen by the
+  same row masking that isolates inactive slots, so neighbours stay
+  bit-identical) and its request retried once from its last good
+  checkpoint on a fresh slot, or surfaced as
+  ``Completion(status="failed")``. A deterministic
+  :class:`~repro.serving.lifecycle.FaultInjector` drives the chaos
+  suite (``tests/test_lifecycle.py``, ``benchmarks/chaos_serving.py``).
+
 Speculative lookahead (per-request policy, ``speculate_k`` on submit):
 
 A speculative request advances through draft/verify ROUNDS instead of
@@ -77,7 +100,8 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
-from typing import Any, Dict, List, Optional
+import json
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,6 +109,18 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
+from repro.serving.lifecycle import (
+    SHED_POLICIES,
+    STATUS_CANCELLED,
+    STATUS_DEADLINE,
+    STATUS_FAILED,
+    STATUS_OK,
+    STATUS_SHED,
+    Checkpoint,
+    FaultInjector,
+    SuspendedRequest,
+    poison_snapshot,
+)
 from repro.sharding import Rules
 
 PAD_ID = -1  # emitted by masked slots; never a vocabulary id
@@ -97,14 +133,20 @@ def _pow2_ceil(n: int) -> int:
 
 @dataclasses.dataclass
 class Request:
-    """One generation request. ``arrival`` is in logical decode steps;
-    ``speculate_k`` > 0 decodes through draft/verify rounds (greedy
-    only) instead of one-token segment steps."""
+    """One generation request. ``arrival`` and ``deadline_s`` are in
+    logical decode steps (``deadline_s`` is an absolute completion
+    deadline; a request past it is shed from the queue or evicted from
+    its slot with its partial output). ``priority`` orders admission
+    (higher first) and arms preemption; ``speculate_k`` > 0 decodes
+    through draft/verify rounds (greedy only) instead of one-token
+    segment steps."""
     uid: int
     prompt: np.ndarray            # (P,) int32
     max_new_tokens: int
     arrival: float = 0.0
     speculate_k: int = 0
+    priority: int = 0
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -112,9 +154,11 @@ class Completion:
     uid: int
     prompt_len: int
     tokens: np.ndarray            # generated tokens (incl. EOS if hit)
-    finish_reason: str            # "eos" | "length"
-    admitted_step: int
+    finish_reason: str            # "eos" | "length" | lifecycle status
+    admitted_step: int            # -1 if never admitted (shed/deadline)
     finished_step: int
+    status: str = STATUS_OK       # ok|cancelled|deadline|shed|failed
+    retries: int = 0              # numeric-fault retries consumed
 
 
 @dataclasses.dataclass
@@ -139,6 +183,33 @@ class EngineStats:
     spec_rewinds: int = 0         # partial-acceptance slot re-advances
     spec_rewind_rounds: int = 0   # rounds that had >= 1 partial acceptor
     spec_rewind_dispatches: int = 0  # varlen rewind launches (1 per round)
+    # lifecycle & fault tolerance
+    preemptions: int = 0          # active slots suspended mid-generation
+    resumes: int = 0              # suspended requests re-admitted
+    cancelled: int = 0            # cancel() completions
+    deadline_evictions: int = 0   # requests past deadline (queued/active)
+    shed: int = 0                 # bounded-queue rejections
+    quarantined: int = 0          # slots poisoned by a numeric fault
+    retries: int = 0              # snapshot-retries after a fault
+    failed: int = 0               # requests with retries exhausted
+    checkpoints: int = 0          # last-good snapshots taken
+    finite_checks: int = 0        # fused isfinite probes run
+    degrade_transitions: int = 0  # overload degradation flips (both ways)
+    spec_disables: int = 0        # spec requests forced plain (degraded)
+    degrade_events: List[Dict] = dataclasses.field(default_factory=list)
+
+    def to_dict(self) -> Dict:
+        """Counters + derived ratios as one JSON-able dict (the machine-
+        readable form benchmarks and CI gates consume)."""
+        d = dataclasses.asdict(self)
+        for name in ("slot_utilization", "acceptance_rate",
+                     "tokens_per_round", "mean_admission_batch",
+                     "interleave_ratio"):
+            d[name] = getattr(self, name)
+        return d
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
 
     @property
     def slot_utilization(self) -> float:
@@ -204,6 +275,26 @@ class DecodeEngine:
     kernels continuing from carried state — MXU-shaped), "recurrent"
     (the masked fused-recurrent window), or "auto" (parallel on TPU,
     recurrent elsewhere — the decode_kernel="auto" idiom).
+
+    Robustness knobs (PR 6):
+
+    ``max_queue`` bounds the admission queue; when full, ``shed_policy``
+    decides between "reject_new" (the arriving request completes
+    immediately with ``status="shed"``) and "evict_lowest" (the lowest-
+    priority queued request is shed instead, if strictly lower-priority
+    than the arrival). ``degrade_threshold`` (waiting requests per
+    slot; None disables) arms graceful overload degradation:
+    speculative decoding auto-disables and the live prefill chunk
+    halves while pressure stays above it, restoring below half the
+    threshold (hysteresis), every flip recorded in ``EngineStats``.
+    ``finite_check`` runs the fused per-slot ``jnp.isfinite`` probe at
+    every segment/round boundary; a non-finite slot is quarantined for
+    the rest of the run and its request retried up to ``max_retries``
+    times from its last good checkpoint on a fresh slot (checkpoints
+    are taken at activation, and every ``checkpoint_interval`` events
+    when > 0), else completed with ``status="failed"``. ``injector``
+    accepts a :class:`~repro.serving.lifecycle.FaultInjector` driving
+    deterministic chaos (tests/benchmarks only).
     """
 
     def __init__(
@@ -222,6 +313,13 @@ class DecodeEngine:
         admission: str = "auto",
         prefill_chunk: int = 64,
         ingest: str = "auto",
+        max_queue: Optional[int] = None,
+        shed_policy: str = "reject_new",
+        degrade_threshold: Optional[float] = None,
+        finite_check: bool = True,
+        max_retries: int = 1,
+        checkpoint_interval: int = 0,
+        injector: Optional[FaultInjector] = None,
     ):
         self.params = params
         self.cfg = cfg
@@ -233,6 +331,16 @@ class DecodeEngine:
         self.temperature = temperature
         self._seed = seed
         self.draft = draft
+        assert shed_policy in SHED_POLICIES, shed_policy
+        assert max_queue is None or max_queue >= 1, max_queue
+        assert max_retries >= 0 and checkpoint_interval >= 0
+        self.max_queue = max_queue
+        self.shed_policy = shed_policy
+        self.degrade_threshold = degrade_threshold
+        self.finite_check = finite_check
+        self.max_retries = max_retries
+        self.checkpoint_interval = checkpoint_interval
+        self.injector = injector
         assert admission in ("auto", "batched", "per_request"), admission
         if admission == "auto":
             admission = ("batched" if lm.supports_varlen_prefill(cfg)
@@ -342,6 +450,18 @@ class DecodeEngine:
         def _snapshot(state, slot):
             return lm.snapshot_state(state, slot)
 
+        @jax.jit
+        def _finite(state):
+            # ONE fused reduction over every float leaf → (S,) bool;
+            # the numeric-fault detector, amortised per segment
+            return lm.slot_state_finite(state)
+
+        @jax.jit
+        def _poison(state, slot):
+            # chaos-harness only: NaN-fill exactly one slot's state
+            bad = poison_snapshot(lm.snapshot_state(state, slot))
+            return lm.restore_state(state, bad, slot)
+
         self._prefill = _prefill
         self._prefill_varlen = _prefill_varlen
         self._prefill_varlen_one = _prefill_varlen_one
@@ -352,6 +472,8 @@ class DecodeEngine:
         self._verify = _verify
         self._select = _select
         self._snapshot = _snapshot
+        self._finite = _finite
+        self._poison = _poison
         # admission program shapes seen — the host-side mirror of the
         # jit cache, so EngineStats can report compile (miss) counts
         self._seen_shapes: set = set()
@@ -385,19 +507,42 @@ class DecodeEngine:
         self._clock = 0
         self._next_uid = 0
         self._key = jax.random.PRNGKey(self._seed)
+        # lifecycle & fault-tolerance bookkeeping
+        self._suspended: List[SuspendedRequest] = []
+        self._quarantined = np.zeros((s,), bool)
+        self._retry_count: Dict[int, int] = {}   # uid → retries consumed
+        self._ckpt: Dict[int, Checkpoint] = {}
+        self._last_ckpt_event = np.zeros((s,), np.int64)
+        self._cancel_uids: set = set()
+        self._degraded = False
+        self._events = 0          # segment/round boundaries elapsed
+        self._admit_passes = 0    # admission passes attempted
         if self.draft is not None:
             self.draft.reset()
         self.stats = EngineStats(n_slots=self.n_slots,
                                  segment_len=self.segment_len)
 
     def submit(self, prompt, max_new_tokens: int,
-               arrival: float = 0.0, speculate_k: int = 0) -> int:
+               arrival: float = 0.0, speculate_k: int = 0,
+               priority: int = 0,
+               deadline_s: Optional[float] = None) -> int:
         """Queue a request; returns its uid. ``arrival`` is in logical
-        decode steps (0 = available immediately). ``speculate_k`` > 0
-        decodes through draft/verify rounds of K proposals (requires the
-        engine to hold a draft provider and greedy decoding — verified
+        decode steps (0 = available immediately); ``deadline_s`` an
+        absolute logical-step completion deadline; ``priority`` orders
+        admission (higher first, FIFO within a priority) and arms
+        preemption of lower-priority slots. ``speculate_k`` > 0 decodes
+        through draft/verify rounds of K proposals (requires the engine
+        to hold a draft provider and greedy decoding — verified
         speculation preserves the greedy sequence exactly; stochastic
-        sampling would need rejection-sampling machinery)."""
+        sampling would need rejection-sampling machinery).
+
+        Validation is ATOMIC: every check runs before any engine state
+        is touched, so a raising submit leaves the queue, uid counter
+        and stats exactly as they were (tests/test_lifecycle.py pins
+        this). If the queue is bounded and full, the shed policy
+        resolves synchronously — the shed request (the arrival, or a
+        strictly lower-priority queued victim under "evict_lowest")
+        completes immediately with ``status="shed"``."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if max_new_tokens < 1:
             raise ValueError(
@@ -410,6 +555,10 @@ class DecodeEngine:
         if speculate_k > 0 and self.temperature > 0.0:
             raise ValueError(
                 "speculative decoding is greedy-only (temperature=0)")
+        if deadline_s is not None and deadline_s <= arrival:
+            raise ValueError(
+                f"deadline_s ({deadline_s}) must be after arrival "
+                f"({arrival})")
         # speculative verify probes up to speculate_k tokens past the
         # last emitted one; the softmax KV caches must have room for it
         if len(prompt) + max_new_tokens + speculate_k > self.max_len + 1:
@@ -417,31 +566,90 @@ class DecodeEngine:
                 f"prompt ({len(prompt)}) + max_new_tokens "
                 f"({max_new_tokens}) + speculate_k ({speculate_k}) "
                 f"exceeds engine max_len {self.max_len} + 1")
+        # ---- validation complete; engine state mutations start here --
         uid = self._next_uid
         self._next_uid += 1
+        req = Request(uid=uid, prompt=prompt,
+                      max_new_tokens=max_new_tokens, arrival=arrival,
+                      speculate_k=speculate_k, priority=priority,
+                      deadline_s=deadline_s)
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            victim = self._pick_shed_victim(req)
+            self._shed(victim)
+            if victim is req:
+                return uid
         # sorted insertion: an early-arriving request submitted late must
         # not be head-of-line blocked behind a far-future one
-        bisect.insort(
-            self._queue,
-            Request(uid=uid, prompt=prompt,
-                    max_new_tokens=max_new_tokens, arrival=arrival,
-                    speculate_k=speculate_k),
-            key=lambda r: (r.arrival, r.uid))
+        bisect.insort(self._queue, req,
+                      key=lambda r: (r.arrival, r.uid))
         return uid
+
+    def _pick_shed_victim(self, incoming: Request) -> Request:
+        """Full queue: who gets shed? "reject_new" always sheds the
+        arrival; "evict_lowest" sheds the lowest-priority queued request
+        instead, provided it is STRICTLY lower-priority than the
+        arrival (newest of the lowest tier goes first), else the
+        arrival."""
+        if self.shed_policy == "reject_new":
+            return incoming
+        victim = min(self._queue,
+                     key=lambda r: (r.priority, -r.arrival, -r.uid))
+        if victim.priority < incoming.priority:
+            self._queue.remove(victim)
+            return victim
+        return incoming
+
+    def _shed(self, req: Request) -> None:
+        self.stats.shed += 1
+        self._complete(req, [], admitted_step=-1, status=STATUS_SHED)
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a request by uid. Queued/suspended requests complete
+        immediately with ``status="cancelled"`` (suspended ones keep
+        their partial tokens); an active/ingesting request is marked and
+        evicted at the next scheduling boundary. Returns False if the
+        uid is unknown or already completed."""
+        for i, r in enumerate(self._queue):
+            if r.uid == uid:
+                self._queue.pop(i)
+                self.stats.cancelled += 1
+                self._complete(r, [], admitted_step=-1,
+                               status=STATUS_CANCELLED)
+                return True
+        for i, s in enumerate(self._suspended):
+            if s.req.uid == uid:
+                self._suspended.pop(i)
+                self.stats.cancelled += 1
+                self._complete(s.req, s.toks,
+                               admitted_step=s.admitted_step,
+                               status=STATUS_CANCELLED,
+                               retries=s.retries)
+                return True
+        for slot in range(self.n_slots):
+            req = self._slot_req[slot] or self._ingest_req[slot]
+            if req is not None and req.uid == uid:
+                self._cancel_uids.add(uid)
+                return True
+        return False
 
     # ------------------------------------------------------------------
     # scheduling
     # ------------------------------------------------------------------
 
     def _complete(self, req: Request, tokens: List[int],
-                  admitted_step: int) -> None:
+                  admitted_step: int, status: str = STATUS_OK,
+                  retries: int = 0) -> None:
         last = tokens[-1] if tokens else None
-        reason = ("eos" if self.eos_id is not None and last == self.eos_id
-                  else "length")
+        if status == STATUS_OK:
+            reason = ("eos" if self.eos_id is not None
+                      and last == self.eos_id else "length")
+        else:
+            reason = status
         self._completions[req.uid] = Completion(
             uid=req.uid, prompt_len=len(req.prompt),
             tokens=np.asarray(tokens, np.int32), finish_reason=reason,
-            admitted_step=admitted_step, finished_step=self._clock)
+            admitted_step=admitted_step, finished_step=self._clock,
+            status=status, retries=retries)
 
     def _miss(self, kind: str, width: int) -> None:
         """Count an admission-program compile the jit cache hasn't seen."""
@@ -450,14 +658,13 @@ class DecodeEngine:
             self._seen_shapes.add(key)
             self.stats.prefill_jit_misses += 1
 
-    def _admit_one(self, slot: int) -> None:
-        """Pop the queue head into ``slot``: prefill, sample the first
+    def _admit_one(self, slot: int, req: Request) -> None:
+        """Admit ``req`` into ``slot``: prefill, sample the first
         token, swap the state in. Requests whose budget is a single
         token (or whose first token is EOS) complete at admission and
         never occupy the slot. (The ``admission="per_request"`` path:
         one host-blocking batch-1 prefill — and one jit compile per
         DISTINCT prompt length — plus one slot write per request.)"""
-        req = self._queue.pop(0)
         self._miss("prefill_raw", len(req.prompt))
         logits, st_req = self._prefill(
             self.params, jnp.asarray(req.prompt)[None, :])
@@ -467,7 +674,8 @@ class DecodeEngine:
         tok0 = int(lm.sample_token(logits, self.temperature, sub)[0])
         hit_eos = self.eos_id is not None and tok0 == self.eos_id
         if req.max_new_tokens <= 1 or hit_eos:
-            self._complete(req, [tok0], admitted_step=self._clock)
+            self._complete(req, [tok0], admitted_step=self._clock,
+                           retries=self._retry_count.pop(req.uid, 0))
             return
         self.state = self._admit(self.state, st_req, slot)
         self.stats.admission_dispatches += 1
@@ -475,60 +683,238 @@ class DecodeEngine:
 
     def _activate_slot(self, slot: int, req: Request, tok0: int) -> None:
         """Flip a slot whose prompt is fully encoded to decode-active."""
+        spec_k = req.speculate_k
+        if spec_k > 0 and self._degraded:
+            spec_k = 0               # overload: lookahead disabled; the
+            self.stats.spec_disables += 1  # greedy tokens are unchanged
         self._tok[slot] = tok0
         self._pos[slot] = len(req.prompt)
         self._active[slot] = True
         self._remaining[slot] = req.max_new_tokens - 1
-        self._spec_k[slot] = req.speculate_k
+        self._spec_k[slot] = spec_k
         self._slot_req[slot] = req
         self._slot_toks[slot] = [tok0]
         self._slot_admitted[slot] = self._clock
-        if req.speculate_k > 0:
+        if spec_k > 0:
             self.draft.admit(
                 slot, np.concatenate([req.prompt, [tok0]]).astype(np.int32))
+        if self.finite_check and self.max_retries > 0:
+            # activation checkpoint: the last-known-good restore point a
+            # later numeric fault retries from (one O(k²) snapshot copy)
+            self._checkpoint_slot(slot)
+
+    def _checkpoint_slot(self, slot: int) -> None:
+        self._ckpt[slot] = Checkpoint(
+            state=self._snapshot(self.state, jnp.int32(slot)),
+            tok=int(self._tok[slot]), pos=int(self._pos[slot]),
+            remaining=int(self._remaining[slot]),
+            toks=list(self._slot_toks[slot]))
+        self._last_ckpt_event[slot] = self._events
+        self.stats.checkpoints += 1
 
     def _admissible(self) -> bool:
         return bool(self._queue) and self._queue[0].arrival <= self._clock
 
+    def _work_waiting(self) -> bool:
+        return bool(self._suspended) or self._admissible()
+
     def _any_ingesting(self) -> bool:
         return any(r is not None for r in self._ingest_req)
 
+    def _slot_free(self, slot: int) -> bool:
+        return (not self._active[slot]
+                and self._ingest_req[slot] is None
+                and not self._quarantined[slot])
+
+    # -- admission ordering: priority first, FIFO within a priority ----
+
+    def _best_queued_idx(self) -> Optional[int]:
+        """Index of the best admissible queued request by
+        (-priority, arrival, uid); the queue is arrival-sorted so the
+        admissible candidates are a prefix."""
+        best, best_key = None, None
+        for i, r in enumerate(self._queue):
+            if r.arrival > self._clock:
+                break
+            key = (-r.priority, r.arrival, r.uid)
+            if best_key is None or key < best_key:
+                best, best_key = i, key
+        return best
+
+    def _pop_admission(self) -> Tuple[str, Any]:
+        """Pop the next item to admit — the highest-priority admissible
+        request across the queue AND the suspended pool (suspended wins
+        ties: it has already paid its prefill). Returns ("resume",
+        SuspendedRequest) or ("new", Request)."""
+        qi = self._best_queued_idx()
+        si, si_key = None, None
+        for i, s in enumerate(self._suspended):
+            key = (-s.req.priority, s.req.arrival, s.req.uid)
+            if si_key is None or key < si_key:
+                si, si_key = i, key
+        if si is not None and (qi is None or si_key <= (
+                -self._queue[qi].priority, self._queue[qi].arrival,
+                self._queue[qi].uid)):
+            return "resume", self._suspended.pop(si)
+        assert qi is not None, "_pop_admission with nothing waiting"
+        return "new", self._queue.pop(qi)
+
+    def _resume_into(self, slot: int, susp: SuspendedRequest) -> None:
+        """Re-admit a suspended request: ONE ``write_slot_state`` copy
+        of its O(k²) snapshot plus scalar bookkeeping. Greedy decode
+        depends only on (state, tok, pos), so the continuation is
+        bit-identical to never having been suspended."""
+        req = susp.req
+        self.state = self._admit(self.state, susp.state, slot)
+        spec_k = req.speculate_k
+        if spec_k > 0 and self._degraded:
+            spec_k = 0
+            self.stats.spec_disables += 1
+        self._tok[slot] = susp.tok
+        self._pos[slot] = susp.pos
+        self._active[slot] = True
+        self._remaining[slot] = susp.remaining
+        self._spec_k[slot] = spec_k
+        self._slot_req[slot] = req
+        self._slot_toks[slot] = list(susp.toks)
+        self._slot_admitted[slot] = susp.admitted_step
+        self._retry_count[req.uid] = susp.retries
+        if spec_k > 0:
+            self.draft.admit(slot, np.concatenate(
+                [req.prompt, susp.toks]).astype(np.int32))
+        if self.finite_check and self.max_retries > 0:
+            # the incoming snapshot IS the slot's last-known-good state
+            self._ckpt[slot] = Checkpoint(
+                state=susp.state, tok=susp.tok, pos=susp.pos,
+                remaining=susp.remaining, toks=list(susp.toks))
+            self._last_ckpt_event[slot] = self._events
+        self.stats.resumes += 1
+
+    def preempt(self, slot: int) -> SuspendedRequest:
+        """Swap the active request out of ``slot`` into a host-side
+        :class:`SuspendedRequest` — one O(k²) ``snapshot_state`` copy
+        plus scalar bookkeeping (the paper's fixed-size representation
+        is what makes this a few-KB move instead of a KV-cache
+        migration). The slot frees immediately; the suspended request
+        rejoins the admission pool and continues bit-identically."""
+        req = self._slot_req[slot]
+        assert self._active[slot] and req is not None, slot
+        susp = SuspendedRequest(
+            req=req,
+            state=self._snapshot(self.state, jnp.int32(slot)),
+            tok=int(self._tok[slot]), pos=int(self._pos[slot]),
+            remaining=int(self._remaining[slot]),
+            toks=list(self._slot_toks[slot]),
+            admitted_step=self._slot_admitted[slot],
+            retries=self._retry_count.get(req.uid, 0))
+        if self._spec_k[slot] > 0:
+            self.draft.release(slot)
+        self._slot_req[slot] = None
+        self._slot_toks[slot] = []
+        self._spec_k[slot] = 0
+        self._active[slot] = False
+        self._ckpt.pop(slot, None)
+        self._suspended.append(susp)
+        self.stats.preemptions += 1
+        return susp
+
+    def _peek_waiting_priority(self) -> Optional[int]:
+        best = None
+        for r in self._queue:
+            if r.arrival > self._clock:
+                break
+            if best is None or r.priority > best:
+                best = r.priority
+        for s in self._suspended:
+            if best is None or s.req.priority > best:
+                best = s.req.priority
+        return best
+
+    def _preempt_pass(self) -> None:
+        """Priority preemption: when the pool is saturated and a waiting
+        item outranks a running one, suspend victims — lowest (priority,
+        progress) decode-active slots first — until every strictly-
+        higher-priority waiting item has a slot to land in."""
+        waiting = sorted(
+            [r.priority for r in self._queue if r.arrival <= self._clock]
+            + [s.req.priority for s in self._suspended], reverse=True)
+        idx = sum(self._slot_free(s) for s in range(self.n_slots))
+        while idx < len(waiting):
+            victims = [s for s in range(self.n_slots)
+                       if self._active[s] and self._slot_req[s] is not None]
+            if not victims:
+                return
+            victim = min(victims, key=lambda s: (
+                self._slot_req[s].priority, len(self._slot_toks[s]), s))
+            if self._slot_req[victim].priority >= waiting[idx]:
+                return
+            self.preempt(victim)
+            idx += 1
+
     def _admit_pass(self, policy: str) -> None:
+        if policy == "static":
+            # batch-synchronous baseline: wait for the whole batch
+            if self.admission == "per_request" and self._active.any():
+                return
+            if self.admission != "per_request" and (
+                    self._active.any() or self._any_ingesting()):
+                return
+        if not self._work_waiting():
+            return
+        pass_idx = self._admit_passes
+        self._admit_passes += 1
+        if (self.injector is not None
+                and self.injector.drops_admission(pass_idx)):
+            return                    # chaos: this wave never happens
+        if policy == "continuous":
+            self._preempt_pass()
         if self.admission == "per_request":
-            if policy == "static" and self._active.any():
-                return  # batch-synchronous: wait for the whole batch
             for slot in range(self.n_slots):
                 # keep feeding the same slot while requests complete at
                 # admission (gen_len=1 / instant EOS never occupy it)
-                while not self._active[slot] and self._admissible():
-                    self._admit_one(slot)
+                while self._slot_free(slot) and self._work_waiting():
+                    kind, item = self._pop_admission()
+                    if kind == "resume":
+                        self._resume_into(slot, item)
+                    else:
+                        self._admit_one(slot, item)
             return
 
-        # batched admission: fill EVERY free slot from the queue head,
-        # then encode the whole wave's first chunks in ONE bucket-padded
-        # varlen prefill dispatch. Loop because requests completing at
-        # admission (gen_len=1 / instant EOS) free their slot within the
-        # same pass at the same logical clock.
-        if policy == "static" and (self._active.any()
-                                   or self._any_ingesting()):
-            return
-        while self._admissible():
-            newly = []
+        # batched admission: fill EVERY free slot from the admission
+        # pool (resumes land directly; new requests join the ingest
+        # wave), then encode the wave's first chunks in ONE bucket-
+        # padded varlen prefill dispatch. Loop because requests
+        # completing at admission (gen_len=1 / instant EOS) free their
+        # slot within the same pass at the same logical clock.
+        while self._work_waiting():
+            newly, resumed = [], 0
             for slot in range(self.n_slots):
-                if (self._active[slot] or self._ingest_req[slot]
-                        is not None):
+                if not self._slot_free(slot) or not self._work_waiting():
                     continue
-                if not self._admissible():
-                    break
-                self._ingest_req[slot] = self._queue.pop(0)
-                self._ingest_cursor[slot] = 0
-                newly.append(slot)
-            if not newly:
+                kind, item = self._pop_admission()
+                if kind == "resume":
+                    self._resume_into(slot, item)
+                    resumed += 1
+                else:
+                    self._ingest_req[slot] = item
+                    self._ingest_cursor[slot] = 0
+                    newly.append(slot)
+            if newly:
+                self._ingest_chunk(newly, first=True)
+            elif not resumed:
                 break
-            self._ingest_chunk(newly, first=True)
 
     def _bucket(self, n: int) -> int:
         return min(_pow2_ceil(max(1, n)), self.max_len)
+
+    def _live_chunk(self) -> int:
+        """Ingest chunk under load: halves while degraded, so prompt
+        ingestion yields the device back to decode segments sooner
+        (still a power of two — bucket widths stay on the compiled
+        grid)."""
+        if not self._degraded:
+            return self.prefill_chunk
+        return max(min(8, self.prefill_chunk), self.prefill_chunk // 2)
 
     def _ingest_chunk(self, slots: List[int], *, first: bool) -> None:
         """Consume the next ≤ ``prefill_chunk`` prompt tokens of every
@@ -568,7 +954,7 @@ class DecodeEngine:
         for slot in slots:
             req = self._ingest_req[slot]
             cur = int(self._ingest_cursor[slot])
-            counts[slot] = min(len(req.prompt) - cur, self.prefill_chunk)
+            counts[slot] = min(len(req.prompt) - cur, self._live_chunk())
         width = self._bucket(max(counts.values()))
         tokens = np.zeros((self.n_slots, width), np.int32)
         lens = np.zeros((self.n_slots,), np.int32)
@@ -648,7 +1034,8 @@ class DecodeEngine:
             jnp.asarray(logits_row)[None], self.temperature, sub)[0])
         hit_eos = self.eos_id is not None and tok0 == self.eos_id
         if req.max_new_tokens <= 1 or hit_eos:
-            self._complete(req, [tok0], admitted_step=self._clock)
+            self._complete(req, [tok0], admitted_step=self._clock,
+                           retries=self._retry_count.pop(req.uid, 0))
             return
         self._activate_slot(slot, req, tok0)
 
@@ -691,13 +1078,184 @@ class DecodeEngine:
     def _free_slot(self, slot: int) -> None:
         req = self._slot_req[slot]
         self._complete(req, self._slot_toks[slot],
-                       admitted_step=self._slot_admitted[slot])
+                       admitted_step=self._slot_admitted[slot],
+                       retries=self._retry_count.pop(req.uid, 0))
         self._slot_req[slot] = None
         self._slot_toks[slot] = []
         if self._spec_k[slot] > 0:
             self.draft.release(slot)
         self._spec_k[slot] = 0
         self._active[slot] = False
+        self._ckpt.pop(slot, None)
+
+    # ------------------------------------------------------------------
+    # lifecycle & fault tolerance
+    # ------------------------------------------------------------------
+
+    def _evict(self, slot: int, status: str) -> None:
+        """Complete a slot's request NOW with its partial tokens and
+        free the slot. The state row is simply abandoned — inactive
+        rows are masked bit-for-bit inside every program, so no device
+        work is needed to reclaim it."""
+        req = self._slot_req[slot] or self._ingest_req[slot]
+        toks = (list(self._slot_toks[slot])
+                if self._slot_req[slot] is not None else [])
+        admitted = (self._slot_admitted[slot]
+                    if self._slot_req[slot] is not None else -1)
+        self._complete(req, toks, admitted_step=admitted, status=status,
+                       retries=self._retry_count.pop(req.uid, 0))
+        if self._slot_req[slot] is not None and self._spec_k[slot] > 0:
+            self.draft.release(slot)
+        self._slot_req[slot] = None
+        self._slot_toks[slot] = []
+        self._spec_k[slot] = 0
+        self._active[slot] = False
+        self._ingest_req[slot] = None
+        self._ingest_cursor[slot] = 0
+        self._ckpt.pop(slot, None)
+
+    def _set_degraded(self, on: bool, pressure: float) -> None:
+        self._degraded = on
+        self.stats.degrade_transitions += 1
+        self.stats.degrade_events.append({
+            "clock": self._clock, "degraded": on,
+            "pressure": round(pressure, 3)})
+        if on:
+            # live speculative slots convert to plain greedy decode —
+            # speculation emits the exact plain-greedy sequence, so
+            # dropping it sheds lookahead FLOPs, never tokens
+            for slot in range(self.n_slots):
+                if self._active[slot] and self._spec_k[slot] > 0:
+                    self.draft.release(slot)
+                    self._spec_k[slot] = 0
+                    self.stats.spec_disables += 1
+
+    def _lifecycle_pass(self) -> None:
+        """Scheduling-boundary housekeeping: drain cancellations,
+        enforce deadlines everywhere a request can wait or run, and
+        flip overload degradation (with hysteresis)."""
+        if self._cancel_uids:
+            for slot in range(self.n_slots):
+                req = self._slot_req[slot] or self._ingest_req[slot]
+                if req is not None and req.uid in self._cancel_uids:
+                    self._cancel_uids.discard(req.uid)
+                    self.stats.cancelled += 1
+                    self._evict(slot, STATUS_CANCELLED)
+        for r in [r for r in self._queue if r.deadline_s is not None
+                  and r.deadline_s <= self._clock]:
+            self._queue.remove(r)
+            self.stats.deadline_evictions += 1
+            self._complete(r, [], admitted_step=-1,
+                           status=STATUS_DEADLINE)
+        for s in [s for s in self._suspended
+                  if s.req.deadline_s is not None
+                  and s.req.deadline_s <= self._clock]:
+            self._suspended.remove(s)
+            self.stats.deadline_evictions += 1
+            self._complete(s.req, s.toks, admitted_step=s.admitted_step,
+                           status=STATUS_DEADLINE, retries=s.retries)
+        for slot in range(self.n_slots):
+            req = self._slot_req[slot] or self._ingest_req[slot]
+            if (req is not None and req.deadline_s is not None
+                    and req.deadline_s <= self._clock):
+                self.stats.deadline_evictions += 1
+                self._evict(slot, STATUS_DEADLINE)
+        if self.degrade_threshold is not None:
+            waiting = len(self._suspended) + sum(
+                1 for r in self._queue if r.arrival <= self._clock)
+            pressure = waiting / self.n_slots
+            if not self._degraded and pressure >= self.degrade_threshold:
+                self._set_degraded(True, pressure)
+            elif self._degraded and pressure <= self.degrade_threshold / 2:
+                self._set_degraded(False, pressure)
+
+    def _quarantine(self, slot: int) -> None:
+        """A non-finite state was detected in ``slot``: quarantine the
+        slot for the rest of the run (its NaNs stay put, frozen by the
+        same row masking that isolates inactive slots — neighbours are
+        bit-identical to a fault-free run) and retry its request from
+        the last good checkpoint on a fresh slot, up to ``max_retries``
+        times, else complete it ``status="failed"``."""
+        self.stats.quarantined += 1
+        self._quarantined[slot] = True
+        req = self._slot_req[slot] or self._ingest_req[slot]
+        ckpt = self._ckpt.pop(slot, None)
+        if req is not None:
+            used = self._retry_count.get(req.uid, 0)
+            if used < self.max_retries:
+                self._retry_count[req.uid] = used + 1
+                self.stats.retries += 1
+                if ckpt is not None:
+                    self._suspended.append(SuspendedRequest(
+                        req=req, state=ckpt.state, tok=ckpt.tok,
+                        pos=ckpt.pos, remaining=ckpt.remaining,
+                        toks=list(ckpt.toks),
+                        admitted_step=self._slot_admitted[slot],
+                        retries=used + 1))
+                else:
+                    # poisoned mid-ingest: nothing emitted yet, so the
+                    # last good state is the empty start — requeue
+                    bisect.insort(self._queue, req,
+                                  key=lambda r: (r.arrival, r.uid))
+            else:
+                toks = list(ckpt.toks) if ckpt is not None else []
+                self.stats.failed += 1
+                self._retry_count.pop(req.uid, None)
+                self._complete(
+                    req, toks, status=STATUS_FAILED, retries=used,
+                    admitted_step=(self._slot_admitted[slot]
+                                   if self._slot_req[slot] is not None
+                                   else -1))
+        if self._slot_req[slot] is not None and self._spec_k[slot] > 0:
+            self.draft.release(slot)
+        self._slot_req[slot] = None
+        self._slot_toks[slot] = []
+        self._spec_k[slot] = 0
+        self._active[slot] = False
+        self._ingest_req[slot] = None
+        self._ingest_cursor[slot] = 0
+
+    def _post_event(self) -> None:
+        """Segment/round boundary: chaos injection, the fused
+        ``jnp.isfinite`` probe + quarantine, periodic checkpoints of
+        healthy active slots. Runs after EVERY decode segment and
+        speculative round — the engine's scheduling quantum, so the
+        per-token cost is amortized over ``segment_len`` steps."""
+        ev = self._events
+        self._events += 1
+        if self.injector is not None:
+            for slot in self.injector.nan_slots(ev):
+                self.state = self._poison(self.state, jnp.int32(slot))
+            self._clock += self.injector.extra_delay(ev)
+        if self.finite_check:
+            occupied = self._active | np.asarray(
+                [r is not None for r in self._ingest_req])
+            if occupied.any():
+                finite = np.asarray(self._finite(self.state))
+                self.stats.finite_checks += 1
+                for slot in np.nonzero(occupied & ~finite
+                                       & ~self._quarantined)[0]:
+                    self._quarantine(int(slot))
+        if (self.checkpoint_interval > 0 and self.finite_check
+                and self.max_retries > 0):
+            for slot in range(self.n_slots):
+                if (self._active[slot] and not self._quarantined[slot]
+                        and self._events - self._last_ckpt_event[slot]
+                        >= self.checkpoint_interval):
+                    self._checkpoint_slot(slot)
+
+    def _fail_all_pending(self) -> None:
+        """Every slot is quarantined: nothing can ever run again — fail
+        the remaining work instead of spinning."""
+        for s in self._suspended:
+            self.stats.failed += 1
+            self._complete(s.req, s.toks, admitted_step=s.admitted_step,
+                           status=STATUS_FAILED, retries=s.retries)
+        self._suspended = []
+        for r in self._queue:
+            self.stats.failed += 1
+            self._complete(r, [], admitted_step=-1, status=STATUS_FAILED)
+        self._queue = []
 
     # ------------------------------------------------------------------
     # speculative rounds
@@ -745,6 +1303,14 @@ class DecodeEngine:
             self.params, state_pre, jnp.asarray(window),
             jnp.asarray(self._pos))
         greedy = np.asarray(greedy)                     # (S, w+1)
+        # chaos hook: a sabotaged round accepts ZERO draft tokens, so
+        # every continuing slot takes the rewind path. The emitted token
+        # is still g[0] — the target's own greedy next token — so the
+        # output sequence stays bit-identical; only the lookahead is
+        # wasted (exactly the blast radius a real draft failure has).
+        sabotaged = (self.injector is not None
+                     and self.injector.sabotages_round(
+                         self.stats.spec_rounds))
         self.stats.spec_rounds += 1
 
         # -- host-side acceptance, budget and EOS resolution per slot --
@@ -756,7 +1322,7 @@ class DecodeEngine:
             ks = int(self._spec_k[slot])
             g = greedy[slot]
             a = 0
-            while a < ks and drafts[slot, a] == g[a]:
+            while not sabotaged and a < ks and drafts[slot, a] == g[a]:
                 a += 1
             self.stats.spec_drafted += ks
             self.stats.spec_accepted += a
@@ -820,30 +1386,46 @@ class DecodeEngine:
 
     def run(self, policy: str = "continuous") -> List[Completion]:
         """Drive queued requests to completion. Returns completions in
-        uid order. Per outer iteration: one continuation ingest chunk
-        (if any slot is mid-prompt), one slot-masked segment for plain
-        slots, one draft/verify round for speculative slots — chunked
-        prompt ingestion therefore interleaves with decode instead of
-        stalling it."""
+        uid order. Per outer iteration: one lifecycle pass (cancels,
+        deadlines, degradation), one admission pass (preempt + resume +
+        admit), one continuation ingest chunk (if any slot is
+        mid-prompt), one slot-masked segment for plain slots, one
+        draft/verify round for speculative slots — chunked prompt
+        ingestion therefore interleaves with decode instead of stalling
+        it, and every segment/round boundary runs the numeric-fault
+        probe (:meth:`_post_event`)."""
         assert policy in ("continuous", "static"), policy
-        while (self._queue or self._active.any()
+        while (self._queue or self._suspended or self._active.any()
                or self._any_ingesting()):
+            self._lifecycle_pass()
             self._admit_pass(policy)
             if self._any_ingesting():
                 self._ingest_step()
             if not self._active.any():
-                if not self._any_ingesting() and self._queue:
-                    # after an admit pass with no live slot the queue
-                    # head must be in the future: fast-forward the
+                if self._any_ingesting():
+                    continue
+                if self._quarantined.all() and (self._queue
+                                                or self._suspended):
+                    self._fail_all_pending()
+                    continue
+                if self._work_waiting():
+                    # work is waiting but nothing was admitted (chaos-
+                    # dropped wave, or every free slot quarantined):
+                    # stall one segment and try again
+                    self._clock += self.segment_len
+                    continue
+                if self._queue:
+                    # the queue head is in the future: fast-forward the
                     # logical clock to it (whole segments, to stay on
                     # the segment grid)
-                    assert not self._admissible()
                     ahead = self._queue[0].arrival - self._clock
                     skip = max(1, -int(-ahead // self.segment_len))
                     self._clock += skip * self.segment_len
                 continue
             if (self._active & (self._spec_k == 0)).any():
                 self.step_segment()
+                self._post_event()
             if (self._active & (self._spec_k > 0)).any():
                 self.step_spec_round()
+                self._post_event()
         return [self._completions[u] for u in sorted(self._completions)]

@@ -1,0 +1,137 @@
+"""Request lifecycle & fault-tolerance primitives for the decode engine.
+
+The paper's fixed-size O(k²) representation is what makes a serving
+request *portable*: the whole attended context of a generation-in-
+progress is a few KB of per-layer state, so checkpointing, preempting,
+or retrying a request is a snapshot copy — where a softmax KV cache
+would move its entire history. This module holds the host-side
+descriptors that ride on that property:
+
+* :class:`SuspendedRequest` — a request swapped out of its slot
+  mid-generation: the batch-1 state snapshot plus the scalar decode
+  bookkeeping (next input token, position, remaining budget, tokens
+  emitted so far). Re-admission is one ``lm.write_slot_state`` copy;
+  greedy continuation is bit-identical to never having been preempted,
+  because a greedy decode step depends only on (state, tok, pos).
+
+* :class:`Checkpoint` — the same payload taken at a known-good segment
+  boundary, kept per slot so a numeric fault detected later can retry
+  the request from its last finite state instead of failing it.
+
+* :class:`FaultInjector` — deterministic chaos hooks the engine
+  consults at its scheduling boundaries: poison a chosen slot's state
+  with NaNs after a chosen segment/round, drop an admission pass, zero
+  a speculative draft window (forcing verify mismatch + rewind), or
+  stretch the logical clock after a segment (tripping deadlines).
+  Everything is keyed on the engine's deterministic event counters, so
+  a chaos run is exactly reproducible — which is what lets tests assert
+  that *unaffected* requests stay bit-identical under injected faults.
+
+Request lifecycle states (see README "Serving robustness"):
+
+    queued ── admit ──> active ── finish ──────────> completed (ok)
+      │                │  ▲                             ▲
+      │ deadline/shed/ │  └── resume ── suspended <── preempt
+      │ cancel         │                   │
+      ▼                ├── deadline/cancel ┴──> completed (deadline/
+    completed          │                         cancelled)
+    (shed/deadline/    └── NaN detected ──> quarantined slot
+     cancelled)              │ retry from last good checkpoint
+                             ├────────────> suspended (re-queued)
+                             └ retries exhausted ─> completed (failed)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import jax.tree
+
+# Completion.status values — the full lifecycle outcome vocabulary.
+STATUS_OK = "ok"                # ran to EOS / budget
+STATUS_CANCELLED = "cancelled"  # cancel(uid) before completion
+STATUS_DEADLINE = "deadline"    # deadline_s passed (queued or active)
+STATUS_SHED = "shed"            # bounded queue rejected it (overload)
+STATUS_FAILED = "failed"        # numeric fault, retries exhausted
+
+SHED_POLICIES = ("reject_new", "evict_lowest")
+
+
+@dataclasses.dataclass
+class SuspendedRequest:
+    """A request swapped out of its slot mid-generation.
+
+    ``state`` is the batch-1 whole-stack snapshot (``lm.snapshot_state``
+    of the slot — O(k²) per layer for the linear family); the scalars
+    are exactly the per-slot vectors the engine carries, so re-admission
+    restores the decode chain bit-for-bit under greedy sampling.
+    """
+    req: Any                    # the original Request
+    state: Any                  # batch-1 device snapshot
+    tok: int                    # next input token
+    pos: int                    # its position
+    remaining: int              # budget left (incl. the next token)
+    toks: List[int]             # tokens emitted so far
+    admitted_step: int          # original admission clock
+    retries: int = 0            # numeric-fault retries consumed
+
+
+@dataclasses.dataclass
+class Checkpoint:
+    """Last-known-good per-slot restore point (same payload as
+    :class:`SuspendedRequest`, minus the request identity)."""
+    state: Any
+    tok: int
+    pos: int
+    remaining: int
+    toks: List[int]
+
+
+def poison_snapshot(snapshot: Any) -> Any:
+    """NaN-fill every float leaf of a batch-1 state snapshot (non-float
+    leaves pass through). Composed with ``lm.snapshot_state`` /
+    ``lm.restore_state`` this poisons exactly one slot — the fault
+    model of a corrupted in-flight state."""
+    def bad(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jnp.full_like(x, jnp.nan)
+        return x
+    return jax.tree.map(bad, snapshot)
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Deterministic chaos hooks, keyed on engine event counters.
+
+    The engine's *event* counter increments once per decode segment or
+    speculative round (its scheduling quantum); admission passes count
+    separately. All hooks are pure config lookups, so two runs with the
+    same injector see identical faults at identical points.
+
+    ``nan``: (event_idx, slot) pairs — after that event, the slot's
+    state is NaN-poisoned (detected by the next finite check).
+    ``drop_admission``: admission-pass indices to skip entirely (the
+    wave's requests stay queued and are retried next pass).
+    ``spec_mismatch``: speculative-round indices whose draft windows are
+    zeroed before verification (forces rejection + rewind).
+    ``delay``: event_idx → extra logical decode steps added to the
+    clock after that event (trips deadlines without real latency).
+    """
+    nan: Tuple[Tuple[int, int], ...] = ()
+    drop_admission: Tuple[int, ...] = ()
+    spec_mismatch: Tuple[int, ...] = ()
+    delay: Optional[Dict[int, int]] = None
+
+    def nan_slots(self, event_idx: int) -> List[int]:
+        return [s for e, s in self.nan if e == event_idx]
+
+    def drops_admission(self, pass_idx: int) -> bool:
+        return pass_idx in self.drop_admission
+
+    def sabotages_round(self, round_idx: int) -> bool:
+        return round_idx in self.spec_mismatch
+
+    def extra_delay(self, event_idx: int) -> int:
+        return (self.delay or {}).get(event_idx, 0)

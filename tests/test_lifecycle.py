@@ -1,0 +1,489 @@
+"""Request lifecycle & fault-tolerance chaos suite (ISSUE 6).
+
+The acceptance contract:
+
+* preempt-then-resume greedy output is BIT-IDENTICAL to uninterrupted
+  decode (the O(k²) snapshot carries the whole attended context);
+* with faults injected into chosen slots, every UNAFFECTED request
+  completes bit-identical to a fault-free run on linear, gated_linear
+  and softmax backends (row masking freezes a quarantined slot's NaNs);
+* an injected-NaN request recovers via one snapshot-retry, or reports
+  ``status="failed"`` without poisoning any other slot;
+* under overload the bounded queue sheds per policy and degradation
+  transitions are recorded — no unbounded queue growth;
+* ``submit()`` validation is atomic, ``cancel()``/deadlines complete
+  requests with the right status, ``reset()`` + re-``run()`` reuse is
+  exact, and ``EngineStats`` round-trips through JSON.
+
+Everything is deterministic: the FaultInjector keys on the engine's
+event counters, and the logical clock is decode steps — no wall time.
+"""
+
+import copy
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.serving import (
+    DecodeEngine,
+    EngineStats,
+    FaultInjector,
+    NgramDraft,
+)
+
+from test_serving import _make_workload, _standalone
+
+
+def _cfg(backend="linear"):
+    return get_smoke_config("yi-34b").with_backend(backend)
+
+
+def _engine(params, cfg, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("segment_len", 4)
+    kw.setdefault("max_len", 64)
+    return DecodeEngine(params, cfg, **kw)
+
+
+class TestSubmitValidation:
+    """Satellite: a raising submit must leave engine state untouched."""
+
+    def test_rejected_submit_is_atomic(self, key):
+        cfg = _cfg()
+        params = lm.init_params(key, cfg)
+        eng = _engine(params, cfg, max_queue=4)
+        eng.submit(np.array([1, 2, 3], np.int32), 4)
+        before = (len(eng._queue), eng._next_uid,
+                  copy.deepcopy(eng.stats.to_dict()))
+        bad = [
+            dict(prompt=[1, 2], max_new_tokens=0),
+            dict(prompt=[1, 2], max_new_tokens=4, speculate_k=-1),
+            dict(prompt=[1, 2], max_new_tokens=4, speculate_k=3),
+            dict(prompt=[1, 2], max_new_tokens=200),
+            dict(prompt=[1, 2], max_new_tokens=4,
+                 arrival=5.0, deadline_s=5.0),
+        ]
+        for kw in bad:
+            with pytest.raises(ValueError):
+                eng.submit(**kw)
+        after = (len(eng._queue), eng._next_uid, eng.stats.to_dict())
+        assert after == before
+        # the engine still works after the rejections
+        eng.submit(np.array([4, 5], np.int32), 3)
+        comps = eng.run()
+        assert [c.status for c in comps] == ["ok", "ok"]
+
+
+class TestPreemptResume:
+    """Pillar 1: suspend mid-generation, resume bit-identically."""
+
+    @pytest.mark.parametrize("backend",
+                             ["linear", "gated_linear", "softmax"])
+    def test_explicit_preempt_bit_identical(self, key, backend):
+        cfg = _cfg(backend)
+        params = lm.init_params(key, cfg)
+        prompts, _ = _make_workload(cfg, n=1)
+        ref = _standalone(params, cfg, prompts[0], 12, 64)
+        eng = _engine(params, cfg)
+        eng.submit(prompts[0], 12)
+        eng._admit_pass("continuous")
+        eng.step_segment()
+        eng._post_event()
+        susp = eng.preempt(0)
+        assert not eng._active.any() and len(susp.toks) > 0
+        comps = eng.run()
+        np.testing.assert_array_equal(comps[0].tokens, np.asarray(ref))
+        assert eng.stats.preemptions == 1 and eng.stats.resumes == 1
+        assert comps[0].status == "ok"
+
+    def test_priority_preempts_lowest_progress(self, key):
+        """A saturated pool: a high-priority arrival suspends the
+        lowest-(priority, progress) slot, runs, and the victim resumes
+        — every token stream bit-identical to running alone."""
+        cfg = _cfg()
+        params = lm.init_params(key, cfg)
+        prompts, _ = _make_workload(cfg, n=3)
+        jobs = [(prompts[0], 12, 0.0, 0), (prompts[1], 12, 0.0, 0),
+                (prompts[2], 8, 6.0, 5)]
+        refs = [_standalone(params, cfg, p, g, 64) for p, g, *_ in jobs]
+        eng = _engine(params, cfg)
+        for p, g, arr, pri in jobs:
+            eng.submit(p, g, arrival=arr, priority=pri)
+        comps = eng.run()
+        assert eng.stats.preemptions >= 1
+        assert eng.stats.resumes == eng.stats.preemptions
+        for c, ref in zip(comps, refs):
+            np.testing.assert_array_equal(c.tokens, np.asarray(ref))
+        # the high-priority request got a slot before the victim ended
+        hi = comps[2]
+        assert 0 <= hi.admitted_step < comps[0].finished_step
+
+    def test_preempt_resume_speculative_slot(self, key):
+        """A speculative request survives suspension: the draft is
+        released and re-admitted with prompt + emitted context."""
+        import dataclasses
+        cfg = dataclasses.replace(_cfg(), dtype="float32")
+        params = lm.init_params(key, cfg)
+        prompts, _ = _make_workload(cfg, n=2)
+        eng = _engine(params, cfg, draft=NgramDraft())
+        plain = []
+        for p in prompts:
+            eng.reset()
+            eng.submit(p, 10)
+            plain.append(eng.run()[0].tokens)
+        eng.reset()
+        eng.submit(prompts[0], 10, speculate_k=4)
+        eng.submit(prompts[1], 10, speculate_k=4, arrival=4.0,
+                   priority=2)
+        comps = eng.run()
+        for c, ref in zip(comps, plain):
+            np.testing.assert_array_equal(c.tokens, ref)
+
+
+class TestDeadlinesAndCancel:
+    """Pillar 2: deadlines trip everywhere a request can wait or run."""
+
+    def test_queued_deadline_sheds(self, key):
+        cfg = _cfg()
+        params = lm.init_params(key, cfg)
+        eng = _engine(params, cfg, n_slots=1)
+        prompts, _ = _make_workload(cfg, n=3)
+        eng.submit(prompts[0], 30)                    # hogs the slot
+        eng.submit(prompts[1], 8, deadline_s=4.0)     # dies in queue
+        eng.submit(prompts[2], 8)
+        comps = eng.run()
+        assert comps[1].status == "deadline"
+        assert comps[1].admitted_step == -1
+        assert comps[0].status == comps[2].status == "ok"
+        assert eng.stats.deadline_evictions == 1
+
+    def test_active_deadline_keeps_partial_tokens(self, key):
+        cfg = _cfg()
+        params = lm.init_params(key, cfg)
+        eng = _engine(params, cfg)
+        prompts, _ = _make_workload(cfg, n=1)
+        eng.submit(prompts[0], 40, deadline_s=10.0)
+        comps = eng.run()
+        assert comps[0].status == "deadline"
+        assert 0 < len(comps[0].tokens) < 40
+        assert comps[0].finish_reason == "deadline"
+
+    def test_injected_delay_trips_deadline(self, key):
+        """The chaos delay hook stretches the logical clock past a
+        deadline that a fault-free run would comfortably meet."""
+        cfg = _cfg()
+        params = lm.init_params(key, cfg)
+        prompts, _ = _make_workload(cfg, n=1)
+
+        eng = _engine(params, cfg)
+        eng.submit(prompts[0], 12, deadline_s=20.0)
+        assert eng.run()[0].status == "ok"
+
+        eng2 = _engine(params, cfg,
+                       injector=FaultInjector(delay={0: 100}))
+        eng2.submit(prompts[0], 12, deadline_s=20.0)
+        assert eng2.run()[0].status == "deadline"
+
+    def test_cancel_everywhere(self, key):
+        cfg = _cfg()
+        params = lm.init_params(key, cfg)
+        eng = _engine(params, cfg, n_slots=1)
+        prompts, _ = _make_workload(cfg, n=3)
+        u0 = eng.submit(prompts[0], 20)
+        u1 = eng.submit(prompts[1], 8)
+        assert eng.cancel(u1)            # queued: resolves immediately
+        assert eng._completions[u1].status == "cancelled"
+        eng._admit_pass("continuous")
+        eng.step_segment()
+        eng._post_event()
+        assert eng.cancel(u0)            # active: evicted next boundary
+        assert eng.cancel(u0 + 999) is False
+        comps = eng.run()
+        by_uid = {c.uid: c for c in comps}
+        assert by_uid[u0].status == "cancelled"
+        assert len(by_uid[u0].tokens) > 0      # partial output kept
+        assert eng.cancel(u0) is False         # already completed
+        assert eng.stats.cancelled == 2
+
+
+class TestOverloadShed:
+    """Pillar 2: bounded queues shed per policy; degradation flips."""
+
+    def test_reject_new_bounds_queue(self, key):
+        cfg = _cfg()
+        params = lm.init_params(key, cfg)
+        eng = _engine(params, cfg, max_queue=3)
+        prompts, _ = _make_workload(cfg, n=6)
+        uids = [eng.submit(p, 4, arrival=50.0) for p in prompts]
+        assert len(eng._queue) == 3
+        assert eng.stats.shed == 3
+        comps = eng.run()
+        statuses = [c.status for c in comps]
+        assert statuses == ["ok", "ok", "ok", "shed", "shed", "shed"]
+        for c in comps:
+            if c.status == "shed":
+                assert c.admitted_step == -1 and len(c.tokens) == 0
+        assert len(comps) == len(uids)   # every submit resolves
+
+    def test_evict_lowest_prefers_low_priority(self, key):
+        cfg = _cfg()
+        params = lm.init_params(key, cfg)
+        eng = _engine(params, cfg, max_queue=2,
+                      shed_policy="evict_lowest")
+        prompts, _ = _make_workload(cfg, n=4)
+        u_lo = eng.submit(prompts[0], 4, arrival=50.0, priority=0)
+        u_mid = eng.submit(prompts[1], 4, arrival=50.0, priority=1)
+        u_hi = eng.submit(prompts[2], 4, arrival=50.0, priority=3)
+        # the high arrival displaced the newest lowest-priority entry
+        assert eng._completions[u_lo].status == "shed"
+        assert {r.uid for r in eng._queue} == {u_mid, u_hi}
+        # an arrival that outranks nobody sheds itself
+        u_new = eng.submit(prompts[3], 4, arrival=50.0, priority=0)
+        assert eng._completions[u_new].status == "shed"
+        assert eng.stats.shed == 2
+
+    def test_degradation_hysteresis_records_transitions(self, key):
+        cfg = _cfg()
+        params = lm.init_params(key, cfg)
+        eng = _engine(params, cfg, degrade_threshold=1.5)
+        prompts, _ = _make_workload(cfg, n=8)
+        for p in prompts:
+            eng.submit(p, 6)
+        comps = eng.run()
+        st = eng.stats
+        assert st.degrade_transitions == 2           # in, then out
+        assert st.degrade_events[0]["degraded"] is True
+        assert st.degrade_events[1]["degraded"] is False
+        assert all(c.status == "ok" for c in comps)
+
+    def test_degraded_spec_disable_keeps_tokens(self, key):
+        """Degradation turns speculative requests plain — lookahead is
+        shed, tokens are not (speculation is exact)."""
+        import dataclasses
+        cfg = dataclasses.replace(_cfg(), dtype="float32")
+        params = lm.init_params(key, cfg)
+        prompts, _ = _make_workload(cfg, n=6)
+        outs = {}
+        for thresh in (None, 0.5):
+            eng = _engine(params, cfg, draft=NgramDraft(),
+                          degrade_threshold=thresh)
+            for p in prompts:
+                eng.submit(p, 8, speculate_k=4)
+            outs[thresh] = eng.run()
+            if thresh is not None:
+                assert eng.stats.spec_disables > 0
+        for a, b in zip(outs[None], outs[0.5]):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def _busy_workload(cfg):
+    """Like _make_workload but with budgets long enough that every slot
+    is still mid-request at injection event 0 (the first segment
+    boundary) — a NaN landing on a freed slot is harmlessly overwritten
+    by the next admission, which is not what these tests probe."""
+    prompts, _ = _make_workload(cfg)
+    return prompts, [10, 12, 9, 11, 8, 10]
+
+
+class TestQuarantine:
+    """Pillar 3: NaN detection, isolation, snapshot-retry."""
+
+    @pytest.mark.parametrize("backend",
+                             ["linear", "gated_linear", "softmax"])
+    def test_unaffected_slots_bit_identical(self, key, backend):
+        """THE acceptance claim: inject NaN into one slot mid-run; every
+        other request's tokens equal the fault-free run bit-for-bit,
+        and the poisoned request recovers via one snapshot-retry."""
+        cfg = _cfg(backend)
+        params = lm.init_params(key, cfg)
+        prompts, gens = _busy_workload(cfg)
+        eng = _engine(params, cfg)
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g)
+        clean = eng.run()
+
+        eng2 = _engine(params, cfg,
+                       injector=FaultInjector(nan=((0, 0),)),
+                       max_retries=1)
+        for p, g in zip(prompts, gens):
+            eng2.submit(p, g)
+        chaos = eng2.run()
+        st = eng2.stats
+        assert st.quarantined == 1 and st.retries == 1
+        assert st.failed == 0 and st.resumes >= 1
+        for a, b in zip(clean, chaos):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            assert b.status == "ok"
+        retried = [c for c in chaos if c.retries == 1]
+        assert len(retried) == 1
+
+    def test_retries_exhausted_fails_cleanly(self, key):
+        cfg = _cfg()
+        params = lm.init_params(key, cfg)
+        prompts, gens = _busy_workload(cfg)
+        eng = _engine(params, cfg)
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g)
+        clean = eng.run()
+
+        eng2 = _engine(params, cfg,
+                       injector=FaultInjector(nan=((0, 0),)),
+                       max_retries=0)
+        for p, g in zip(prompts, gens):
+            eng2.submit(p, g)
+        chaos = eng2.run()
+        st = eng2.stats
+        assert st.quarantined == 1 and st.failed == 1 and st.retries == 0
+        failed = [c for c in chaos if c.status == "failed"]
+        assert len(failed) == 1
+        assert failed[0].finish_reason == "failed"
+        for a, b in zip(clean, chaos):
+            if b.status == "ok":
+                np.testing.assert_array_equal(a.tokens, b.tokens)
+
+    def test_repeated_fault_exhausts_single_retry(self, key):
+        """Poison the retry too: quarantined twice, failed once — and
+        the engine still finishes everything else."""
+        cfg = _cfg()
+        params = lm.init_params(key, cfg)
+        prompts, gens = _busy_workload(cfg)
+        # slot 0 poisoned at event 0; after the retry resumes into some
+        # free slot, poison events 2-6 cover wherever/whenever it lands
+        inj = FaultInjector(nan=((0, 0),) + tuple(
+            (e, s) for e in range(2, 7) for s in (0, 1)))
+        eng = _engine(params, cfg, injector=inj, max_retries=1)
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g)
+        comps = eng.run()
+        assert eng.stats.failed >= 1
+        assert len(comps) == len(prompts)   # nothing is lost or hung
+
+    def test_quarantined_slot_not_reused(self, key):
+        cfg = _cfg()
+        params = lm.init_params(key, cfg)
+        prompts, gens = _busy_workload(cfg)
+        eng = _engine(params, cfg,
+                      injector=FaultInjector(nan=((0, 0),)),
+                      max_retries=1)
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g)
+        eng.run()
+        assert bool(eng._quarantined[0])
+        assert eng._slot_req[0] is None and not eng._active[0]
+
+    def test_all_slots_poisoned_fails_pending(self, key):
+        """Total loss: every slot quarantined → remaining work reports
+        failed instead of hanging the scheduler."""
+        cfg = _cfg()
+        params = lm.init_params(key, cfg)
+        prompts, gens = _busy_workload(cfg)
+        eng = _engine(params, cfg,
+                      injector=FaultInjector(nan=((0, 0), (0, 1))),
+                      max_retries=0)
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g)
+        comps = eng.run()
+        assert len(comps) == len(prompts)
+        assert eng.stats.failed == len(prompts)
+        assert all(c.status == "failed" for c in comps)
+
+    def test_dropped_admission_wave_retries(self, key):
+        """Chaos: dropping an admission wave delays requests one stall
+        tick but loses nothing and changes no tokens."""
+        cfg = _cfg()
+        params = lm.init_params(key, cfg)
+        prompts, gens = _make_workload(cfg)
+        eng = _engine(params, cfg)
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g)
+        clean = eng.run()
+
+        eng2 = _engine(params, cfg,
+                       injector=FaultInjector(drop_admission=(0,)))
+        for p, g in zip(prompts, gens):
+            eng2.submit(p, g)
+        chaos = eng2.run()
+        for a, b in zip(clean, chaos):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            assert b.status == "ok"
+        assert chaos[0].admitted_step > clean[0].admitted_step
+
+    def test_spec_mismatch_injection_rewinds_not_diverges(self, key):
+        """Chaos: sabotaged verify rounds force full rejection (rewind
+        path) — the greedy output must not move by a single token."""
+        import dataclasses
+        cfg = dataclasses.replace(_cfg(), dtype="float32")
+        params = lm.init_params(key, cfg)
+        prompts, _ = _make_workload(cfg, n=2)
+        outs = {}
+        for inj in (None, FaultInjector(spec_mismatch=(0, 1, 2))):
+            eng = _engine(params, cfg, draft=NgramDraft(), injector=inj)
+            for p in prompts:
+                eng.submit(p, 10, speculate_k=4)
+            outs[inj is None] = (eng.run(), eng.stats.spec_rewind_rounds)
+        clean, chaos = outs[True][0], outs[False][0]
+        for a, b in zip(clean, chaos):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert outs[False][1] >= outs[True][1]
+
+
+class TestResetAndStats:
+    """Satellites: reset()+re-run() reuse, EngineStats JSON export."""
+
+    def test_reset_rerun_identical(self, key):
+        cfg = _cfg()
+        params = lm.init_params(key, cfg)
+        prompts, gens = _make_workload(cfg)
+        eng = _engine(params, cfg)
+        runs = []
+        for _ in range(2):
+            eng.reset()
+            assert eng.stats == EngineStats(n_slots=eng.n_slots,
+                                            segment_len=eng.segment_len)
+            for p, g in zip(prompts, gens):
+                eng.submit(p, g)
+            runs.append(eng.run())
+        for a, b in zip(*runs):
+            assert a.uid == b.uid
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            assert a.admitted_step == b.admitted_step
+            assert a.finished_step == b.finished_step
+
+    def test_reset_clears_lifecycle_state(self, key):
+        cfg = _cfg()
+        params = lm.init_params(key, cfg)
+        prompts, gens = _busy_workload(cfg)
+        eng = _engine(params, cfg,
+                      injector=FaultInjector(nan=((0, 0),)),
+                      max_retries=1)
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g)
+        eng.run()
+        assert eng._quarantined.any()
+        eng.injector = None
+        eng.reset()
+        assert not eng._quarantined.any()
+        assert not eng._suspended and not eng._ckpt
+        assert eng.stats.quarantined == 0
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g)
+        assert all(c.status == "ok" for c in eng.run())
+
+    def test_stats_json_roundtrip(self, key):
+        cfg = _cfg()
+        params = lm.init_params(key, cfg)
+        prompts, gens = _make_workload(cfg, n=3)
+        eng = _engine(params, cfg, max_queue=1)
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g, arrival=50.0)
+        eng.run()
+        d = json.loads(eng.stats.to_json())
+        for field in ("segments", "shed", "quarantined", "preemptions",
+                      "retries", "failed", "degrade_events",
+                      "slot_utilization", "mean_admission_batch"):
+            assert field in d
+        assert d["shed"] == eng.stats.shed == 2
+        assert isinstance(d["slot_utilization"], float)

@@ -547,12 +547,15 @@ class TestBatchedAdmission:
             if x.admitted_step == y.admitted_step:
                 assert x.uid < y.uid
 
-    def test_length_one_prompt_bit_identical(self, key):
+    @pytest.mark.parametrize("backend",
+                             ["linear", "gated_linear", "softmax"])
+    def test_length_one_prompt_bit_identical(self, key, backend):
         """A 1-token prompt mixed into a wider wave is carved out to
         the exact-shape batch-1 prefill (the lm.prefill_varlen gemv
         caveat), so batched admission stays bit-identical to
-        per-request even in bf16."""
-        cfg = get_smoke_config("yi-34b").with_backend("linear")
+        per-request even in bf16 — on every backend (the softmax KV
+        writes and the gated decay path mask the same way)."""
+        cfg = get_smoke_config("yi-34b").with_backend(backend)
         params = lm.init_params(key, cfg)
         rng = np.random.default_rng(5)
         prompts = [rng.integers(0, cfg.vocab_size, size=pl,
