@@ -25,6 +25,17 @@ tokens/s with bit-identical greedy outputs on linear, gated_linear and
 softmax, plus deterministic dispatch-count / jit-miss / interleave
 claims for CI.
 
+Part 3 — heterogeneous fleet (PR 7): the :class:`DecodeBackend` seam
+makes the engine a pure scheduler, so ONE admission queue can serve
+slot groups holding *different architecture families* — linear
+(fixed-state attention), softmax (growing KV cache) and mamba2 (SSD
+state) side by side, each group with its own compiled segment
+programs. Claims are deterministic: greedy outputs bit-identical to
+three homogeneous engines fed the same per-group submissions, exactly
+one compiled decode-segment program per backend (== the number of
+distinct backends in the fleet), and the fleet genuinely mixes state
+layouts (fixed-size and growing in the same queue).
+
 Results land in ``BENCH_serving.json`` at the repo root so the serving
 trajectory is tracked across PRs (CPU smoke config: RATIOS are the
 validated claims, not absolute tokens/s).
@@ -291,6 +302,117 @@ def run_admission() -> Dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Part 3 — heterogeneous backend fleet: one queue, three families
+# ---------------------------------------------------------------------------
+
+FLEET_BACKENDS = ("linear", "softmax", "mamba2")
+FLEET_N_REQUESTS = 12
+FLEET_N_SLOTS = 2               # per group
+FLEET_GEN_LEN = 24
+
+
+def run_fleet() -> Dict:
+    """Mixed-fleet serving: the straggler mix round-robined across
+    three backend slot groups behind one admission queue. Wall-clock
+    per-group tokens/s is reported for the trajectory; the VALIDATED
+    claims are the deterministic ones (bit-identity vs homogeneous
+    runs, one compiled segment program per backend)."""
+    from repro.serving import FleetEngine, fleet_demo_config
+
+    key = jax.random.PRNGKey(0)
+    groups = {}
+    for i, name in enumerate(FLEET_BACKENDS):
+        cfg = fleet_demo_config(name)
+        groups[name] = (lm.init_params(jax.random.fold_in(key, i), cfg),
+                        cfg)
+    vocab = min(cfg.vocab_size for _, cfg in groups.values())
+    rng = np.random.default_rng(2)
+    workload = make_request_mix(rng, FLEET_N_REQUESTS, PROMPT_LEN,
+                                FLEET_GEN_LEN, vocab, arrival_rate=0.0)
+    route = [FLEET_BACKENDS[i % len(FLEET_BACKENDS)]
+             for i in range(FLEET_N_REQUESTS)]
+    max_len = PROMPT_LEN + FLEET_GEN_LEN + SEGMENT_LEN
+
+    fleet = FleetEngine(groups, n_slots=FLEET_N_SLOTS,
+                        segment_len=SEGMENT_LEN, max_len=max_len)
+
+    def run_once():
+        fleet.reset()
+        for (prompt, g, _), name in zip(workload, route):
+            fleet.submit(prompt, g, backend=name)
+        t0 = time.perf_counter()
+        comps = fleet.run("continuous")
+        return comps, time.perf_counter() - t0
+
+    comps, _ = run_once()                           # compile
+    best = float("inf")
+    deterministic = True
+    for _ in range(REPEATS):
+        comps2, dt = run_once()
+        best = min(best, dt)
+        deterministic &= all(
+            np.array_equal(a.tokens, b.tokens)
+            for a, b in zip(comps, comps2))
+
+    # bit-identity vs three homogeneous engines, same per-group feeds
+    identical = deterministic
+    for name in FLEET_BACKENDS:
+        params, cfg = groups[name]
+        eng = DecodeEngine(params, cfg, RULES, n_slots=FLEET_N_SLOTS,
+                           segment_len=SEGMENT_LEN, max_len=max_len)
+        for (prompt, g, _), rname in zip(workload, route):
+            if rname == name:
+                eng.submit(prompt, g)
+        solo = eng.run("continuous")
+        mine = [c for c, rname in zip(comps, route) if rname == name]
+        for a, b in zip(mine, solo):
+            if not np.array_equal(a.tokens, b.tokens):
+                identical = False
+
+    programs = fleet.compiled_segment_programs()
+    stats = fleet.stats()
+    rows = []
+    for name in FLEET_BACKENDS:
+        g = stats["groups"][name]
+        toks = sum(len(c.tokens)
+                   for c, rname in zip(comps, route) if rname == name)
+        rows.append({
+            "group": name,
+            "backend": g["backend"],
+            "fixed_size_state": g["fixed_size_state"],
+            "state_bytes_per_slot": g["state_bytes_per_slot"],
+            "tokens": toks,
+            "tokens_per_s": toks / best,
+            "compiled_segment_programs": g["compiled_segment_programs"],
+            "slot_utilization": g["stats"]["slot_utilization"],
+        })
+    total = sum(r["tokens"] for r in rows)
+    claims = {
+        "fleet_outputs_bit_identical": identical,
+        # exactly one decode-segment program per backend: the compiled-
+        # program count equals the number of distinct backends served
+        "fleet_one_program_per_backend": (
+            len(programs) == len(set(FLEET_BACKENDS))
+            and all(v == 1 for v in programs.values())),
+        # the queue genuinely mixes state layouts: fixed-size O(k²)
+        # families and the growing KV cache served side by side
+        "fleet_mixes_state_layouts": (
+            any(r["fixed_size_state"] for r in rows)
+            and any(not r["fixed_size_state"] for r in rows)),
+    }
+    return {
+        "backends": list(FLEET_BACKENDS),
+        "n_slots_per_group": FLEET_N_SLOTS,
+        "segment_len": SEGMENT_LEN,
+        "workload": {"n_requests": FLEET_N_REQUESTS,
+                     "prompt_len": PROMPT_LEN,
+                     "gen_len": FLEET_GEN_LEN},
+        "aggregate_tokens_per_s": total / best,
+        "rows": rows, "claims": claims,
+    }
+
+
 def main() -> List[str]:
     rows = run()
     out = ["continuous_batching,backend,static_tok_s,continuous_tok_s,"
@@ -344,6 +466,19 @@ def main() -> List[str]:
     for name, ok in adm["claims"].items():
         out.append(f"admission_claim,{name},{'PASS' if ok else 'FAIL'}")
 
+    flt = run_fleet()
+    out.append("fleet,group,backend,fixed_state,state_bytes_per_slot,"
+               "tokens,tok_s,segment_programs,slot_util")
+    for r in flt["rows"]:
+        out.append(
+            f"fleet,{r['group']},{r['backend']},"
+            f"{r['fixed_size_state']},{r['state_bytes_per_slot']},"
+            f"{r['tokens']},{r['tokens_per_s']:.0f},"
+            f"{r['compiled_segment_programs']},"
+            f"{r['slot_utilization']:.2f}")
+    for name, ok in flt["claims"].items():
+        out.append(f"fleet_claim,{name},{'PASS' if ok else 'FAIL'}")
+
     with open(BENCH_PATH, "w") as f:
         json.dump({"n_slots": N_SLOTS, "segment_len": SEGMENT_LEN,
                    "workload": {"n_requests": N_REQUESTS,
@@ -351,7 +486,7 @@ def main() -> List[str]:
                                 "gen_long": GEN_LONG,
                                 "gen_short": GEN_SHORT},
                    "rows": rows, "claims": claims,
-                   "admission": adm}, f, indent=2)
+                   "admission": adm, "fleet": flt}, f, indent=2)
     return out
 
 

@@ -116,7 +116,12 @@ def run(contexts=(256, 1024, 4096)) -> List[Dict]:
         cfg = dataclasses.replace(cfg_seed, dtype="float32",
                                   decode_kernel="auto")
         cfg_loop = dataclasses.replace(cfg, decode_kernel="reference")
-        cfg_forced = dataclasses.replace(cfg, decode_kernel="fused")
+        # forcing the Pallas kernels only means something for the linear
+        # family; softmax has no fused decode kernel (config validation
+        # now rejects the combination), so its "forced" driver is the
+        # auto path it always effectively ran
+        cfg_forced = dataclasses.replace(
+            cfg, decode_kernel="fused" if backend != "softmax" else "auto")
         params = lm.init_params(key, cfg)
 
         @jax.jit

@@ -19,6 +19,9 @@ from typing import Callable, Dict, Optional, Tuple
 #   "cross"       cross-attention (to modality memory) + MLP
 #   "mamba"       Mamba-2 SSD block (paper's eq. 4 with scalar decay)
 #   "rwkv"        RWKV-6 block (paper's eq. 4 with vector decay + bonus)
+VALID_KINDS = ("attn", "shared_attn", "cross", "mamba", "rwkv")
+VALID_ATTENTION_BACKENDS = ("softmax", "linear", "gated_linear")
+VALID_DECODE_KERNELS = ("auto", "fused", "reference")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +91,42 @@ class ModelConfig:
     dtype: str = "bfloat16"          # activation/compute dtype
     param_dtype: str = "float32"
     remat: str = "unit"              # none|unit (checkpoint each scan unit)
+
+    def __post_init__(self):
+        """Config-time validation: reject unknown layer kinds and
+        backend/kernel combinations with a clear message here instead
+        of failing deep inside a segment compile."""
+        kinds = tuple(self.layer_pattern) + tuple(self.tail)
+        unknown = sorted({k for k in kinds if k not in VALID_KINDS})
+        if unknown:
+            raise ValueError(
+                f"{self.name}: unknown layer_pattern/tail kind(s) "
+                f"{unknown}; valid kinds are {list(VALID_KINDS)}")
+        if self.attention_backend not in VALID_ATTENTION_BACKENDS:
+            raise ValueError(
+                f"{self.name}: unknown attention_backend "
+                f"{self.attention_backend!r}; valid backends are "
+                f"{list(VALID_ATTENTION_BACKENDS)}")
+        if self.decode_kernel not in VALID_DECODE_KERNELS:
+            raise ValueError(
+                f"{self.name}: unknown decode_kernel "
+                f"{self.decode_kernel!r}; valid kernels are "
+                f"{list(VALID_DECODE_KERNELS)}")
+        if self.decode_kernel == "fused":
+            # the fused recurrent Pallas kernels cover linear-family
+            # attention layers only; forcing them on a pattern that has
+            # none would fail at jit time with a shape error
+            has_linear_attn = (
+                any(k in ("attn", "shared_attn") for k in kinds)
+                and self.attention_backend in ("linear", "gated_linear"))
+            if not has_linear_attn:
+                raise ValueError(
+                    f"{self.name}: decode_kernel='fused' has no fused "
+                    f"kernel for this config (attention_backend="
+                    f"{self.attention_backend!r}, pattern kinds "
+                    f"{sorted(set(kinds))}); the fused recurrent decode "
+                    f"kernels cover linear/gated_linear attention layers "
+                    f"— use decode_kernel='auto' or 'reference'")
 
     def with_backend(self, backend: str) -> "ModelConfig":
         return dataclasses.replace(self, attention_backend=backend)

@@ -30,7 +30,11 @@ Three modes:
   (``--admission per_request`` selects the PR-2 host-blocking
   prefill-on-admit baseline). Reports aggregate tokens/s, slot
   utilization and admission stats (batch sizes, jit misses,
-  chunk-interleave ratio).
+  chunk-interleave ratio). ``--backends linear,softmax,mamba2``
+  serves a HETEROGENEOUS FLEET instead: one slot group per backend
+  family behind a single admission queue
+  (:class:`repro.serving.FleetEngine`), requests round-robined across
+  groups, one compiled segment program per backend.
 
 * ``spec`` — speculative lookahead decoding through the slot engine: a
   draft provider proposes K tokens per round and ONE ``lm.decode_window``
@@ -50,6 +54,8 @@ Three modes:
       --backend linear --prompt-len 64 --gen-len 32 --batch 4
   PYTHONPATH=src python -m repro.launch.serve --mode stream --smoke \
       --backend linear --slots 4 --n-requests 16 --arrival-rate 0.5
+  PYTHONPATH=src python -m repro.launch.serve --mode stream \
+      --backends linear,softmax,mamba2 --slots 2 --n-requests 9
   PYTHONPATH=src python -m repro.launch.serve --mode spec --smoke \
       --backend linear --slots 4 --n-requests 8 --speculate-k 6
 """
@@ -143,9 +149,69 @@ def make_request_mix(rng: np.random.Generator, n_requests: int,
     return out
 
 
+def stream_fleet(args) -> int:
+    """Heterogeneous fleet streaming: the Poisson workload round-robins
+    across N backend slot groups behind ONE admission queue
+    (``--backends linear,softmax,mamba2``; smoke-scale fleet demo
+    configs — they share the vocab, so one request mix feeds every
+    architecture family at once)."""
+    from repro.serving import FleetEngine, fleet_demo_config
+
+    names = [b.strip() for b in args.backends.split(",") if b.strip()]
+    root = jax.random.PRNGKey(args.seed)
+    groups = {}
+    for i, name in enumerate(names):
+        cfg = fleet_demo_config(name)
+        groups[name] = (lm.init_params(jax.random.fold_in(root, i), cfg),
+                        cfg)
+    max_len = args.prompt_len + args.gen_len + args.segment_len
+    fleet = FleetEngine(
+        groups, n_slots=args.slots, segment_len=args.segment_len,
+        max_len=max_len, temperature=args.temperature, seed=args.seed,
+        max_queue=getattr(args, "max_queue", None),
+        shed_policy=getattr(args, "shed_policy", "reject_new"))
+    vocab = min(cfg.vocab_size for _, cfg in groups.values())
+    rng = np.random.default_rng(args.seed)
+    requests = make_request_mix(rng, args.n_requests, args.prompt_len,
+                                args.gen_len, vocab, args.arrival_rate)
+    routed = {}
+    for i, (prompt, g, arrival) in enumerate(requests):
+        uid = fleet.submit(prompt, g, backend=names[i % len(names)],
+                           arrival=arrival)
+        routed[uid] = names[i % len(names)]
+
+    t0 = time.perf_counter()
+    completions = fleet.run("continuous")
+    dt = time.perf_counter() - t0
+
+    total = sum(len(c.tokens) for c in completions)
+    print(f"fleet backends={','.join(names)} slots={args.slots}/group "
+          f"segment={args.segment_len}")
+    print(f"stream: {len(completions)} requests, {total} tokens in "
+          f"{dt:.2f} s ({total/dt:.0f} tok/s incl. compile)")
+    stats = fleet.stats()
+    for name in names:
+        g = stats["groups"][name]
+        toks = sum(len(c.tokens) for c in completions
+                   if routed.get(c.uid) == name)
+        print(f"  {name}: {toks} toks, backend={g['backend']} "
+              f"fixed_state={g['fixed_size_state']} "
+              f"state/slot={g['state_bytes_per_slot']/1024:.1f} KiB, "
+              f"{g['compiled_segment_programs']} segment program(s), "
+              f"slot util {g['stats']['slot_utilization']:.2f}")
+    programs = fleet.compiled_segment_programs()
+    print(f"compiled segment programs: {programs} "
+          f"(one per backend: {all(v == 1 for v in programs.values())})")
+    assert len(completions) == args.n_requests
+    return 0
+
+
 def stream(args) -> int:
     """Continuous batching under a synthetic Poisson request stream."""
     from repro.serving import DecodeEngine
+
+    if getattr(args, "backends", None):
+        return stream_fleet(args)
 
     cfg = (get_smoke_config(args.arch) if args.smoke
            else get_config(args.arch))
@@ -331,6 +397,12 @@ def main() -> int:
     ap.add_argument("--n-requests", type=int, default=16)
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="requests per decode step (0 = all at t=0)")
+    ap.add_argument("--backends", default=None, metavar="A,B,...",
+                    help="serve a heterogeneous fleet (stream mode): "
+                         "comma-separated backend groups, e.g. "
+                         "linear,softmax,mamba2 — one slot group per "
+                         "backend behind a single admission queue "
+                         "(smoke-scale fleet demo configs)")
     ap.add_argument("--admission", default="auto",
                     choices=["auto", "batched", "per_request"],
                     help="prompt ingestion: bucket-padded batched varlen"

@@ -1,11 +1,26 @@
 """Continuous-batching serving engine (the paper's §2.2 "extreme query
 loads" scenario as a slot-scheduled decode system)."""
 
+from repro.serving.backends import (  # noqa: F401
+    DecodeBackend,
+    FixedStateBackend,
+    Mamba2Backend,
+    RWKV6Backend,
+    SoftmaxKVBackend,
+    backend_for_config,
+    get_backend_cls,
+    list_backends,
+    register_backend,
+)
 from repro.serving.engine import (  # noqa: F401
     Completion,
     DecodeEngine,
     EngineStats,
     Request,
+)
+from repro.serving.fleet import (  # noqa: F401
+    FleetEngine,
+    fleet_demo_config,
 )
 from repro.serving.lifecycle import (  # noqa: F401
     SHED_POLICIES,

@@ -1,0 +1,22 @@
+"""DecodeBackend registry — the seam between engine scheduling and
+backend state layout (README "Architecture").
+
+Importing this package registers the concrete backends; dispatch goes
+through :func:`backend_for_config` (priority-ordered ``handles``
+checks), never through family strings in the scheduler.
+"""
+
+from repro.serving.backends.base import (  # noqa: F401
+    DecodeBackend,
+    backend_for_config,
+    get_backend_cls,
+    list_backends,
+    register_backend,
+)
+
+# concrete backends (import = register; dispatch order is by class
+# priority, not import order)
+from repro.serving.backends.fixed_state import FixedStateBackend  # noqa: F401
+from repro.serving.backends.mamba2 import Mamba2Backend  # noqa: F401
+from repro.serving.backends.rwkv6 import RWKV6Backend  # noqa: F401
+from repro.serving.backends.softmax_kv import SoftmaxKVBackend  # noqa: F401

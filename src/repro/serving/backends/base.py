@@ -1,0 +1,239 @@
+"""The DecodeBackend seam: engine scheduling vs. backend state layout.
+
+The paper's claim is architectural: removing the softmax turns the
+sequence representation into a FIXED-SIZE O(k²) state, so a serving
+engine can treat any recurrent family — the paper's linear attention,
+its §4 gated generalisation, Mamba-2's SSD state, RWKV-6's wkv matrix —
+as "a state blob plus a step function". Softmax attention is the one
+backend whose state grows with context. A :class:`DecodeBackend`
+captures everything the scheduler needs from a family:
+
+* **state ops** — ``init_slots``, ``prefill`` / ``prefill_varlen``,
+  ``decode_window`` / ``decode_window_varlen`` / ``ingest_window_varlen``,
+  ``generate_segment``, ``snapshot_state`` / ``restore_state`` /
+  ``write_slot_state``, ``where_state``, ``slot_state_finite``,
+  ``pad_decode_state`` — the full surface ``serving/engine.py`` and
+  ``serving/speculative.py`` used to reach into ``models/lm.py`` for.
+* **capability flags** — ``fixed_size_state`` (O(1)-in-context state:
+  admission/preempt/snapshot move O(k²) bytes, never a KV history),
+  ``supports_varlen_prefill`` (bucket-padded batched admission),
+  ``supports_spec`` (draft/verify windows + snapshot rewind), and
+  ``state_bytes_per_slot(max_len)`` (the admission-copy cost, via
+  ``jax.eval_shape`` — no allocation).
+
+The engine is thereby a backend-agnostic scheduler: it never inspects
+``cfg.attention_backend`` or the layer pattern, it asks the backend.
+``resolve_modes`` is the ONE place the admission/ingest ``"auto"``
+fallbacks live (previously duplicated string checks in the engine), and
+unsupported-mode errors name the backend and the missing capability.
+
+Registering a new family (see README "Architecture")::
+
+    @register_backend
+    class MyBackend(DecodeBackend):
+        name = "my_family"
+        @classmethod
+        def handles(cls, cfg):  # claim configs in backend_for_config
+            return ...
+
+``backend_for_config`` walks the registry in registration-priority
+order; the first backend whose ``handles(cfg)`` returns True wins.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple, Type
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.sharding import Rules
+
+ATTN_KINDS = ("attn", "shared_attn", "cross")
+
+
+def _pattern_kinds(cfg: ModelConfig) -> frozenset:
+    pattern, _, tail = cfg.pattern_and_repeats
+    return frozenset(pattern) | frozenset(tail)
+
+
+class DecodeBackend:
+    """Base backend: delegates every state op to the unified LM decode
+    surface (``models/lm.py``), which dispatches per-layer by block
+    kind. Subclasses pin the family identity (``name``), claim configs
+    (``handles``), validate family-specific invariants (``_validate``)
+    and override capability flags where the family differs.
+
+    Capabilities are INSTANCE attributes — a backend serving a hybrid
+    pattern (e.g. linear attention interleaved with mamba blocks) keeps
+    its fixed-size state but loses varlen prefill, which only the
+    attention math supports (causal masking makes padded rows exact).
+    """
+
+    name: str = "base"
+    # dispatch priority for backend_for_config (lower = checked first);
+    # pure-family backends outrank the generic fixed-state fallback
+    priority: int = 50
+
+    def __init__(self, cfg: ModelConfig, rules: Optional[Rules] = None):
+        self.cfg = cfg
+        self.rules = rules if rules is not None else Rules.null()
+        # capability flags (instance-level: they depend on the config)
+        self.fixed_size_state = cfg.fixed_state_decode
+        self.supports_varlen_prefill = lm.supports_varlen_prefill(cfg)
+        self.supports_spec = True
+        self._validate(cfg)
+
+    # -- registry hooks ------------------------------------------------
+
+    @classmethod
+    def handles(cls, cfg: ModelConfig) -> bool:
+        """Does this backend claim ``cfg``? (registry dispatch)"""
+        raise NotImplementedError
+
+    def _validate(self, cfg: ModelConfig) -> None:
+        """Family-specific config invariants (raise early, not at jit)."""
+
+    # -- mode resolution (the engine's single capability decision) -----
+
+    def resolve_modes(self, admission: str, ingest: str) -> Tuple[str, str]:
+        """Resolve the engine's ``admission``/``ingest`` knobs against
+        this backend's capabilities — the one place the ``"auto"``
+        fallbacks live. Errors name the backend and missing capability."""
+        assert admission in ("auto", "batched", "per_request"), admission
+        if admission == "auto":
+            admission = ("batched" if self.supports_varlen_prefill
+                         else "per_request")
+        assert not (admission == "batched"
+                    and not self.supports_varlen_prefill), (
+            f"admission='batched' unsupported by backend {self.name!r}: "
+            f"missing capability supports_varlen_prefill (varlen "
+            f"prefill masking needs an attention-only layer pattern; "
+            f"got {sorted(_pattern_kinds(self.cfg))})")
+        assert ingest in ("auto", "parallel", "recurrent"), ingest
+        if ingest == "auto":
+            # the decode_kernel="auto" idiom: the chunk-parallel
+            # continuation is MXU-shaped and wins on TPU; at smoke scale
+            # on CPU the masked recurrent scan is cheaper per chunk
+            ingest = ("parallel" if jax.default_backend() == "tpu"
+                      else "recurrent")
+        return admission, ingest
+
+    # -- sizing --------------------------------------------------------
+
+    def state_bytes_per_slot(self, max_len: int) -> int:
+        """Bytes one slot's decode state occupies at ``max_len`` — the
+        admission/preempt/snapshot copy cost. Computed via
+        ``jax.eval_shape`` (shape-only; nothing is allocated). Constant
+        in ``max_len`` iff ``fixed_size_state``."""
+        shapes = jax.eval_shape(
+            lambda: lm.init_decode_state(self.cfg, batch=1,
+                                         max_len=max_len,
+                                         rules=self.rules))
+        return sum(int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+                   for leaf in jax.tree.leaves(shapes))
+
+    # -- state ops (the engine/speculative call surface) ---------------
+
+    def init_slots(self, batch: int, max_len: int) -> Any:
+        return lm.init_decode_state(self.cfg, batch=batch,
+                                    max_len=max_len, rules=self.rules)
+
+    def prefill(self, params, tokens, *, memory=None):
+        return lm.prefill(params, tokens, self.cfg, self.rules,
+                          memory=memory)
+
+    def prefill_varlen(self, params, tokens, lens):
+        return lm.prefill_varlen(params, tokens, lens, self.cfg,
+                                 self.rules)
+
+    def decode_step(self, params, state, token, pos, *, active=None):
+        return lm.decode_step(params, state, token, pos, self.cfg,
+                              self.rules, active=active)
+
+    def decode_window(self, params, state, tokens, pos0):
+        return lm.decode_window(params, state, tokens, pos0, self.cfg,
+                                self.rules)
+
+    def decode_window_varlen(self, params, state, tokens, pos0, lens, *,
+                             active=None):
+        return lm.decode_window_varlen(params, state, tokens, pos0,
+                                       lens, self.cfg, self.rules,
+                                       active=active)
+
+    def ingest_window_varlen(self, params, state, tokens, pos0, lens):
+        return lm.ingest_window_varlen(params, state, tokens, pos0,
+                                       lens, self.cfg, self.rules)
+
+    def generate_segment(self, params, state, tok, pos, active,
+                         remaining, n_steps, *, eos_id=None,
+                         temperature=0.0, key=None, pad_id=-1):
+        return lm.generate_segment(
+            params, state, tok, pos, active, remaining, n_steps,
+            self.cfg, self.rules, eos_id=eos_id, temperature=temperature,
+            key=key, pad_id=pad_id)
+
+    def sample_token(self, logits, temperature, key=None):
+        return lm.sample_token(logits, temperature, key)
+
+    def pad_decode_state(self, state, *, max_len: int):
+        return lm.pad_decode_state(state, self.cfg, max_len=max_len)
+
+    def snapshot_state(self, state, slot):
+        return lm.snapshot_state(state, slot)
+
+    def restore_state(self, engine_state, snapshot, slot):
+        return lm.restore_state(engine_state, snapshot, slot)
+
+    def write_slot_state(self, engine_state, snapshot, slot):
+        return lm.write_slot_state(engine_state, snapshot, slot)
+
+    def where_state(self, active, new, old):
+        return lm.where_state(active, new, old)
+
+    def slot_state_finite(self, state):
+        return lm.slot_state_finite(state)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_BACKENDS: Dict[str, Type[DecodeBackend]] = {}
+
+
+def register_backend(cls: Type[DecodeBackend]) -> Type[DecodeBackend]:
+    """Class decorator: add a backend to the registry. Dispatch walks
+    backends by ``priority`` (then name), first ``handles(cfg)`` match
+    wins — import order never changes who claims a config."""
+    assert cls.name not in _BACKENDS, f"duplicate backend {cls.name!r}"
+    _BACKENDS[cls.name] = cls
+    return cls
+
+
+def list_backends() -> List[str]:
+    return list(_BACKENDS)
+
+
+def get_backend_cls(name: str) -> Type[DecodeBackend]:
+    if name not in _BACKENDS:
+        raise KeyError(
+            f"unknown backend {name!r}; registered: {list(_BACKENDS)}")
+    return _BACKENDS[name]
+
+
+def backend_for_config(cfg: ModelConfig,
+                       rules: Optional[Rules] = None) -> DecodeBackend:
+    """Dispatch a config to the first registered backend claiming it —
+    the ONE place serving maps architecture family → backend."""
+    for cls in sorted(_BACKENDS.values(),
+                      key=lambda c: (c.priority, c.name)):
+        if cls.handles(cfg):
+            return cls(cfg, rules)
+    raise ValueError(
+        f"no registered backend handles config {cfg.name!r} "
+        f"(pattern kinds {sorted(_pattern_kinds(cfg))}, "
+        f"attention_backend={cfg.attention_backend!r}); "
+        f"registered: {list(_BACKENDS)}")

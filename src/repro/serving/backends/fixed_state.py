@@ -1,0 +1,49 @@
+"""FixedStateBackend — the paper's linear / gated-linear families.
+
+The representation is the paper's point: per attention layer the whole
+attended context is an O(k²) ``(S, H, Dk, Dv)`` state (plus the k-sized
+normalizer), CONSTANT in context length. Decode runs through the fused
+Pallas recurrent kernels (``kernels/fused_recurrent/``, VMEM-resident
+state, in-place HBM aliasing) when ``decode_kernel`` resolves to them;
+admission, preemption and speculative rewind are all O(k²)-per-layer
+copies regardless of how long the request's history is.
+
+This backend also claims hybrid patterns (linear attention interleaved
+with mamba/rwkv blocks): every constituent state is fixed-size, so the
+fleet-relevant properties hold — only ``supports_varlen_prefill``
+drops, since the masked bucket-padding trick is attention math.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.serving.backends.base import (
+    ATTN_KINDS,
+    DecodeBackend,
+    _pattern_kinds,
+    register_backend,
+)
+
+LINEAR_FAMILY = ("linear", "gated_linear")
+
+
+@register_backend
+class FixedStateBackend(DecodeBackend):
+    """Linear / gated-linear attention (fixed-size O(k²) state), plus
+    any hybrid whose every block keeps a fixed-size state."""
+
+    name = "fixed_state"
+    priority = 90          # generic fallback: pure-family backends first
+
+    @classmethod
+    def handles(cls, cfg: ModelConfig) -> bool:
+        # claims anything with a fixed-size decode state that the
+        # dedicated pure-family backends (registered earlier) passed on
+        return cfg.fixed_state_decode
+
+    def _validate(self, cfg: ModelConfig) -> None:
+        assert cfg.fixed_state_decode, (
+            f"backend {self.name!r} requires a fixed-size decode state; "
+            f"config {cfg.name!r} has attention_backend="
+            f"{cfg.attention_backend!r} with attention layers "
+            f"({sorted(_pattern_kinds(cfg) & set(ATTN_KINDS))})")

@@ -1,0 +1,42 @@
+"""Mamba2Backend — pure Mamba-2 (SSD) stacks as a serving backend.
+
+Mamba-2's decode state is the paper's fixed-size property in SSM form:
+per layer a ``(S, conv_kernel, d_inner)`` conv window plus a
+``(S, heads, head_dim, d_state)`` SSD state — O(1) in context length,
+so admission/preempt/snapshot are constant-size copies exactly like the
+linear family. Decode windows run through the per-step scan fallback in
+``models/blocks.py`` (per-row ``active`` masks freeze inactive slots
+bit-for-bit — the PR-4 plumbing that made recurrent families
+slot-maskable). Varlen *prefill* is the one missing capability: the
+bucket-padding trick relies on attention's causal masking, so admission
+falls back to ``per_request`` via :meth:`DecodeBackend.resolve_modes`.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.serving.backends.base import (
+    DecodeBackend,
+    _pattern_kinds,
+    register_backend,
+)
+
+
+@register_backend
+class Mamba2Backend(DecodeBackend):
+    """Pure Mamba-2 layer stacks (fixed-size conv + SSD state)."""
+
+    name = "mamba2"
+    priority = 10
+
+    @classmethod
+    def handles(cls, cfg: ModelConfig) -> bool:
+        return _pattern_kinds(cfg) == frozenset({"mamba"})
+
+    def _validate(self, cfg: ModelConfig) -> None:
+        assert _pattern_kinds(cfg) == frozenset({"mamba"}), (
+            f"backend {self.name!r} serves pure mamba patterns; config "
+            f"{cfg.name!r} has kinds {sorted(_pattern_kinds(cfg))}")
+        assert cfg.ssm is not None, (
+            f"backend {self.name!r}: config {cfg.name!r} has mamba "
+            f"layers but no SSMConfig (cfg.ssm)")

@@ -1,0 +1,40 @@
+"""RWKV6Backend — pure RWKV-6 stacks as a serving backend.
+
+RWKV-6 is the paper's eq. 4 with vector decay and a bonus term: per
+layer the decode state is two ``(S, d_model)`` token-shift rows plus a
+``(S, heads, head_dim, head_dim)`` wkv matrix — fixed-size, O(1) in
+context, so the whole portability story (O(k²) admission, preempt,
+snapshot-retry) applies unchanged. Like Mamba-2, decode windows run
+through the masked per-step scan fallback in ``models/blocks.py``;
+varlen prefill is attention-only, so ``resolve_modes`` downgrades
+``admission="auto"`` to ``per_request``.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.serving.backends.base import (
+    DecodeBackend,
+    _pattern_kinds,
+    register_backend,
+)
+
+
+@register_backend
+class RWKV6Backend(DecodeBackend):
+    """Pure RWKV-6 layer stacks (token-shift + wkv matrix state)."""
+
+    name = "rwkv6"
+    priority = 10
+
+    @classmethod
+    def handles(cls, cfg: ModelConfig) -> bool:
+        return _pattern_kinds(cfg) == frozenset({"rwkv"})
+
+    def _validate(self, cfg: ModelConfig) -> None:
+        assert _pattern_kinds(cfg) == frozenset({"rwkv"}), (
+            f"backend {self.name!r} serves pure rwkv patterns; config "
+            f"{cfg.name!r} has kinds {sorted(_pattern_kinds(cfg))}")
+        assert cfg.rwkv is not None, (
+            f"backend {self.name!r}: config {cfg.name!r} has rwkv "
+            f"layers but no RWKVConfig (cfg.rwkv)")

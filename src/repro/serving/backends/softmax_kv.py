@@ -1,0 +1,43 @@
+"""SoftmaxKVBackend — the growing-KV-cache baseline.
+
+Classic softmax attention: per layer the decode state is a
+``(S, max_len, k)`` key/value cache that GROWS with context — the
+representation the paper's mechanism replaces. The serving engine
+treats it through the same :class:`DecodeBackend` surface (row-gated
+cache writes make slot masking exact; snapshot/restore copy the whole
+per-slot history), but the capability flags tell the scheduler the
+truth: ``fixed_size_state=False`` and ``state_bytes_per_slot`` is
+O(max_len·k) — admission and preemption move the entire cache.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.serving.backends.base import (
+    ATTN_KINDS,
+    DecodeBackend,
+    _pattern_kinds,
+    register_backend,
+)
+
+
+@register_backend
+class SoftmaxKVBackend(DecodeBackend):
+    """Softmax attention with a growing per-slot KV cache (the
+    baseline the paper's fixed-size representation is measured
+    against)."""
+
+    name = "softmax_kv"
+    priority = 20
+
+    @classmethod
+    def handles(cls, cfg: ModelConfig) -> bool:
+        kinds = _pattern_kinds(cfg)
+        return bool(kinds & set(ATTN_KINDS)) and (
+            cfg.attention_backend == "softmax")
+
+    def _validate(self, cfg: ModelConfig) -> None:
+        assert cfg.attention_backend == "softmax", (
+            f"backend {self.name!r} serves softmax attention; config "
+            f"{cfg.name!r} has attention_backend="
+            f"{cfg.attention_backend!r}")

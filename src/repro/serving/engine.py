@@ -5,9 +5,16 @@ lookups — pays off at scale when many concurrent requests share the
 device. This engine turns the PR-1 fused generation loop into a
 multi-tenant system:
 
+Every state operation routes through a
+:class:`~repro.serving.backends.DecodeBackend` — the seam that keeps
+this module a pure scheduler while the backend owns the state layout
+(fixed-size linear/gated/mamba2/rwkv6 states vs. the growing softmax
+KV cache).
+
 * **Slots.** The device holds ONE whole-stack decode state of batch size
   ``n_slots``; each slot is (at most) one live request. Decode runs in
-  fixed ``segment_len``-step segments via :func:`lm.generate_segment` —
+  fixed ``segment_len``-step segments via the backend's
+  ``generate_segment`` —
   one ``lax.scan`` dispatch per segment, with per-slot positions,
   per-slot active masks, and per-slot stop conditions (EOS / token
   budget) resolved *inside* the scan, so a slot can finish mid-segment
@@ -108,7 +115,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import lm
+from repro.serving.backends import DecodeBackend, backend_for_config
 from repro.serving.lifecycle import (
     SHED_POLICIES,
     STATUS_CANCELLED,
@@ -249,6 +256,14 @@ class EngineStats:
 class DecodeEngine:
     """Continuous-batching decode over a fixed number of state slots.
 
+    The engine is a backend-agnostic scheduler: every state operation
+    (prefill, windows, snapshot/restore, masking, the finite probe)
+    routes through a :class:`~repro.serving.backends.DecodeBackend`,
+    resolved from the config by the backend registry unless an explicit
+    ``backend=`` instance is passed. The engine never inspects the
+    attention family — capability questions (varlen prefill? fixed-size
+    state?) are answered by the backend's flags.
+
     One engine owns its jitted programs (prefill / admit / segment), so
     reuse the instance — ``reset()`` clears request bookkeeping without
     recompiling — when timing static vs. continuous admission.
@@ -303,6 +318,7 @@ class DecodeEngine:
         cfg: ModelConfig,
         rules: Optional[Rules] = None,
         *,
+        backend: Optional[DecodeBackend] = None,
         n_slots: int = 4,
         segment_len: int = 8,
         max_len: int = 512,
@@ -324,6 +340,8 @@ class DecodeEngine:
         self.params = params
         self.cfg = cfg
         self.rules = rules if rules is not None else Rules.null()
+        self.backend = (backend if backend is not None
+                        else backend_for_config(cfg, self.rules))
         self.n_slots = n_slots
         self.segment_len = segment_len
         self.max_len = max_len
@@ -341,38 +359,25 @@ class DecodeEngine:
         self.max_retries = max_retries
         self.checkpoint_interval = checkpoint_interval
         self.injector = injector
-        assert admission in ("auto", "batched", "per_request"), admission
-        if admission == "auto":
-            admission = ("batched" if lm.supports_varlen_prefill(cfg)
-                         else "per_request")
-        if admission == "batched":
-            assert lm.supports_varlen_prefill(cfg), (
-                "admission='batched' needs an attention-only layer "
-                "pattern (varlen prefill masking)")
-        self.admission = admission
-        assert ingest in ("auto", "parallel", "recurrent"), ingest
-        if ingest == "auto":
-            # same resolution idiom as ModelConfig.decode_kernel: the
-            # chunk-parallel continuation is MXU-shaped and wins on TPU;
-            # at smoke scale on CPU the masked recurrent scan is
-            # cheaper per chunk (the chunk machinery doesn't amortise)
-            ingest = ("parallel" if jax.default_backend() == "tpu"
-                      else "recurrent")
-        self.ingest = ingest
+        # ONE capability-driven decision on the backend object resolves
+        # both "auto" knobs (previously two near-identical string-check
+        # branches here); unsupported modes raise naming the backend
+        # and the missing capability
+        self.admission, self.ingest = self.backend.resolve_modes(
+            admission, ingest)
         # power-of-2 chunk so every bucket width is a power of two too
         self.prefill_chunk = min(_pow2_ceil(max(1, prefill_chunk)),
                                  max_len)
 
-        cfg_ = cfg
-        rules_ = self.rules
+        be = self.backend
 
         @jax.jit
         def _prefill(params, prompt):
             # one compile per distinct prompt length; prompts are NOT
             # padded — pad tokens would pollute the fixed-size state and
             # break the run-alone equivalence contract
-            logits, st = lm.prefill(params, prompt, cfg_, rules_)
-            return logits, lm.pad_decode_state(st, cfg_, max_len=max_len)
+            logits, st = be.prefill(params, prompt)
+            return logits, be.pad_decode_state(st, max_len=max_len)
 
         @jax.jit
         def _prefill_varlen(params, state, tokens, lens, mask):
@@ -382,28 +387,26 @@ class DecodeEngine:
             # pollution the per-request path avoided by not padding.
             # The admitted rows are selected into the engine state
             # INSIDE the program — one dispatch admits the whole wave.
-            last, st = lm.prefill_varlen(params, tokens, lens, cfg_,
-                                         rules_)
-            st = lm.pad_decode_state(st, cfg_, max_len=max_len)
-            return last, lm.where_state(mask, st, state)
+            last, st = be.prefill_varlen(params, tokens, lens)
+            st = be.pad_decode_state(st, max_len=max_len)
+            return last, be.where_state(mask, st, state)
 
         @jax.jit
         def _prefill_varlen_one(params, state, tokens, lens, slot):
             # the steady-state wave of ONE: a freed slot refills from a
             # compact batch-1 bucket-padded prefill + slot write, so a
             # single admission never pays n_slots× padded FLOPs
-            last, st = lm.prefill_varlen(params, tokens, lens, cfg_,
-                                         rules_)
-            st = lm.pad_decode_state(st, cfg_, max_len=max_len)
-            return last, lm.restore_state(state, st, slot)
+            last, st = be.prefill_varlen(params, tokens, lens)
+            st = be.pad_decode_state(st, max_len=max_len)
+            return last, be.restore_state(state, st, slot)
 
         @jax.jit
         def _window_varlen(params, state, tokens, pos0, lens):
             # the variable-length masked RECURRENT window: batched
             # speculative rewind (re-advance must follow the exact
             # decode-step chain the plain greedy path runs)
-            logits, st = lm.decode_window_varlen(
-                params, state, tokens, pos0, lens, cfg_, rules_)
+            logits, st = be.decode_window_varlen(
+                params, state, tokens, pos0, lens)
             last = jnp.take_along_axis(
                 logits, jnp.maximum(lens - 1, 0)[:, None, None],
                 axis=1)[:, 0]
@@ -415,8 +418,8 @@ class DecodeEngine:
             # the linear family continues through the chunk-PARALLEL
             # prefill kernels (prefill FLOPs per chunk, not W decode
             # steps); softmax falls back to the per-step cache writes
-            logits, st = lm.ingest_window_varlen(
-                params, state, tokens, pos0, lens, cfg_, rules_)
+            logits, st = be.ingest_window_varlen(
+                params, state, tokens, pos0, lens)
             last = jnp.take_along_axis(
                 logits, jnp.maximum(lens - 1, 0)[:, None, None],
                 axis=1)[:, 0]
@@ -424,13 +427,13 @@ class DecodeEngine:
 
         @jax.jit
         def _admit(engine_state, request_state, slot):
-            return lm.restore_state(engine_state, request_state, slot)
+            return be.write_slot_state(engine_state, request_state, slot)
 
         @jax.jit
         def _segment(params, state, tok, pos, active, remaining, key):
-            return lm.generate_segment(
+            return be.generate_segment(
                 params, state, tok, pos, active, remaining, segment_len,
-                cfg_, rules_, eos_id=eos_id, temperature=temperature,
+                eos_id=eos_id, temperature=temperature,
                 key=key, pad_id=PAD_ID)
 
         @jax.jit
@@ -438,29 +441,28 @@ class DecodeEngine:
             # greedy verify: one decode_window launch per layer, every
             # slot at its own depth; only the argmax tokens leave the
             # device (the (S, W, V) logits never transfer)
-            logits, st = lm.decode_window(params, state, window, pos,
-                                          cfg_, rules_)
+            logits, st = be.decode_window(params, state, window, pos)
             return jnp.argmax(logits, -1).astype(jnp.int32), st
 
         @jax.jit
         def _select(mask, new, old):
-            return lm.where_state(mask, new, old)
+            return be.where_state(mask, new, old)
 
         @jax.jit
         def _snapshot(state, slot):
-            return lm.snapshot_state(state, slot)
+            return be.snapshot_state(state, slot)
 
         @jax.jit
         def _finite(state):
             # ONE fused reduction over every float leaf → (S,) bool;
             # the numeric-fault detector, amortised per segment
-            return lm.slot_state_finite(state)
+            return be.slot_state_finite(state)
 
         @jax.jit
         def _poison(state, slot):
             # chaos-harness only: NaN-fill exactly one slot's state
-            bad = poison_snapshot(lm.snapshot_state(state, slot))
-            return lm.restore_state(state, bad, slot)
+            bad = poison_snapshot(be.snapshot_state(state, slot))
+            return be.restore_state(state, bad, slot)
 
         self._prefill = _prefill
         self._prefill_varlen = _prefill_varlen
@@ -485,9 +487,8 @@ class DecodeEngine:
 
     def reset(self) -> None:
         """Clear all requests/slots/stats; keep compiled programs."""
-        self.state = lm.init_decode_state(
-            self.cfg, batch=self.n_slots, max_len=self.max_len,
-            rules=self.rules)
+        self.state = self.backend.init_slots(
+            batch=self.n_slots, max_len=self.max_len)
         s = self.n_slots
         self._tok = np.zeros((s,), np.int32)
         self._pos = np.zeros((s,), np.int32)
@@ -525,7 +526,8 @@ class DecodeEngine:
     def submit(self, prompt, max_new_tokens: int,
                arrival: float = 0.0, speculate_k: int = 0,
                priority: int = 0,
-               deadline_s: Optional[float] = None) -> int:
+               deadline_s: Optional[float] = None,
+               uid: Optional[int] = None) -> int:
         """Queue a request; returns its uid. ``arrival`` is in logical
         decode steps (0 = available immediately); ``deadline_s`` an
         absolute logical-step completion deadline; ``priority`` orders
@@ -542,8 +544,15 @@ class DecodeEngine:
         this). If the queue is bounded and full, the shed policy
         resolves synchronously — the shed request (the arrival, or a
         strictly lower-priority queued victim under "evict_lowest")
-        completes immediately with ``status="shed"``."""
+        completes immediately with ``status="shed"``.
+
+        ``uid`` lets a fleet scheduler assign globally-unique ids across
+        slot groups; it must be monotone (>= the engine's next uid)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if uid is not None and uid < self._next_uid:
+            raise ValueError(
+                f"uid {uid} is not monotone (engine next uid is "
+                f"{self._next_uid})")
         if max_new_tokens < 1:
             raise ValueError(
                 f"max_new_tokens must be >= 1, got {max_new_tokens}")
@@ -567,8 +576,9 @@ class DecodeEngine:
                 f"({max_new_tokens}) + speculate_k ({speculate_k}) "
                 f"exceeds engine max_len {self.max_len} + 1")
         # ---- validation complete; engine state mutations start here --
-        uid = self._next_uid
-        self._next_uid += 1
+        if uid is None:
+            uid = self._next_uid
+        self._next_uid = uid + 1
         req = Request(uid=uid, prompt=prompt,
                       max_new_tokens=max_new_tokens, arrival=arrival,
                       speculate_k=speculate_k, priority=priority,
@@ -671,7 +681,8 @@ class DecodeEngine:
         self.stats.prefills += 1
         self.stats.admission_dispatches += 1
         self._key, sub = jax.random.split(self._key)
-        tok0 = int(lm.sample_token(logits, self.temperature, sub)[0])
+        tok0 = int(self.backend.sample_token(
+            logits, self.temperature, sub)[0])
         hit_eos = self.eos_id is not None and tok0 == self.eos_id
         if req.max_new_tokens <= 1 or hit_eos:
             self._complete(req, [tok0], admitted_step=self._clock,
@@ -1030,7 +1041,7 @@ class DecodeEngine:
         self._ingest_req[slot] = None
         self._ingest_cursor[slot] = 0
         self._key, sub = jax.random.split(self._key)
-        tok0 = int(lm.sample_token(
+        tok0 = int(self.backend.sample_token(
             jnp.asarray(logits_row)[None], self.temperature, sub)[0])
         hit_eos = self.eos_id is not None and tok0 == self.eos_id
         if req.max_new_tokens <= 1 or hit_eos:
@@ -1384,48 +1395,81 @@ class DecodeEngine:
 
         self._clock += max_emitted
 
-    def run(self, policy: str = "continuous") -> List[Completion]:
-        """Drive queued requests to completion. Returns completions in
-        uid order. Per outer iteration: one lifecycle pass (cancels,
-        deadlines, degradation), one admission pass (preempt + resume +
+    def has_work(self) -> bool:
+        """Anything queued, suspended, ingesting, or decode-active?"""
+        return bool(self._queue or self._suspended or self._active.any()
+                    or self._any_ingesting())
+
+    def queue_depth(self) -> int:
+        """Requests waiting in the admission queue (fleet-level bounded
+        queues count waiting work across slot groups through this)."""
+        return len(self._queue)
+
+    def shed_queued(self, uid: int) -> bool:
+        """Shed a QUEUED request by uid (``status="shed"``): the fleet
+        scheduler's cross-group eviction primitive — a fleet-wide
+        bounded queue may pick its victim in a different slot group
+        than the arrival. Returns False if the uid is not queued."""
+        for i, r in enumerate(self._queue):
+            if r.uid == uid:
+                self._queue.pop(i)
+                self._shed(r)
+                return True
+        return False
+
+    def completions(self) -> List[Completion]:
+        """Completions recorded so far, in uid order."""
+        return [self._completions[u] for u in sorted(self._completions)]
+
+    def step(self, policy: str = "continuous") -> bool:
+        """ONE outer scheduling iteration: lifecycle pass (cancels,
+        deadlines, degradation), admission pass (preempt + resume +
         admit), one continuation ingest chunk (if any slot is
         mid-prompt), one slot-masked segment for plain slots, one
-        draft/verify round for speculative slots — chunked prompt
-        ingestion therefore interleaves with decode instead of stalling
-        it, and every segment/round boundary runs the numeric-fault
-        probe (:meth:`_post_event`)."""
+        draft/verify round for speculative slots — with the numeric-
+        fault probe at every segment/round boundary. Returns whether
+        work remains (the fleet scheduler interleaves groups by calling
+        this round-robin). No-op returning False when idle."""
         assert policy in ("continuous", "static"), policy
-        while (self._queue or self._suspended or self._active.any()
-               or self._any_ingesting()):
-            self._lifecycle_pass()
-            self._admit_pass(policy)
+        if not self.has_work():
+            return False
+        self._lifecycle_pass()
+        self._admit_pass(policy)
+        if self._any_ingesting():
+            self._ingest_step()
+        if not self._active.any():
             if self._any_ingesting():
-                self._ingest_step()
-            if not self._active.any():
-                if self._any_ingesting():
-                    continue
-                if self._quarantined.all() and (self._queue
-                                                or self._suspended):
-                    self._fail_all_pending()
-                    continue
-                if self._work_waiting():
-                    # work is waiting but nothing was admitted (chaos-
-                    # dropped wave, or every free slot quarantined):
-                    # stall one segment and try again
-                    self._clock += self.segment_len
-                    continue
-                if self._queue:
-                    # the queue head is in the future: fast-forward the
-                    # logical clock to it (whole segments, to stay on
-                    # the segment grid)
-                    ahead = self._queue[0].arrival - self._clock
-                    skip = max(1, -int(-ahead // self.segment_len))
-                    self._clock += skip * self.segment_len
-                continue
-            if (self._active & (self._spec_k == 0)).any():
-                self.step_segment()
-                self._post_event()
-            if (self._active & (self._spec_k > 0)).any():
-                self.step_spec_round()
-                self._post_event()
-        return [self._completions[u] for u in sorted(self._completions)]
+                return self.has_work()
+            if self._quarantined.all() and (self._queue
+                                            or self._suspended):
+                self._fail_all_pending()
+                return self.has_work()
+            if self._work_waiting():
+                # work is waiting but nothing was admitted (chaos-
+                # dropped wave, or every free slot quarantined):
+                # stall one segment and try again
+                self._clock += self.segment_len
+                return self.has_work()
+            if self._queue:
+                # the queue head is in the future: fast-forward the
+                # logical clock to it (whole segments, to stay on
+                # the segment grid)
+                ahead = self._queue[0].arrival - self._clock
+                skip = max(1, -int(-ahead // self.segment_len))
+                self._clock += skip * self.segment_len
+            return self.has_work()
+        if (self._active & (self._spec_k == 0)).any():
+            self.step_segment()
+            self._post_event()
+        if (self._active & (self._spec_k > 0)).any():
+            self.step_spec_round()
+            self._post_event()
+        return self.has_work()
+
+    def run(self, policy: str = "continuous") -> List[Completion]:
+        """Drive queued requests to completion (repeated :meth:`step`).
+        Returns completions in uid order."""
+        assert policy in ("continuous", "static"), policy
+        while self.step(policy):
+            pass
+        return self.completions()

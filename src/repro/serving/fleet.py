@@ -1,0 +1,230 @@
+"""Heterogeneous multi-backend fleet: one admission queue, N slot groups.
+
+The :class:`DecodeBackend` seam makes the serving engine a pure
+scheduler, which is what lets ONE fleet serve requests against
+*different architecture families at once*: per-request ``backend=``
+selection routes each submission to the slot group holding that
+backend's params/config, every group keeps its own compiled segment
+programs (one per backend — the deterministic dispatch-count form CI
+gates), and the fleet interleaves group steps round-robin so a decode
+segment on one family never starves another.
+
+The paper's angle: for the fixed-size families (linear, gated,
+mamba2, rwkv6) a slot group's whole scheduling machinery — admission,
+preemption, snapshot-retry — moves O(k²) bytes per request, while the
+softmax group pays O(max_len·k); serving them side by side under the
+same queue is the honest comparison at fleet scale
+(``benchmarks/continuous_batching.py`` "fleet" section).
+
+Design notes:
+
+* Each group is a full :class:`DecodeEngine` (own slots, own logical
+  clock, own lifecycle) — a request's tokens are therefore
+  bit-identical to running its backend's group as a homogeneous
+  engine with the same submissions, by construction. The fleet adds
+  routing, global uids, and a FLEET-LEVEL bounded queue.
+* ``max_queue`` bounds TOTAL queued requests across groups;
+  ``shed_policy="evict_lowest"`` may pick its victim in a different
+  group than the arrival (``DecodeEngine.shed_queued``).
+* Lifecycle controls (cancel, priorities, deadlines, preemption,
+  NaN quarantine) live in the groups and work unchanged; ``cancel``
+  routes by uid.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.engine import Completion, DecodeEngine
+from repro.serving.lifecycle import SHED_POLICIES
+
+
+def fleet_demo_config(name: str):
+    """A smoke-scale ModelConfig for each fleet-servable backend —
+    shared vocab (256) and d_model so one workload generator feeds a
+    mixed fleet. Names: linear | gated_linear | softmax (yi-34b smoke
+    attention variants), mamba2 (pure-mamba zamba2 smoke), rwkv6."""
+    from repro.configs import get_smoke_config
+    if name in ("linear", "gated_linear", "softmax"):
+        cfg = get_smoke_config("yi-34b").with_backend(name)
+    elif name == "mamba2":
+        cfg = dataclasses.replace(
+            get_smoke_config("zamba2-7b"), name="mamba2-fleet-smoke",
+            layer_pattern=("mamba",), n_repeats=2, tail=(), n_layers=2)
+    elif name == "rwkv6":
+        cfg = get_smoke_config("rwkv6-1.6b")
+    else:
+        raise KeyError(
+            f"unknown fleet demo backend {name!r}; known: linear, "
+            f"gated_linear, softmax, mamba2, rwkv6")
+    # fp32 on CPU smoke (the serving benchmarks' precedent)
+    return dataclasses.replace(cfg, dtype="float32")
+
+
+class FleetEngine:
+    """N backend slot groups behind one submit/run API.
+
+    ``groups`` maps a group name to ``(params, cfg)`` (or ``(params,
+    cfg, rules)``); every group gets its own :class:`DecodeEngine`
+    built with the shared engine knobs (``n_slots`` per group,
+    ``segment_len``, ``max_len``, ...), its backend resolved from its
+    config by the registry. ``per_group`` supplies per-group engine
+    overrides (e.g. a draft provider for one group only).
+    """
+
+    def __init__(
+        self,
+        groups: Dict[str, Tuple],
+        *,
+        max_queue: Optional[int] = None,
+        shed_policy: str = "reject_new",
+        per_group: Optional[Dict[str, Dict[str, Any]]] = None,
+        **engine_kwargs,
+    ):
+        assert groups, "FleetEngine needs at least one backend group"
+        assert shed_policy in SHED_POLICIES, shed_policy
+        assert max_queue is None or max_queue >= 1, max_queue
+        self.max_queue = max_queue
+        self.shed_policy = shed_policy
+        self.groups: Dict[str, DecodeEngine] = {}
+        for name, spec in groups.items():
+            params, cfg = spec[0], spec[1]
+            rules = spec[2] if len(spec) > 2 else None
+            kw = dict(engine_kwargs)
+            kw.update((per_group or {}).get(name, {}))
+            # groups keep unbounded queues; the fleet bounds the TOTAL
+            self.groups[name] = DecodeEngine(params, cfg, rules, **kw)
+        self.default_backend = next(iter(self.groups))
+        self.reset()
+
+    # ------------------------------------------------------------------
+
+    def reset(self) -> None:
+        """Clear all groups' requests/slots/stats; keep compiled
+        programs."""
+        for eng in self.groups.values():
+            eng.reset()
+        self._route: Dict[int, str] = {}        # uid → group name
+        self._next_uid = 0
+        self.fleet_shed = 0      # sheds forced by the FLEET queue bound
+
+    def backend_of(self, uid: int) -> Optional[str]:
+        return self._route.get(uid)
+
+    def _queued_total(self) -> int:
+        return sum(e.queue_depth() for e in self.groups.values())
+
+    def _pick_queued_victim(self) -> Optional[Tuple[str, Any]]:
+        """Lowest-(priority, then newest) queued request ACROSS groups —
+        the fleet-wide form of the engine's evict_lowest policy."""
+        best = None
+        for name, eng in self.groups.items():
+            for r in eng._queue:
+                key = (r.priority, -r.arrival, -r.uid)
+                if best is None or key < best[0]:
+                    best = (key, name, r)
+        return (best[1], best[2]) if best is not None else None
+
+    def submit(self, prompt, max_new_tokens: int, *,
+               backend: Optional[str] = None, arrival: float = 0.0,
+               speculate_k: int = 0, priority: int = 0,
+               deadline_s: Optional[float] = None) -> int:
+        """Queue a request against one backend group (default: the
+        first registered group). Returns a fleet-global uid. The
+        fleet-level bounded queue resolves sheds across ALL groups."""
+        if backend is None:
+            backend = self.default_backend
+        if backend not in self.groups:
+            raise KeyError(
+                f"unknown backend {backend!r}; fleet serves "
+                f"{list(self.groups)}")
+        eng = self.groups[backend]
+        uid = self._next_uid
+        if (self.max_queue is not None
+                and self._queued_total() >= self.max_queue):
+            shed_arrival = True
+            if self.shed_policy == "evict_lowest":
+                victim = self._pick_queued_victim()
+                if victim is not None and victim[1].priority < priority:
+                    self.groups[victim[0]].shed_queued(victim[1].uid)
+                    self.fleet_shed += 1
+                    shed_arrival = False
+            if shed_arrival:
+                # validate via the engine (atomic — nothing mutated on
+                # raise), then shed synchronously: the completion lands
+                # in the arrival's group with status="shed"
+                eng.submit(np.asarray(prompt), max_new_tokens,
+                           arrival=arrival, speculate_k=speculate_k,
+                           priority=priority, deadline_s=deadline_s,
+                           uid=uid)
+                assert eng.shed_queued(uid)
+                self.fleet_shed += 1
+                self._next_uid = uid + 1
+                self._route[uid] = backend
+                return uid
+        eng.submit(np.asarray(prompt), max_new_tokens, arrival=arrival,
+                   speculate_k=speculate_k, priority=priority,
+                   deadline_s=deadline_s, uid=uid)
+        self._next_uid = uid + 1
+        self._route[uid] = backend
+        return uid
+
+    def cancel(self, uid: int) -> bool:
+        name = self._route.get(uid)
+        return self.groups[name].cancel(uid) if name else False
+
+    # ------------------------------------------------------------------
+
+    def has_work(self) -> bool:
+        return any(e.has_work() for e in self.groups.values())
+
+    def step(self, policy: str = "continuous") -> bool:
+        """One scheduling iteration per group, round-robin — the
+        lockstep interleave that keeps every backend's slots fed from
+        the shared queue without any group monopolising the host."""
+        for eng in self.groups.values():
+            eng.step(policy)
+        return self.has_work()
+
+    def run(self, policy: str = "continuous") -> List[Completion]:
+        """Drive every group's queued requests to completion; returns
+        all completions (fleet-shed ones included) in uid order."""
+        while self.step(policy):
+            pass
+        return self.completions()
+
+    def completions(self) -> List[Completion]:
+        merged: Dict[int, Completion] = {}
+        for eng in self.groups.values():
+            merged.update(eng._completions)
+        return [merged[u] for u in sorted(merged)]
+
+    # ------------------------------------------------------------------
+
+    def compiled_segment_programs(self) -> Dict[str, int]:
+        """Compiled decode-segment programs per group. Exactly ONE per
+        backend after serving any mix — the deterministic form of
+        "per-group compiled programs" that CI gates."""
+        return {name: eng._segment._cache_size()
+                for name, eng in self.groups.items()}
+
+    def stats(self) -> Dict[str, Any]:
+        """Per-group stats + fleet-level counters, JSON-able."""
+        return {
+            "fleet_shed": self.fleet_shed,
+            "groups": {
+                name: {
+                    "backend": eng.backend.name,
+                    "fixed_size_state": eng.backend.fixed_size_state,
+                    "state_bytes_per_slot":
+                        eng.backend.state_bytes_per_slot(eng.max_len),
+                    "compiled_segment_programs":
+                        eng._segment._cache_size(),
+                    "stats": eng.stats.to_dict(),
+                }
+                for name, eng in self.groups.items()
+            },
+        }

@@ -10,7 +10,11 @@ descriptors that ride on that property:
 * :class:`SuspendedRequest` — a request swapped out of its slot
   mid-generation: the batch-1 state snapshot plus the scalar decode
   bookkeeping (next input token, position, remaining budget, tokens
-  emitted so far). Re-admission is one ``lm.write_slot_state`` copy;
+  emitted so far). Re-admission is one backend ``write_slot_state``
+  copy (every op here goes through the engine's
+  :class:`~repro.serving.backends.DecodeBackend`, so suspension works
+  identically for linear/gated/mamba2/rwkv6 fixed-size states and the
+  softmax KV cache — only the copied byte count differs);
   greedy continuation is bit-identical to never having been preempted,
   because a greedy decode step depends only on (state, tok, pos).
 
@@ -63,8 +67,9 @@ SHED_POLICIES = ("reject_new", "evict_lowest")
 class SuspendedRequest:
     """A request swapped out of its slot mid-generation.
 
-    ``state`` is the batch-1 whole-stack snapshot (``lm.snapshot_state``
-    of the slot — O(k²) per layer for the linear family); the scalars
+    ``state`` is the batch-1 whole-stack snapshot (the backend's
+    ``snapshot_state`` of the slot — O(k²) per layer for the
+    fixed-size families); the scalars
     are exactly the per-slot vectors the engine carries, so re-admission
     restores the decode chain bit-for-bit under greedy sampling.
     """

@@ -175,46 +175,48 @@ class ModelDraft:
     """
 
     def __init__(self, params: Any, cfg: Any, rules: Any = None, *,
-                 n_slots: int = 4, max_len: int = 512):
-        from repro.models import lm
+                 n_slots: int = 4, max_len: int = 512,
+                 backend: Any = None):
+        from repro.serving.backends import backend_for_config
         from repro.sharding import Rules
 
         self.params = params
         self.cfg = cfg
         self.rules = rules if rules is not None else Rules.null()
+        self.backend = (backend if backend is not None
+                        else backend_for_config(cfg, self.rules))
         self.n_slots = n_slots
         self.max_len = max_len
-        cfg_, rules_ = cfg, self.rules
+        be = self.backend
 
         @jax.jit
         def _prefill(params, prompt):
-            _, st = lm.prefill(params, prompt, cfg_, rules_)
-            return lm.pad_decode_state(st, cfg_, max_len=max_len)
+            _, st = be.prefill(params, prompt)
+            return be.pad_decode_state(st, max_len=max_len)
 
         @jax.jit
         def _restore(state, snap, slot):
-            return lm.restore_state(state, snap, slot)
+            return be.restore_state(state, snap, slot)
 
         @jax.jit
         def _snapshot(state, slot):
-            return lm.snapshot_state(state, slot)
+            return be.snapshot_state(state, slot)
 
         @jax.jit
         def _window(params, state, tokens, pos0):
-            _, st = lm.decode_window(params, state, tokens, pos0,
-                                     cfg_, rules_)
+            _, st = be.decode_window(params, state, tokens, pos0)
             return st
 
         @jax.jit
         def _window_varlen(params, state, tokens, pos0, lens):
-            _, st = lm.decode_window_varlen(params, state, tokens, pos0,
-                                            lens, cfg_, rules_)
+            _, st = be.decode_window_varlen(params, state, tokens, pos0,
+                                            lens)
             return st
 
         def _segment(params, state, tok, pos, active, k):
-            toks, carry = lm.generate_segment(
+            toks, carry = be.generate_segment(
                 params, state, tok, pos, active,
-                jnp.full(tok.shape, k + 1, jnp.int32), k, cfg_, rules_)
+                jnp.full(tok.shape, k + 1, jnp.int32), k)
             return toks, carry["state"]
 
         self._prefill = _prefill
@@ -226,10 +228,8 @@ class ModelDraft:
         self.reset()
 
     def reset(self) -> None:
-        from repro.models import lm
-        self.state = lm.init_decode_state(
-            self.cfg, batch=self.n_slots, max_len=self.max_len,
-            rules=self.rules)
+        self.state = self.backend.init_slots(
+            batch=self.n_slots, max_len=self.max_len)
         self._pos = np.zeros((self.n_slots,), np.int32)
         self._round_tok: Optional[np.ndarray] = None
         self._round_pos: Optional[np.ndarray] = None

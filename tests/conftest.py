@@ -15,6 +15,22 @@ if os.environ.get("JAX_ENABLE_X64", "0").lower() in ("", "0", "false"):
     jax.config.update("jax_enable_x64", False)
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _release_compiled_programs():
+    """Drop jit caches between test modules.
+
+    The suite compiles several hundred distinct XLA programs in one
+    process; on the CPU backend the accumulated JIT'd code eventually
+    segfaults inside ``backend_compile`` (deterministically, at the
+    N-th program — jaxlib 0.4.37). No single module comes near the
+    threshold, so releasing executables at module boundaries keeps the
+    live-program count bounded. Within-module cache-hit/jit-miss
+    accounting (admission tests) is unaffected.
+    """
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture
 def key():
     return jax.random.PRNGKey(0)

@@ -1,0 +1,299 @@
+"""DecodeBackend protocol conformance, over EVERY registered backend.
+
+The serving engine is a backend-agnostic scheduler: everything it does
+to a request's state goes through a :class:`DecodeBackend`. This suite
+pins the contract a backend must honour for the engine's scheduling
+moves to be safe, uniformly across the fleet's families (fixed_state
+linear/gated, softmax KV, mamba2, rwkv6):
+
+* registry dispatch is deterministic — each demo config lands on its
+  expected backend class, independent of import order (priority order);
+* ``snapshot_state`` → ``write_slot_state``/``restore_state`` is a
+  bitwise roundtrip (preemption/resume and checkpoint/retry depend on
+  it);
+* ``where_state`` masks per slot (the engine's select-after-segment);
+* ``slot_state_finite`` flags exactly a poisoned slot (NaN quarantine);
+* ``pad_decode_state`` grows ONLY growing state (softmax KV time axis)
+  and is an exact no-op on fixed-size state;
+* ``state_bytes_per_slot`` is constant in ``max_len`` iff
+  ``fixed_size_state`` (the paper's O(k²)-vs-O(T·k) axis, measured
+  without allocating);
+* ``resolve_modes`` holds the single admission/ingest auto-fallback,
+  and its errors name the backend and the missing capability.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import lm
+from repro.serving import (
+    DecodeBackend,
+    FixedStateBackend,
+    Mamba2Backend,
+    RWKV6Backend,
+    SoftmaxKVBackend,
+    backend_for_config,
+    get_backend_cls,
+    list_backends,
+)
+from repro.serving.fleet import fleet_demo_config
+from repro.serving.lifecycle import poison_snapshot
+
+# demo config name → backend class the registry must dispatch to
+EXPECTED_DISPATCH = {
+    "linear": FixedStateBackend,
+    "gated_linear": FixedStateBackend,
+    "softmax": SoftmaxKVBackend,
+    "mamba2": Mamba2Backend,
+    "rwkv6": RWKV6Backend,
+}
+DEMO_NAMES = sorted(EXPECTED_DISPATCH)
+
+_SETUP_CACHE = {}
+
+
+def _setup(name):
+    """(cfg, params, backend) for a demo config — cached per module so
+    the conformance matrix pays one init per family."""
+    if name not in _SETUP_CACHE:
+        cfg = fleet_demo_config(name)
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        _SETUP_CACHE[name] = (cfg, params, backend_for_config(cfg))
+    return _SETUP_CACHE[name]
+
+
+def _prompt(cfg, n=6, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed), (1, n), 0,
+                              cfg.vocab_size).astype(jnp.int32)
+
+
+def _slot_snapshot(be, params, cfg, max_len=16, n=6):
+    """A realistic batch-1 snapshot: prefill a prompt, pad to max_len."""
+    _, st = be.prefill(params, _prompt(cfg, n))
+    return be.pad_decode_state(st, max_len=max_len)
+
+
+class TestConfigValidation:
+    """ModelConfig rejects unknown kinds and impossible backend/kernel
+    combos at CONSTRUCTION time — the config-time half of the backend
+    seam (the registry's ``handles``/``_validate`` is the serving half).
+    """
+
+    def test_unknown_layer_kind(self):
+        import dataclasses
+        cfg = fleet_demo_config("linear")
+        with pytest.raises(ValueError, match="unknown layer_pattern"):
+            dataclasses.replace(cfg, layer_pattern=("attn", "mamba3"))
+        with pytest.raises(ValueError, match="mamba3"):
+            dataclasses.replace(cfg, tail=("mamba3",))
+
+    def test_unknown_attention_backend(self):
+        with pytest.raises(ValueError, match="attention_backend"):
+            fleet_demo_config("linear").with_backend("quadratic")
+
+    def test_unknown_decode_kernel(self):
+        import dataclasses
+        with pytest.raises(ValueError, match="decode_kernel"):
+            dataclasses.replace(fleet_demo_config("linear"),
+                                decode_kernel="pallas")
+
+    @pytest.mark.parametrize("name", ["softmax", "mamba2", "rwkv6"])
+    def test_fused_kernel_requires_linear_attention(self, name):
+        import dataclasses
+        with pytest.raises(ValueError, match="no fused kernel"):
+            dataclasses.replace(fleet_demo_config(name),
+                                decode_kernel="fused")
+
+    @pytest.mark.parametrize("name", ["linear", "gated_linear"])
+    def test_fused_kernel_accepted_for_linear_family(self, name):
+        import dataclasses
+        cfg = dataclasses.replace(fleet_demo_config(name),
+                                  decode_kernel="fused")
+        assert cfg.decode_kernel == "fused"
+
+
+class TestRegistry:
+    def test_all_families_registered(self):
+        assert set(list_backends()) >= {"fixed_state", "softmax_kv",
+                                        "mamba2", "rwkv6"}
+        for name in list_backends():
+            assert issubclass(get_backend_cls(name), DecodeBackend)
+
+    def test_unknown_backend_name(self):
+        with pytest.raises(KeyError, match="registered"):
+            get_backend_cls("nope")
+
+    @pytest.mark.parametrize("name", DEMO_NAMES)
+    def test_dispatch_is_deterministic(self, name):
+        cfg, _, be = _setup(name)
+        assert type(be) is EXPECTED_DISPATCH[name]
+        # priority ordering, not registration order, decides the claim:
+        # the pure-family configs are ALSO fixed-state, yet never land
+        # on the generic fallback
+        if name in ("mamba2", "rwkv6"):
+            assert FixedStateBackend.handles(cfg)
+            assert type(be) is not FixedStateBackend
+
+
+class TestCapabilities:
+    @pytest.mark.parametrize("name", DEMO_NAMES)
+    def test_flags_match_config(self, name):
+        cfg, _, be = _setup(name)
+        assert be.fixed_size_state == cfg.fixed_state_decode
+        assert be.supports_varlen_prefill == lm.supports_varlen_prefill(
+            cfg)
+        assert be.supports_spec
+        # the fleet's demo split: attention families batch-admit,
+        # pure-recurrent families admit per request
+        assert be.supports_varlen_prefill == (name in (
+            "linear", "gated_linear", "softmax"))
+
+    @pytest.mark.parametrize("name", DEMO_NAMES)
+    def test_state_bytes_scaling(self, name):
+        _, _, be = _setup(name)
+        small, large = be.state_bytes_per_slot(16), \
+            be.state_bytes_per_slot(1024)
+        assert small > 0
+        if be.fixed_size_state:
+            assert small == large
+        else:
+            assert large > 10 * small
+
+    @pytest.mark.parametrize("name", DEMO_NAMES)
+    def test_state_bytes_matches_allocation(self, name):
+        """eval_shape sizing == the bytes a real slot allocates."""
+        _, _, be = _setup(name)
+        real = sum(x.nbytes
+                   for x in jax.tree.leaves(be.init_slots(1, 32)))
+        assert be.state_bytes_per_slot(32) == real
+
+
+class TestResolveModes:
+    @pytest.mark.parametrize("name", DEMO_NAMES)
+    def test_auto_follows_capability(self, name):
+        _, _, be = _setup(name)
+        admission, ingest = be.resolve_modes("auto", "recurrent")
+        assert admission == ("batched" if be.supports_varlen_prefill
+                             else "per_request")
+        assert ingest == "recurrent"
+        # per_request is every backend's lowest common denominator
+        assert be.resolve_modes("per_request", "parallel")[0] \
+            == "per_request"
+
+    @pytest.mark.parametrize("name", ["mamba2", "rwkv6"])
+    def test_unsupported_mode_names_backend_and_capability(self, name):
+        _, _, be = _setup(name)
+        with pytest.raises(AssertionError) as e:
+            be.resolve_modes("batched", "auto")
+        msg = str(e.value)
+        assert be.name in msg
+        assert "supports_varlen_prefill" in msg
+
+
+class TestStateOps:
+    """The state-op contract, identical across families — only the
+    copied byte counts differ."""
+
+    @pytest.mark.parametrize("name", DEMO_NAMES)
+    def test_snapshot_restore_roundtrip_bitwise(self, name):
+        cfg, params, be = _setup(name)
+        slots = be.init_slots(batch=3, max_len=16)
+        snap = _slot_snapshot(be, params, cfg)
+        for writer in (be.write_slot_state, be.restore_state):
+            written = writer(slots, snap, 1)
+            back = be.snapshot_state(written, 1)
+            for a, b in zip(jax.tree.leaves(back),
+                            jax.tree.leaves(snap)):
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(b))
+            # neighbouring slots untouched
+            for s in (0, 2):
+                for a, b in zip(
+                        jax.tree.leaves(be.snapshot_state(written, s)),
+                        jax.tree.leaves(be.snapshot_state(slots, s))):
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+
+    @pytest.mark.parametrize("name", DEMO_NAMES)
+    def test_where_state_masks_per_slot(self, name):
+        cfg, params, be = _setup(name)
+        old = be.init_slots(batch=2, max_len=16)
+        snap = _slot_snapshot(be, params, cfg)
+        new = be.restore_state(be.restore_state(old, snap, 0), snap, 1)
+        mixed = be.where_state(jnp.asarray([True, False]), new, old)
+        for s, want in ((0, new), (1, old)):
+            for a, b in zip(
+                    jax.tree.leaves(be.snapshot_state(mixed, s)),
+                    jax.tree.leaves(be.snapshot_state(want, s))):
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(b))
+
+    @pytest.mark.parametrize("name", DEMO_NAMES)
+    def test_finite_probe_flags_poisoned_slot(self, name):
+        cfg, params, be = _setup(name)
+        slots = be.init_slots(batch=3, max_len=16)
+        snap = _slot_snapshot(be, params, cfg)
+        for s in range(3):
+            slots = be.restore_state(slots, snap, s)
+        assert np.asarray(be.slot_state_finite(slots)).all()
+        poisoned = be.restore_state(slots, poison_snapshot(snap), 1)
+        np.testing.assert_array_equal(
+            np.asarray(be.slot_state_finite(poisoned)),
+            np.asarray([True, False, True]))
+
+    @pytest.mark.parametrize("name", DEMO_NAMES)
+    def test_pad_decode_state_axis_math(self, name):
+        """pad grows exactly the growing axes: a no-op (bitwise) on
+        fixed-size state; on the softmax KV cache the time axis reaches
+        max_len and the prefix is preserved bitwise."""
+        cfg, params, be = _setup(name)
+        t, max_len = 6, 32
+        _, st = be.prefill(params, _prompt(cfg, t))
+        padded = be.pad_decode_state(st, max_len=max_len)
+        before = jax.tree.leaves(st)
+        after = jax.tree.leaves(padded)
+        assert len(before) == len(after)
+        grew = 0
+        for a, b in zip(before, after):
+            if a.shape == b.shape:
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(b))
+                continue
+            grew += 1
+            # exactly the KV time axis (ndim-3: the engine's stacked
+            # cache arithmetic) grew, to max_len; prefix preserved
+            diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                    if x != y]
+            assert diff == [a.ndim - 3], (a.shape, b.shape)
+            axis = diff[0]
+            assert b.shape[axis] == max_len
+            np.testing.assert_array_equal(
+                np.asarray(jax.lax.slice_in_dim(b, 0, a.shape[axis],
+                                                axis=axis)),
+                np.asarray(a))
+        assert (grew > 0) == (not be.fixed_size_state)
+
+    @pytest.mark.parametrize("name", DEMO_NAMES)
+    def test_decode_continues_after_admission(self, name):
+        """The engine's admission sequence end-to-end through the
+        backend: prefill → pad → write into a slot → decode_step — and
+        the step equals decoding on the un-written snapshot (slot
+        placement cannot change the math)."""
+        cfg, params, be = _setup(name)
+        snap = _slot_snapshot(be, params, cfg, max_len=16, n=6)
+        slots = be.init_slots(batch=2, max_len=16)
+        slots = be.write_slot_state(slots, snap, 1)
+        tok = jnp.asarray([0, 3], jnp.int32)
+        lg, _ = be.decode_step(params, slots, tok,
+                               jnp.full((2,), 6, jnp.int32))
+        lg1, _ = be.decode_step(params, snap,
+                                jnp.asarray([3], jnp.int32),
+                                jnp.full((1,), 6, jnp.int32))
+        # across batch extents XLA may pick different (equally valid)
+        # kernels — last-bit tolerance, not bits (the same caveat
+        # documented on lm.prefill_varlen's length-1 rows)
+        np.testing.assert_allclose(np.asarray(lg[1:], np.float32),
+                                   np.asarray(lg1, np.float32),
+                                   rtol=1e-5, atol=1e-5)

@@ -707,3 +707,162 @@ class TestDecodeNumerics:
         # cpu + tpu still take the kernel path
         monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
         assert A._use_fused_decode(cfg) is True
+
+
+_FLEET_GROUPS = {}
+
+
+def _fleet_groups(backends):
+    """(params, cfg) per fleet backend, cached across the class — the
+    demo configs share vocab/d_model so one workload feeds all groups."""
+    from repro.serving import fleet_demo_config
+    for i, name in enumerate(backends):
+        if name not in _FLEET_GROUPS:
+            cfg = fleet_demo_config(name)
+            _FLEET_GROUPS[name] = (
+                lm.init_params(jax.random.PRNGKey(i), cfg), cfg)
+    return {name: _FLEET_GROUPS[name] for name in backends}
+
+
+class TestFleet:
+    """Tentpole acceptance: a heterogeneous fleet — linear + softmax +
+    mamba2 slot groups behind ONE admission queue — yields tokens BIT-
+    IDENTICAL to three homogeneous engines fed the same per-group
+    submission sequences: in steady state, under priority preemption,
+    and under deadline eviction. Each group compiles exactly one decode-
+    segment program (the deterministic dispatch-count CI gates)."""
+
+    BACKENDS = ("linear", "softmax", "mamba2")
+
+    def _jobs(self, groups, n=9, seed=3, gens=(6, 9, 4), extra=None):
+        """Round-robin jobs across backends; ``extra[i]`` merges into
+        job i's submit kwargs."""
+        rng = np.random.default_rng(seed)
+        names = list(groups)
+        jobs = []
+        for i in range(n):
+            name = names[i % len(names)]
+            vocab = groups[name][1].vocab_size
+            prompt = rng.integers(0, vocab, size=6,
+                                  dtype=np.int64).astype(np.int32)
+            kw = dict(arrival=float(i) * 0.5)
+            kw.update((extra or {}).get(i, {}))
+            jobs.append((name, prompt, gens[i % len(gens)], kw))
+        return jobs
+
+    def _run_fleet_and_homogeneous(self, groups, jobs, n_slots=2,
+                                   **fleet_kw):
+        from repro.serving import FleetEngine
+        fleet = FleetEngine(groups, n_slots=n_slots, segment_len=4,
+                            max_len=48, **fleet_kw)
+        for name, prompt, gen, kw in jobs:
+            fleet.submit(prompt, gen, backend=name, **kw)
+        fleet_comps = fleet.run("continuous")
+        assert len(fleet_comps) == len(jobs)
+
+        homogeneous = {}
+        for name in groups:
+            params, cfg = groups[name]
+            eng = DecodeEngine(params, cfg, n_slots=n_slots,
+                               segment_len=4, max_len=48)
+            for jname, prompt, gen, kw in jobs:
+                if jname == name:
+                    eng.submit(prompt, gen, **kw)
+            homogeneous[name] = (eng, eng.run("continuous"))
+
+        # fleet uids are submission-ordered, so per-group order matches
+        per_group = {name: [c for (jname, *_), c in zip(jobs,
+                                                        fleet_comps)
+                            if jname == name] for name in groups}
+        for name in groups:
+            solo = homogeneous[name][1]
+            assert len(solo) == len(per_group[name])
+            for cf, ch in zip(per_group[name], solo):
+                assert cf.status == ch.status, (name, cf, ch)
+                np.testing.assert_array_equal(cf.tokens, ch.tokens)
+        return fleet, homogeneous
+
+    def test_mixed_equals_homogeneous(self):
+        groups = _fleet_groups(self.BACKENDS)
+        jobs = self._jobs(groups)
+        fleet, _ = self._run_fleet_and_homogeneous(groups, jobs)
+        assert all(c.status == "ok" for c in fleet.completions())
+        # one compiled decode-segment program per backend — serving a
+        # mix never cross-compiles another family's program
+        assert fleet.compiled_segment_programs() == {
+            name: 1 for name in self.BACKENDS}
+        stats = fleet.stats()
+        assert stats["fleet_shed"] == 0
+        assert not stats["groups"]["mamba2"]["fixed_size_state"] \
+            is stats["groups"]["softmax"]["fixed_size_state"]
+
+    def test_mixed_under_preemption(self):
+        """A saturated pool in every group + a late high-priority
+        arrival per group: the preempt/resume dance happens inside each
+        group exactly as it would homogeneously."""
+        groups = _fleet_groups(self.BACKENDS)
+        # jobs 0-5 saturate (2 slots/group); 6-8 arrive late at high
+        # priority, one per group
+        extra = {i: dict(arrival=8.0, priority=5) for i in (6, 7, 8)}
+        jobs = self._jobs(groups, n=9, gens=(12, 12, 8), extra=extra)
+        fleet, homogeneous = self._run_fleet_and_homogeneous(groups,
+                                                             jobs)
+        for name, (eng, _) in homogeneous.items():
+            grp = fleet.groups[name]
+            assert grp.stats.preemptions == eng.stats.preemptions
+            assert grp.stats.resumes == grp.stats.preemptions
+        assert sum(g.stats.preemptions
+                   for g in fleet.groups.values()) >= 1
+
+    def test_mixed_under_deadline_eviction(self):
+        """Per-group single slot: job 0 of each group hogs it, jobs 3-5
+        carry queue deadlines that trip — same completions (status
+        'deadline', same partial tokens) as the homogeneous engines."""
+        groups = _fleet_groups(self.BACKENDS)
+        extra = {i: dict(arrival=0.0, deadline_s=4.0) for i in (3, 4, 5)}
+        jobs = self._jobs(groups, n=6, gens=(20, 20, 20), extra=extra)
+        for i in range(3):
+            jobs[i][3]["arrival"] = 0.0
+        fleet, _ = self._run_fleet_and_homogeneous(groups, jobs,
+                                                   n_slots=1)
+        statuses = [c.status for c in fleet.completions()]
+        assert statuses[:3] == ["ok"] * 3
+        assert statuses[3:] == ["deadline"] * 3
+        assert sum(g.stats.deadline_evictions
+                   for g in fleet.groups.values()) == 3
+
+    def test_fleet_queue_cross_group_shed(self):
+        """The FLEET-level bounded queue: under evict_lowest a high-
+        priority arrival in one group evicts the lowest-priority queued
+        request from ANOTHER group; under reject_new the arrival itself
+        is shed into its own group's completions."""
+        from repro.serving import FleetEngine
+        groups = _fleet_groups(self.BACKENDS)
+        jobs = self._jobs(groups, n=2)          # linear + softmax
+        for policy, shed_idx in (("evict_lowest", 1), ("reject_new", 2)):
+            fleet = FleetEngine(groups, n_slots=1, segment_len=4,
+                                max_len=48, max_queue=2,
+                                shed_policy=policy)
+            for name, prompt, gen, kw in jobs:
+                fleet.submit(prompt, gen, backend=name, **kw)
+            u = fleet.submit(jobs[0][1], 4, backend="mamba2",
+                             priority=3, arrival=1.0)
+            comps = fleet.run("continuous")
+            assert fleet.fleet_shed == 1
+            assert [c.status for c in comps].count("shed") == 1
+            assert comps[shed_idx].status == "shed"
+            if policy == "evict_lowest":
+                # the high-priority arrival displaced a queued request
+                # from a DIFFERENT group and itself ran to completion
+                assert fleet.backend_of(u) == "mamba2"
+                assert comps[2].status == "ok"
+
+    def test_unknown_backend_rejected_atomically(self):
+        from repro.serving import FleetEngine
+        groups = _fleet_groups(("linear",))
+        fleet = FleetEngine(groups, n_slots=1, segment_len=4,
+                            max_len=48)
+        with pytest.raises(KeyError, match="unknown backend"):
+            fleet.submit(np.array([1, 2, 3], np.int32), 4,
+                         backend="softmax")
+        assert fleet._next_uid == 0 and not fleet.has_work()
