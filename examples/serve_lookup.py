@@ -6,6 +6,11 @@ GRU (the paper's encoder), compressed into a DocumentStore, persisted,
 reloaded, and hit with batched query streams — measuring queries/second
 against the softmax baseline that must keep and rescan all hidden states.
 
+The load sweep issues ``m`` queries PER DOCUMENT on both sides — one
+(N_DOCS, m, K) batch through one dispatch — so each row really measures
+an m× heavier wave (an earlier version looped over m but never applied
+it, timing the identical single-query batch twice).
+
 Run:  PYTHONPATH=src python examples/serve_lookup.py
 """
 
@@ -20,54 +25,69 @@ from repro.core import DocumentState, DocumentStore
 from repro.core.softmax_attention import softmax_lookup
 from repro.qa.gru import gru_params, gru_scan
 
-key = jax.random.PRNGKey(0)
-N_DOCS, DOC_LEN, VOCAB, K = 24, 750, 512, 100
 
-# --- offline: encode the corpus once ---------------------------------------
-embed = jax.random.normal(key, (VOCAB, K)) * 0.1
-enc = gru_params(jax.random.fold_in(key, 1), K, K)
-docs = jax.random.randint(jax.random.fold_in(key, 2),
-                          (N_DOCS, DOC_LEN), 0, VOCAB)
+def main(n_docs: int = 24, doc_len: int = 750, vocab: int = 512,
+         k: int = 100, loads=(1, 64), iters: int = 50):
+    key = jax.random.PRNGKey(0)
 
-t0 = time.perf_counter()
-hs, _ = jax.jit(lambda d: gru_scan(enc, jnp.take(embed, d, axis=0)))(docs)
-store = DocumentStore()
-for i in range(N_DOCS):
-    store.add(f"doc{i}", DocumentState.from_hidden_states(hs[i]))
-print(f"encoded {N_DOCS} docs of {DOC_LEN} tokens in "
-      f"{time.perf_counter()-t0:.2f}s")
-print(f"store: {store.nbytes/2**20:.2f} MiB  "
-      f"(raw hidden states: {hs.nbytes/2**20:.2f} MiB — "
-      f"{hs.nbytes/store.nbytes:.1f}× larger)")
+    # --- offline: encode the corpus once ---------------------------------
+    embed = jax.random.normal(key, (vocab, k)) * 0.1
+    enc = gru_params(jax.random.fold_in(key, 1), k, k)
+    docs = jax.random.randint(jax.random.fold_in(key, 2),
+                              (n_docs, doc_len), 0, vocab)
 
-# --- persistence (what a serving fleet ships around) ------------------------
-path = os.path.join(tempfile.mkdtemp(), "store.npz")
-store.save(path)
-store = DocumentStore.load(path)
-print(f"persisted + reloaded {len(store)} states from {path}")
-
-# --- online: query storm -----------------------------------------------------
-ids = [f"doc{i % N_DOCS}" for i in range(N_DOCS)]
-for m in (1, 64):
-    queries = jax.random.normal(jax.random.fold_in(key, 3 + m),
-                                (N_DOCS, K))
-    store.batched_lookup(ids, queries).block_until_ready()
     t0 = time.perf_counter()
-    iters = 50
-    for _ in range(iters):
-        out = store.batched_lookup(ids, queries)
-    out.block_until_ready()
-    dt = (time.perf_counter() - t0) / iters
-    qps_lin = N_DOCS / dt
+    hs, _ = jax.jit(lambda d: gru_scan(enc, jnp.take(embed, d, axis=0)))(
+        docs)
+    store = DocumentStore()
+    for i in range(n_docs):
+        store.add(f"doc{i}", DocumentState.from_hidden_states(hs[i]))
+    print(f"encoded {n_docs} docs of {doc_len} tokens in "
+          f"{time.perf_counter()-t0:.2f}s")
+    print(f"store: {store.nbytes/2**20:.2f} MiB  "
+          f"(raw hidden states: {hs.nbytes/2**20:.2f} MiB — "
+          f"{hs.nbytes/store.nbytes:.1f}× larger)")
 
+    # --- persistence (what a serving fleet ships around) -----------------
+    path = os.path.join(tempfile.mkdtemp(), "store.npz")
+    store.save(path)
+    store = DocumentStore.load(path)
+    print(f"persisted + reloaded {len(store)} states from {path}")
+
+    # --- online: query storm ---------------------------------------------
+    ids = [f"doc{i % n_docs}" for i in range(n_docs)]
     soft = jax.jit(softmax_lookup)
-    soft(hs, queries[:, None, :]).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = soft(hs, queries[:, None, :])
-    out.block_until_ready()
-    dt_s = (time.perf_counter() - t0) / iters
-    print(f"load {m:3d}: linear {qps_lin:9.0f} q/s   "
-          f"softmax {N_DOCS/dt_s:9.0f} q/s   "
-          f"speedup {dt_s/dt:5.1f}×")
-print("(speedup grows with document length n — the O(k²) vs O(nk) claim)")
+    rows = []
+    for m in loads:
+        # m queries PER document: (N_DOCS, m, K) through ONE dispatch
+        queries = jax.random.normal(jax.random.fold_in(key, 3 + m),
+                                    (n_docs, m, k))
+        store.batched_lookup(ids, queries).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = store.batched_lookup(ids, queries)
+        out.block_until_ready()
+        dt = (time.perf_counter() - t0) / iters
+        qps_lin = n_docs * m / dt
+
+        soft(hs, queries).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = soft(hs, queries)
+        out.block_until_ready()
+        dt_s = (time.perf_counter() - t0) / iters
+        qps_soft = n_docs * m / dt_s
+        rows.append({"m": m, "queries": n_docs * m,
+                     "linear_qps": qps_lin, "softmax_qps": qps_soft,
+                     "speedup": dt_s / dt})
+        print(f"load {m:3d}: {n_docs * m:5d} queries/wave   "
+              f"linear {qps_lin:9.0f} q/s   "
+              f"softmax {qps_soft:9.0f} q/s   "
+              f"speedup {dt_s/dt:5.1f}×")
+    print("(speedup grows with document length n — "
+          "the O(k²) vs O(nk) claim)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ information-retrieval scenario.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import os
 from typing import Dict, Iterable, Optional
 
@@ -86,15 +87,25 @@ class DocumentState:
 
     def lookup(self, q: Array, normalize: bool = False,
                eps: float = 1e-6) -> Array:
-        """R(D,Q) = Cq — O(k²) regardless of document length."""
+        """R(D,Q) = Cq — O(k²) regardless of document length.
+
+        ``normalize=True`` requires the state to carry the key-sum
+        normaliser ``z`` (built with ``with_normalizer=True``); a state
+        without one raises instead of silently returning the
+        unnormalised product as if it were normalised.
+        """
+        if normalize and self.z is None:
+            raise ValueError(
+                "lookup(normalize=True) on a DocumentState without a "
+                "normalizer: encode with with_normalizer=True (z is None)")
         if q.ndim == self.c.ndim - 1:
             out = jnp.einsum("...kl,...l->...k", self.c, q)
-            if normalize and self.z is not None:
+            if normalize:
                 denom = jnp.einsum("...k,...k->...", self.z, q)
                 out = out / safe_denom(denom, eps)[..., None]
             return out
         out = jnp.einsum("...kl,...ml->...mk", self.c, q)
-        if normalize and self.z is not None:
+        if normalize:
             denom = jnp.einsum("...k,...mk->...m", self.z, q)
             out = out / safe_denom(denom, eps)[..., None]
         return out
@@ -116,11 +127,16 @@ class DocumentStore:
     stacked (N, k, k) tensor + jitted gather-lookup, so a query costs one
     device dispatch — not a host-side restack (which would hide the
     paper's O(k²) advantage behind Python overhead).
+    ``lookup_dispatches`` counts the jitted launches, so tests and
+    benchmarks can assert the one-dispatch-per-query-wave contract
+    (normalised lookups included — the normaliser is folded into the
+    same jitted program, never a host-side epilogue).
     """
 
     def __init__(self) -> None:
         self._docs: Dict[str, DocumentState] = {}
         self._stack_cache = None   # (ids->row, (N,k,k) C, (N,k) z|None)
+        self.lookup_dispatches = 0
 
     def __len__(self) -> int:
         return len(self._docs)
@@ -150,49 +166,88 @@ class DocumentStore:
         return self._stack_cache
 
     @staticmethod
-    @jax.jit
-    def _lookup_rows(cs: Array, rows: Array, queries: Array) -> Array:
-        return jnp.einsum("bkl,bl->bk", cs[rows], queries)
+    @functools.partial(jax.jit, static_argnames=("normalize",))
+    def _lookup_rows(cs: Array, zs: Optional[Array], rows: Array,
+                     queries: Array, *, normalize: bool = False) -> Array:
+        # gather + contract + (optional) normalise in ONE jitted program
+        # — the normaliser used to run as a host-side einsum epilogue,
+        # breaking the documented one-dispatch contract
+        out = jnp.einsum("bkl,b...l->b...k", cs[rows], queries)
+        if normalize:
+            denom = jnp.einsum("bk,b...k->b...", zs[rows], queries)
+            out = out / safe_denom(denom)[..., None]
+        return out
 
     def batched_lookup(self, doc_ids, queries: Array,
                        normalize: bool = False) -> Array:
-        """Answer queries[i] against doc_ids[i] in one jitted dispatch."""
+        """Answer queries[i] against doc_ids[i] in one jitted dispatch.
+
+        ``queries``: (B, k) one query per document, or (B, m, k) for m
+        queries each. ``normalize=True`` requires every stored state to
+        carry a normaliser, and runs inside the same single dispatch.
+        """
         rows, cs, zs = self._stacked()
+        if normalize and zs is None:
+            raise ValueError(
+                "batched_lookup(normalize=True) but not every stored "
+                "DocumentState carries a normalizer (z is None); encode "
+                "with with_normalizer=True")
         idx = jnp.asarray([rows[d] for d in doc_ids], jnp.int32)
-        out = self._lookup_rows(cs, idx, queries)
-        if normalize and zs is not None:
-            denom = jnp.einsum("bk,bk->b", zs[idx], queries)
-            out = out / safe_denom(denom)[..., None]
-        return out
+        self.lookup_dispatches += 1
+        return self._lookup_rows(cs, zs if normalize else None, idx,
+                                 queries, normalize=normalize)
 
     @property
     def nbytes(self) -> int:
         return sum(s.nbytes for s in self._docs.values())
 
     def save(self, path: str) -> None:
-        arrays = {}
-        for doc_id, st in self._docs.items():
-            arrays[f"{doc_id}::c"] = np.asarray(st.c)
-            arrays[f"{doc_id}::n"] = np.asarray(st.n_tokens)
+        """Persist atomically. Doc ids are stored as ONE indexed string
+        array and per-doc payloads under row-numbered keys — ids never
+        become npz member names, so an id containing the old ``::``
+        separator (or any other string) round-trips exactly."""
+        ids = list(self._docs)
+        arrays = {"__ids__": np.asarray(ids)}
+        for i, doc_id in enumerate(ids):
+            st = self._docs[doc_id]
+            arrays[f"c_{i:06d}"] = np.asarray(st.c)
+            arrays[f"n_{i:06d}"] = np.asarray(st.n_tokens)
             if st.z is not None:
-                arrays[f"{doc_id}::z"] = np.asarray(st.z)
+                arrays[f"z_{i:06d}"] = np.asarray(st.z)
         tmp = path + ".tmp.npz"
         np.savez(tmp, **arrays)
         os.replace(tmp, path)
 
     @classmethod
     def load(cls, path: str) -> "DocumentStore":
+        """Load a store saved by :meth:`save`. The archive is closed on
+        every exit path (``np.load`` returns an open zip handle — the
+        old code leaked one fd per load), and a malformed archive — not
+        this format, or missing a document's payload — raises
+        ``ValueError`` naming the path instead of half-loading."""
         store = cls()
-        data = np.load(path)
-        ids = {k.split("::")[0] for k in data.files}
-        for doc_id in ids:
-            z = data.get(f"{doc_id}::z")
-            store.add(
-                doc_id,
-                DocumentState(
-                    c=jnp.asarray(data[f"{doc_id}::c"]),
-                    z=None if z is None else jnp.asarray(z),
-                    n_tokens=int(data[f"{doc_id}::n"]),
-                ),
-            )
+        with np.load(path, allow_pickle=False) as data:
+            if "__ids__" not in data.files:
+                raise ValueError(
+                    f"{path!r} is not a DocumentStore archive "
+                    f"(missing '__ids__' index; members: "
+                    f"{sorted(data.files)[:8]})")
+            ids = [str(d) for d in data["__ids__"]]
+            for i, doc_id in enumerate(ids):
+                for member in (f"c_{i:06d}", f"n_{i:06d}"):
+                    if member not in data.files:
+                        raise ValueError(
+                            f"malformed DocumentStore archive {path!r}: "
+                            f"doc {doc_id!r} is missing member "
+                            f"{member!r}")
+                z_key = f"z_{i:06d}"
+                store.add(
+                    doc_id,
+                    DocumentState(
+                        c=jnp.asarray(data[f"c_{i:06d}"]),
+                        z=(jnp.asarray(data[z_key])
+                           if z_key in data.files else None),
+                        n_tokens=int(data[f"n_{i:06d}"]),
+                    ),
+                )
         return store

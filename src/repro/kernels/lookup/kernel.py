@@ -1,12 +1,22 @@
 """Pallas TPU kernel for the paper's fast lookup (serving hot path).
 
-Two fused ops:
+Three fused ops:
 
 * ``mass_lookup`` — answer M queries against a VMEM-resident k×k document
   state in one kernel launch: O = Q C. The state is loaded into VMEM once
   and reused across all M queries — the memory-traffic analogue of the
   paper's "encode once, query many" argument (HBM reads O(k²+Mk), not
   O(Mk²)).
+* ``mass_lookup_indexed`` — the batched-HETEROGENEOUS form the lookup
+  engine serves with: the document states live in one resident stacked
+  ``(N, k, k)`` store, and each row of the query wave names its own
+  document by index. The per-row index is a scalar-prefetch argument
+  (``pltpu.PrefetchScalarGridSpec``), so the grid DMAs exactly the k×k
+  state each row needs — queries against thousands of *different*
+  memories batch into ONE kernel launch because every memory is the
+  same shape (the paper's fixed-size-representation argument made
+  physical). Large query loads tile over M (``block_m``), reusing the
+  row's state across tiles from VMEM.
 * ``decode`` — fused rank-1 state update + lookup for one autoregressive
   step: S ← S + k vᵀ; o = Sᵀ q, with the state updated in place via
   input/output aliasing (no HBM round-trip of a second state copy).
@@ -17,6 +27,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _mass_lookup_kernel(c_ref, q_ref, o_ref):
@@ -42,6 +53,52 @@ def mass_lookup(c, q, *, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct((n, m, k), q.dtype),
         interpret=interpret,
     )(c, q)
+
+
+def _mass_lookup_indexed_kernel(rows_ref, c_ref, q_ref, o_ref):
+    # rows_ref is scalar-prefetched: the BlockSpec index_map has already
+    # used it to DMA store[rows[i]] into c_ref — the body is the same
+    # q-tile × state matmul as the homogeneous kernel.
+    c = c_ref[0].astype(jnp.float32)        # (K, K)
+    q = q_ref[0].astype(jnp.float32)        # (BM, K)
+    o_ref[0] = jnp.dot(q, c.T, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+def mass_lookup_indexed(store, rows, q, *, block_m: int | None = None,
+                        interpret: bool = False):
+    """Heterogeneous lookup wave: ``store``: (N, K, K) resident document
+    states; ``rows``: (B,) int32 per-row document indices; ``q``:
+    (B, M, K) queries -> (B, M, K).
+
+    Row i of the wave answers its M queries against ``store[rows[i]]``
+    — one launch serves a wave that mixes arbitrary documents. M must be
+    a multiple of ``block_m`` (the ops wrapper pads); each (row, M-tile)
+    grid cell re-reads only the (block_m, K) query tile, the row's k×k
+    state being the same block across its tiles.
+    """
+    n, k, _ = store.shape
+    b, m, _ = q.shape
+    if block_m is None or block_m > m:
+        block_m = m
+    assert m % block_m == 0, (m, block_m)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, m // block_m),
+        in_specs=[
+            pl.BlockSpec((1, k, k), lambda i, j, rows: (rows[i], 0, 0)),
+            pl.BlockSpec((1, block_m, k), lambda i, j, rows: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, k),
+                               lambda i, j, rows: (i, j, 0)),
+    )
+    return pl.pallas_call(
+        _mass_lookup_indexed_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, m, k), q.dtype),
+        interpret=interpret,
+    )(rows, store, q)
 
 
 def _decode_kernel(s_ref, q_ref, k_ref, v_ref, o_ref, s_out_ref):

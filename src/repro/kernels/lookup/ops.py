@@ -23,6 +23,24 @@ def mass_lookup(c: Array, q: Array, *, interpret: bool | None = None
     return _k.mass_lookup(c, q, interpret=interpret)
 
 
+def mass_lookup_indexed(store: Array, rows: Array, q: Array,
+                        *, block_m: int | None = None,
+                        interpret: bool | None = None) -> Array:
+    """Answer a heterogeneous query wave in ONE launch: ``q``: (B, M, K)
+    with per-row document indices ``rows``: (B,) into the resident
+    ``store``: (N, K, K). Pads M up to a ``block_m`` multiple (padded
+    query rows read the same state and are sliced off)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    b, m, k = q.shape
+    if block_m is not None and m % block_m:
+        pad = -m % block_m
+        q = jax.numpy.pad(q, ((0, 0), (0, pad), (0, 0)))
+    out = _k.mass_lookup_indexed(store, rows, q, block_m=block_m,
+                                 interpret=interpret)
+    return out[:, :m]
+
+
 def fused_decode(s: Array, q: Array, k: Array, v: Array,
                  *, interpret: bool | None = None) -> Tuple[Array, Array]:
     """One fused O(k²) decode step (paper's fast lookup at generation)."""

@@ -24,6 +24,22 @@ def mass_lookup_ref(c: Array, q: Array, z: Optional[Array] = None,
     return out.astype(q.dtype)
 
 
+def mass_lookup_indexed_ref(store: Array, rows: Array, q: Array,
+                            z: Optional[Array] = None,
+                            eps: float = 1e-6) -> Array:
+    """Heterogeneous wave oracle: row i answers its queries against
+    ``store[rows[i]]``. store: (N,K,K); rows: (B,); q: (B,M,K) ->
+    (B,M,K). ``z``: (N,K) optional key-sum normalisers (gathered by the
+    same rows)."""
+    out = jnp.einsum("bkl,bml->bmk", store[rows].astype(jnp.float32),
+                     q.astype(jnp.float32))
+    if z is not None:
+        denom = jnp.einsum("bk,bmk->bm", z[rows].astype(jnp.float32),
+                           q.astype(jnp.float32))
+        out = out / safe_denom(denom, eps)[..., None]
+    return out.astype(q.dtype)
+
+
 def decode_ref(s: Array, q: Array, k: Array, v: Array
                ) -> Tuple[Array, Array]:
     """Fused decode: S += k vᵀ; o = Sᵀ q. s: (N,Dk,Dv); q,k: (N,Dk);

@@ -50,6 +50,20 @@ Three modes:
 * ``retrieve`` — the §2.2 mass-query scenario: encode documents into the
   fixed-size DocumentStore once, then answer query streams at O(k²) each.
 
+* ``lookup`` — the memory-serving engine
+  (:class:`repro.serving.LookupEngine`): documents are GRU-encoded ONCE
+  in varlen batched ingest waves, pinned resident as one stacked
+  (N, k, k) store, and a query storm against arbitrary different
+  memories is served in bucket-padded waves — each wave ONE
+  ``mass_lookup_indexed`` kernel dispatch. ``--lookup-backend softmax``
+  serves the honest baseline (full hidden states resident, per-query
+  cost grows with --doc-len); ``--load PATH`` pins a persisted
+  DocumentStore instead of synthesising documents. Reuses the
+  bounded-queue knobs (``--max-queue``/``--shed-policy``).
+
+  PYTHONPATH=src python -m repro.launch.serve --mode lookup \
+      --n-docs 256 --doc-len 64 --n-queries 2048 --lookup-backend linear
+
   PYTHONPATH=src python -m repro.launch.serve --arch yi-34b --smoke \
       --backend linear --prompt-len 64 --gen-len 32 --batch 4
   PYTHONPATH=src python -m repro.launch.serve --mode stream --smoke \
@@ -377,10 +391,77 @@ def retrieve(args) -> int:
     return 0
 
 
+def lookup(args) -> int:
+    """Memory-serving: ingest once, pin resident, serve query waves."""
+    from repro.qa.gru import gru_params
+    from repro.serving import LookupEngine
+
+    k_dim, vocab, d_embed = 64, 1000, 32
+    root = jax.random.PRNGKey(args.seed)
+    k_embed, k_gru, k_query = (jax.random.fold_in(root, i)
+                               for i in range(3))
+    encoder = {"embed": jax.random.normal(k_embed, (vocab, d_embed)) * 0.1,
+               "gru": gru_params(k_gru, d_embed, k_dim)}
+    engine = LookupEngine(
+        encoder, backend=args.lookup_backend, wave_size=args.wave_size,
+        max_queue=getattr(args, "max_queue", None),
+        shed_policy=getattr(args, "shed_policy", "reject_new"))
+
+    rng = np.random.default_rng(args.seed)
+    if args.load:
+        from repro.core import DocumentStore
+        store = DocumentStore.load(args.load)
+        for doc_id in store.ids():
+            engine.pin(doc_id, store.get(doc_id))
+        print(f"pinned {len(engine)} persisted memories from {args.load}")
+    else:
+        for i in range(args.n_docs):
+            engine.ingest(f"doc{i}", rng.integers(0, vocab,
+                                                  size=args.doc_len))
+        engine.flush()
+    doc_ids = list(engine.rows())
+
+    queries = np.asarray(jax.random.normal(
+        k_query, (args.n_queries, k_dim), jnp.float32))
+    for i in range(args.n_queries):           # warm the wave programs
+        engine.submit(doc_ids[i % len(doc_ids)], queries[i])
+    engine.run()
+    warm = engine.stats.queries
+    for i in range(args.n_queries):
+        engine.submit(doc_ids[(i * 7) % len(doc_ids)], queries[i],
+                      priority=i % 3)
+    t0 = time.perf_counter()
+    engine.run()
+    dt = time.perf_counter() - t0
+
+    st = engine.stats
+    served = st.queries - warm
+    print(f"lookup backend={st.backend} "
+          f"fixed_size_memory={engine.backend.fixed_size_memory}")
+    print(f"memories: {st.documents} resident "
+          f"({st.ingest_waves} varlen ingest waves = "
+          f"{st.ingest_dispatches} dispatches, {st.pinned} pinned), "
+          f"{engine.resident_bytes/2**20:.2f} MiB")
+    print(f"serve: {served} queries in {dt:.3f} s "
+          f"({served/max(dt, 1e-9):.0f} lookups/s) — "
+          f"{st.waves} waves = {st.lookup_dispatches} dispatches "
+          f"({st.queries_per_wave:.1f} queries/wave, "
+          f"{st.multi_memory_waves} mixed-memory waves)")
+    if st.shed:
+        print(f"shed: {st.shed} (policy={engine.shed_policy})")
+    if getattr(args, "stats_json", None):
+        with open(args.stats_json, "w") as f:
+            f.write(st.to_json())
+        print(f"stats written to {args.stats_json}")
+    assert st.lookup_dispatches == st.waves, "one dispatch per wave"
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="generate",
-                    choices=["generate", "stream", "spec", "retrieve"])
+                    choices=["generate", "stream", "spec", "retrieve",
+                             "lookup"])
     ap.add_argument("--arch", default="yi-34b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--backend", default=None,
@@ -425,6 +506,23 @@ def main() -> int:
     ap.add_argument("--stats-json", default=None, metavar="PATH",
                     help="write EngineStats (counters + lifecycle/chaos"
                          " fields) to PATH as JSON")
+    # lookup mode (memory serving)
+    ap.add_argument("--n-docs", type=int, default=128,
+                    help="lookup mode: memories to ingest")
+    ap.add_argument("--doc-len", type=int, default=64,
+                    help="lookup mode: tokens per synthetic document")
+    ap.add_argument("--n-queries", type=int, default=1024,
+                    help="lookup mode: queries in the storm")
+    ap.add_argument("--wave-size", type=int, default=64,
+                    help="lookup mode: max requests per query wave")
+    ap.add_argument("--lookup-backend", default="linear",
+                    choices=["linear", "softmax"],
+                    help="fixed-size k×k memories through the indexed "
+                         "Pallas kernel vs the full-hidden-state "
+                         "softmax baseline")
+    ap.add_argument("--load", default=None, metavar="PATH",
+                    help="lookup mode: pin a persisted DocumentStore "
+                         "(.npz) instead of synthesising documents")
     # spec mode (speculative lookahead)
     ap.add_argument("--speculate-k", type=int, default=6,
                     help="draft tokens per verify round")
@@ -437,6 +535,8 @@ def main() -> int:
         return stream(args)
     if args.mode == "spec":
         return spec(args)
+    if args.mode == "lookup":
+        return lookup(args)
     return generate(args) if args.mode == "generate" else retrieve(args)
 
 

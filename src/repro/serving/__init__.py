@@ -22,6 +22,17 @@ from repro.serving.fleet import (  # noqa: F401
     FleetEngine,
     fleet_demo_config,
 )
+from repro.serving.lookup_engine import (  # noqa: F401
+    LinearLookupBackend,
+    LookupBackend,
+    LookupEngine,
+    LookupRequest,
+    LookupResult,
+    LookupStats,
+    SoftmaxLookupBackend,
+    get_lookup_backend,
+    register_lookup_backend,
+)
 from repro.serving.lifecycle import (  # noqa: F401
     SHED_POLICIES,
     STATUS_CANCELLED,

@@ -1,0 +1,643 @@
+"""Memory-serving lookup engine — the paper's extreme-query-load headline.
+
+PRs 2–7 built a *decode* engine; the paper's actual pitch (§2.2, §6) is
+cheaper than generation: serve attention *lookups* against documents
+that were encoded ONCE into fixed-size k×k states. This module is the
+serving mode for that scenario:
+
+* **Ingest once.** Documents arrive as token sequences and are encoded
+  by the paper's GRU encoder in bucket-padded varlen waves — ONE jitted
+  dispatch encodes a whole wave of different-length documents and
+  scatters their compressed states into the resident store *inside the
+  program* (the PR-4 batched-admission discipline applied to memories).
+  Per-row length masking keeps each document's state bit-identical to
+  encoding it alone: the GRU is causal, so padded-tail hidden states
+  exist but are masked out of the Σ h hᵀ compression.
+
+* **Pin thousands resident.** The store is one stacked ``(N, k, k)``
+  device tensor (plus ``(N, k)`` normalisers when enabled) with
+  capacity doubling — admission of memory number 10 000 is an O(k²)
+  row write, never a restack. Every memory is the same shape regardless
+  of document length; that is the paper's fixed-size-representation
+  claim, and it is exactly what lets query waves batch *across*
+  documents.
+
+* **Serve heterogeneous query waves.** Queued queries against arbitrary
+  different memories are flattened into ONE ``mass_lookup_indexed``
+  kernel launch (``kernels/lookup``): per-row document indices are
+  scalar-prefetched so each wave row DMAs only the k×k state it needs,
+  with M-query tiling for heavy per-document loads. Wave shapes are
+  power-of-2 bucketed, so the jit program count stays O(log wave_size ·
+  log max_m) under arbitrary traffic.
+
+The engine reuses the PR-7 seam shape — a :class:`LookupBackend` owns
+the memory layout while the engine stays a pure scheduler — and the
+PR-6 lifecycle vocabulary: bounded admission queue with
+``reject_new`` / ``evict_lowest`` shed policies, priority ordering, and
+a :class:`LookupStats` counter block (``to_json`` for benchmarks/CI).
+:class:`SoftmaxLookupBackend` is the honest baseline behind the same
+scheduler: it must keep every document's full ``(n, k)`` hidden-state
+matrix resident and rescan it per query, so its per-query cost and
+resident bytes grow with document length while the linear backend's are
+constant — the comparison ``benchmarks/mass_serving.py`` measures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.linear_attention import safe_denom
+from repro.core.state import DocumentState
+from repro.kernels.lookup import ops as lookup_ops
+from repro.qa.gru import gru_scan
+from repro.serving.engine import _pow2_ceil
+from repro.serving.lifecycle import SHED_POLICIES, STATUS_OK, STATUS_SHED
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# the backend seam (PR-7 applied to memories): engine = scheduler,
+# backend = memory layout
+# ---------------------------------------------------------------------------
+
+class LookupBackend:
+    """Memory-layout seam for the lookup engine.
+
+    A backend owns: the resident store layout (``init_store`` /
+    ``grow_store`` / ``write_rows``), the compression from varlen
+    hidden states to per-document payloads (``compress``, run inside
+    the engine's single ingest dispatch), and the batched heterogeneous
+    ``lookup_wave`` (ONE jitted dispatch per query wave). Capability
+    flags mirror the decode seam:
+
+    * ``fixed_size_memory`` — a document's resident bytes are O(k²)
+      regardless of its length (the paper's property; False for the
+      softmax baseline, whose store grows with the longest document).
+    * ``memory_bytes(n_tokens)`` — logical resident bytes for one
+      document of ``n_tokens`` (constant iff ``fixed_size_memory``).
+    """
+
+    name: str = "base"
+    fixed_size_memory: bool = True
+
+    def __init__(self, k: int, *, normalize: bool = False,
+                 dtype=jnp.float32):
+        self.k = k
+        self.normalize = normalize
+        self.dtype = dtype
+
+    def memory_bytes(self, n_tokens: int) -> int:
+        raise NotImplementedError
+
+    def init_store(self, capacity: int) -> Dict[str, Array]:
+        raise NotImplementedError
+
+    def grow_store(self, store, capacity: int, n_cap: int
+                   ) -> Dict[str, Array]:
+        raise NotImplementedError
+
+    def compress(self, h: Array, mask: Array) -> Dict[str, Array]:
+        """Varlen hidden states (B, W, k) + validity mask (B, W) → the
+        per-row payload ``write_rows`` scatters. Traced inside the
+        engine's ingest program."""
+        raise NotImplementedError
+
+    def payload_from_hidden(self, h: Array) -> Dict[str, Array]:
+        """Batch-1 payload from one document's exact-length hidden
+        states (the solo path the varlen ingest is bit-identical to)."""
+        ones = jnp.ones(h.shape[:-1], h.dtype)
+        return self.compress(h[None], ones[None])
+
+    def write_rows(self, store, rows: Array, payload) -> Dict[str, Array]:
+        """Scatter a wave of payload rows into the resident store
+        (traced inside the ingest program — one dispatch admits the
+        whole wave)."""
+        raise NotImplementedError
+
+    def lookup_wave(self, store, rows: Array, q: Array) -> Array:
+        """Answer q: (B, M, k) with per-row memory indices rows: (B,) —
+        the engine jits this; it must stay one fused program."""
+        raise NotImplementedError
+
+
+LOOKUP_BACKENDS: Dict[str, Type[LookupBackend]] = {}
+
+
+def register_lookup_backend(cls: Type[LookupBackend]
+                            ) -> Type[LookupBackend]:
+    assert cls.name not in LOOKUP_BACKENDS, f"duplicate {cls.name!r}"
+    LOOKUP_BACKENDS[cls.name] = cls
+    return cls
+
+
+def get_lookup_backend(name: str) -> Type[LookupBackend]:
+    if name not in LOOKUP_BACKENDS:
+        raise KeyError(f"unknown lookup backend {name!r}; registered: "
+                       f"{list(LOOKUP_BACKENDS)}")
+    return LOOKUP_BACKENDS[name]
+
+
+@register_lookup_backend
+class LinearLookupBackend(LookupBackend):
+    """The paper's fixed-size memory: one k×k state per document.
+
+    ``lookup_wave`` routes through the ``mass_lookup_indexed`` Pallas
+    kernel — per-row scalar-prefetched document indices, M-query
+    tiling — with the optional key-sum normaliser folded into the same
+    jitted program. ``use_kernel=None`` (default) picks the kernel on
+    accelerators and the bit-equivalent XLA gather-einsum on CPU, where
+    the Pallas path would run under the interpret emulator — orders of
+    magnitude slower and, at larger k, accumulation-ordered differently
+    from the solo lookup the engine promises bit-identity with.
+    """
+
+    name = "linear"
+    fixed_size_memory = True
+
+    def __init__(self, k: int, *, normalize: bool = False,
+                 dtype=jnp.float32, block_m: int = 128,
+                 use_kernel: Optional[bool] = None):
+        super().__init__(k, normalize=normalize, dtype=dtype)
+        self.block_m = block_m
+        if use_kernel is None:
+            use_kernel = jax.default_backend() != "cpu"
+        self.use_kernel = use_kernel
+
+    def memory_bytes(self, n_tokens: int) -> int:
+        itemsize = jnp.dtype(self.dtype).itemsize
+        n = self.k * self.k * itemsize
+        if self.normalize:
+            n += self.k * itemsize
+        return n
+
+    def init_store(self, capacity: int) -> Dict[str, Array]:
+        store = {"c": jnp.zeros((capacity, self.k, self.k), self.dtype)}
+        if self.normalize:
+            store["z"] = jnp.zeros((capacity, self.k), self.dtype)
+        return store
+
+    def grow_store(self, store, capacity: int, n_cap: int):
+        del n_cap  # fixed-size memories have no token axis to grow
+        pad = capacity - store["c"].shape[0]
+        return {k: jnp.pad(v, ((0, pad),) + ((0, 0),) * (v.ndim - 1))
+                for k, v in store.items()}
+
+    def compress(self, h: Array, mask: Array) -> Dict[str, Array]:
+        hm = h * mask[..., None].astype(h.dtype)
+        payload = {"c": jnp.einsum("bnk,bnl->bkl", hm, hm)}
+        if self.normalize:
+            payload["z"] = jnp.sum(hm, axis=1)
+        return payload
+
+    def write_rows(self, store, rows, payload):
+        return {k: store[k].at[rows].set(payload[k].astype(store[k].dtype))
+                for k in store}
+
+    def lookup_wave(self, store, rows, q):
+        if self.use_kernel:
+            block_m = min(self.block_m, q.shape[1])
+            out = lookup_ops.mass_lookup_indexed(store["c"], rows, q,
+                                                 block_m=block_m)
+        else:
+            out = jnp.einsum("bkl,bml->bmk", store["c"][rows], q)
+        if self.normalize:
+            denom = jnp.einsum("bk,bmk->bm", store["z"][rows], q)
+            out = out / safe_denom(denom)[..., None]
+        return out
+
+
+@register_lookup_backend
+class SoftmaxLookupBackend(LookupBackend):
+    """The honest baseline: softmax attention over the full hidden-state
+    matrix, R(D,Q) = Hᵀ softmax(HQᵀ) (paper §2.1). Resident bytes and
+    per-query FLOPs are O(n·k) in document length — the store's token
+    axis grows to the longest document served."""
+
+    name = "softmax"
+    fixed_size_memory = False
+
+    def memory_bytes(self, n_tokens: int) -> int:
+        return n_tokens * self.k * jnp.dtype(self.dtype).itemsize
+
+    def init_store(self, capacity: int) -> Dict[str, Array]:
+        return {"h": jnp.zeros((capacity, 1, self.k), self.dtype),
+                "len": jnp.zeros((capacity,), jnp.int32)}
+
+    def grow_store(self, store, capacity: int, n_cap: int):
+        pad_rows = capacity - store["h"].shape[0]
+        pad_n = n_cap - store["h"].shape[1]
+        return {"h": jnp.pad(store["h"],
+                             ((0, pad_rows), (0, pad_n), (0, 0))),
+                "len": jnp.pad(store["len"], ((0, pad_rows),))}
+
+    def compress(self, h: Array, mask: Array) -> Dict[str, Array]:
+        return {"h": h * mask[..., None].astype(h.dtype),
+                "len": jnp.sum(mask.astype(jnp.int32), axis=1)}
+
+    def write_rows(self, store, rows, payload):
+        n_cap = store["h"].shape[1]
+        h = payload["h"].astype(store["h"].dtype)
+        h = jnp.pad(h, ((0, 0), (0, n_cap - h.shape[1]), (0, 0)))
+        return {"h": store["h"].at[rows].set(h),
+                "len": store["len"].at[rows].set(payload["len"])}
+
+    def lookup_wave(self, store, rows, q):
+        h = store["h"][rows]                       # (B, n_cap, k)
+        lens = store["len"][rows]
+        scores = jnp.einsum("bnk,bmk->bmn", h, q).astype(jnp.float32)
+        valid = (jnp.arange(h.shape[1]) < lens[:, None])[:, None, :]
+        scores = jnp.where(valid, scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bmn,bnk->bmk", probs, h.astype(jnp.float32))
+        return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# requests / results / stats
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LookupRequest:
+    """M queries against one resident memory. ``priority`` orders waves
+    (higher first, FIFO within a priority) and arms ``evict_lowest``
+    shedding."""
+    uid: int
+    doc_id: str
+    queries: np.ndarray            # (M, k)
+    priority: int = 0
+
+
+@dataclasses.dataclass
+class LookupResult:
+    uid: int
+    doc_id: str
+    answers: Optional[np.ndarray]  # (M, k); None when shed
+    status: str = STATUS_OK        # ok | shed
+    wave: int = -1                 # wave that served it (-1 = none)
+
+
+@dataclasses.dataclass
+class LookupStats:
+    """Counters for the memory-serving mode (the machine-readable form
+    ``benchmarks/mass_serving.py`` and the CI claim greps consume)."""
+    backend: str = ""
+    # ingest
+    documents: int = 0            # resident memories
+    pinned: int = 0               # admitted pre-encoded (no encode wave)
+    ingest_waves: int = 0         # varlen batched encode waves
+    ingest_dispatches: int = 0    # jitted ingest launches (== waves)
+    encode_jit_misses: int = 0    # distinct ingest program shapes
+    store_grows: int = 0          # capacity doublings
+    resident_state_bytes: int = 0  # logical bytes of all resident memories
+    # serving
+    requests: int = 0             # lookup requests answered
+    queries: int = 0              # individual query vectors answered
+    waves: int = 0                # query waves executed
+    lookup_dispatches: int = 0    # jitted lookup launches (== waves)
+    lookup_jit_misses: int = 0    # distinct wave program shapes
+    multi_memory_waves: int = 0   # waves mixing >1 distinct memory
+    shed: int = 0                 # bounded-queue rejections
+
+    @property
+    def queries_per_wave(self) -> float:
+        return self.queries / self.waves if self.waves else 0.0
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["queries_per_wave"] = self.queries_per_wave
+        return d
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class LookupEngine:
+    """Memory-serving mode: ingest documents once, pin their fixed-size
+    states resident, answer heterogeneous query waves at high QPS.
+
+    ``encoder`` is the paper's document encoder — a dict with ``embed``
+    (V, d) token embeddings and ``gru`` (``qa.gru.gru_params``) — and
+    may be None for stores fed only via :meth:`pin` /
+    :meth:`ingest_hidden`. ``backend`` picks the memory layout:
+    ``"linear"`` (fixed-size k×k states through the
+    ``mass_lookup_indexed`` kernel) or ``"softmax"`` (the full
+    hidden-state baseline whose cost grows with document length).
+
+    Scheduling mirrors the decode engine's lifecycle: ``max_queue``
+    bounds the query queue, ``shed_policy`` picks the overload victim
+    (``"reject_new"`` sheds the arrival, ``"evict_lowest"`` sheds the
+    strictly-lowest-priority queued request), and every submitted
+    request resolves to a :class:`LookupResult` — shed ones included.
+
+    All device work is shape-bucketed: ingest waves pad documents to
+    power-of-2 widths, query waves pad (rows, queries-per-row) to
+    power-of-2 buckets, so sustained heterogeneous traffic compiles
+    O(log) distinct programs, each wave ONE dispatch.
+    """
+
+    def __init__(self, encoder: Optional[Dict[str, Any]] = None, *,
+                 k: Optional[int] = None,
+                 backend: str = "linear",
+                 normalize: bool = False,
+                 dtype=jnp.float32,
+                 capacity: int = 64,
+                 wave_size: int = 64,
+                 ingest_wave: int = 64,
+                 max_queue: Optional[int] = None,
+                 shed_policy: str = "reject_new"):
+        if encoder is None and k is None:
+            raise ValueError("need an encoder or an explicit k")
+        if encoder is not None:
+            enc_k = encoder["gru"]["w_h"].shape[0]
+            if k is not None and k != enc_k:
+                raise ValueError(f"k={k} != encoder hidden size {enc_k}")
+            k = enc_k
+        assert shed_policy in SHED_POLICIES, shed_policy
+        assert max_queue is None or max_queue >= 1, max_queue
+        self.encoder = encoder
+        self.k = k
+        self.backend = get_lookup_backend(backend)(k, normalize=normalize,
+                                                   dtype=dtype)
+        self.normalize = normalize
+        self.wave_size = max(1, wave_size)
+        self.ingest_wave = max(1, ingest_wave)
+        self.max_queue = max_queue
+        self.shed_policy = shed_policy
+
+        self._capacity = _pow2_ceil(max(2, capacity))
+        self._n_cap = 1                       # softmax token-axis bucket
+        self.store = self.backend.init_store(self._capacity)
+        self._row_of: Dict[str, int] = {}
+        self._len_of: Dict[str, int] = {}
+        self._pending: List[Tuple[str, np.ndarray]] = []
+        self._queue: List[LookupRequest] = []
+        self._results: Dict[int, LookupResult] = {}
+        self._next_uid = 0
+        self._seen_shapes: set = set()
+        self.stats = LookupStats(backend=self.backend.name)
+
+        be = self.backend
+
+        @jax.jit
+        def _ingest(store, embed, gru, tokens, lens, rows):
+            # encode + compress + scatter in ONE program: the varlen
+            # batched ingest. Per-row masking makes each row's payload
+            # bit-identical to a solo encode (causal GRU: padded-tail
+            # states exist but are masked out of the compression).
+            x = jnp.take(embed, tokens, axis=0)
+            hs, _ = gru_scan(gru, x)
+            mask = jnp.arange(tokens.shape[1])[None, :] < lens[:, None]
+            return be.write_rows(store, rows, be.compress(hs, mask))
+
+        @jax.jit
+        def _write(store, rows, payload):
+            return be.write_rows(store, rows, payload)
+
+        @jax.jit
+        def _wave(store, rows, q):
+            return be.lookup_wave(store, rows, q)
+
+        self._ingest_fn = _ingest
+        self._write_fn = _write
+        self._wave_fn = _wave
+
+    # -- bookkeeping ---------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._row_of)
+
+    def __contains__(self, doc_id: str) -> bool:
+        return doc_id in self._row_of
+
+    def rows(self) -> Dict[str, int]:
+        return dict(self._row_of)
+
+    def _miss(self, kind: str, *shape) -> bool:
+        key = (kind,) + shape
+        if key in self._seen_shapes:
+            return False
+        self._seen_shapes.add(key)
+        return True
+
+    def _assign_row(self, doc_id: str, n_tokens: int) -> int:
+        row = self._row_of.get(doc_id)
+        if row is None:
+            row = len(self._row_of)
+            self._row_of[doc_id] = row
+            self.stats.documents += 1
+        else:
+            self.stats.resident_state_bytes -= self.backend.memory_bytes(
+                self._len_of[doc_id])
+        self._len_of[doc_id] = n_tokens
+        self.stats.resident_state_bytes += self.backend.memory_bytes(
+            n_tokens)
+        return row
+
+    def _ensure_capacity(self, n_rows: int, n_tokens: int) -> None:
+        cap = self._capacity
+        while n_rows > cap:
+            cap *= 2
+        n_cap = self._n_cap
+        if not self.backend.fixed_size_memory:
+            n_cap = max(n_cap, _pow2_ceil(max(1, n_tokens)))
+        if cap != self._capacity or n_cap != self._n_cap:
+            self.store = self.backend.grow_store(self.store, cap, n_cap)
+            self._capacity, self._n_cap = cap, n_cap
+            self.stats.store_grows += 1
+
+    # -- ingest --------------------------------------------------------
+
+    def ingest(self, doc_id: str, tokens) -> None:
+        """Queue a document (token ids) for the next varlen batched
+        encode wave. Requires an encoder."""
+        if self.encoder is None:
+            raise ValueError("ingest(tokens) needs an encoder; use "
+                             "pin()/ingest_hidden() on encoder-less "
+                             "engines")
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        if tokens.size == 0:
+            raise ValueError(f"document {doc_id!r} is empty")
+        self._pending.append((doc_id, tokens))
+
+    def flush(self) -> None:
+        """Encode every pending document: waves of ≤ ``ingest_wave``
+        docs, each wave ONE bucket-padded jitted dispatch that encodes,
+        compresses and scatters into the resident store."""
+        while self._pending:
+            batch = self._pending[:self.ingest_wave]
+            self._pending = self._pending[self.ingest_wave:]
+            lens = np.asarray([t.size for _, t in batch], np.int32)
+            width = _pow2_ceil(int(lens.max()))
+            b_bucket = _pow2_ceil(len(batch))
+            tokens = np.zeros((b_bucket, width), np.int32)
+            rows = np.zeros((b_bucket,), np.int32)
+            lens_pad = np.zeros((b_bucket,), np.int32)
+            max_row = 0
+            for i, (doc_id, toks) in enumerate(batch):
+                tokens[i, :toks.size] = toks
+                lens_pad[i] = toks.size
+                rows[i] = self._assign_row(doc_id, int(toks.size))
+                max_row = max(max_row, int(rows[i]))
+            # padded rows scatter a zero-length payload onto row 0 of
+            # the store? No — route them to a scratch row past the live
+            # ones so they can never clobber a resident memory.
+            scratch = max_row + 1
+            rows[len(batch):] = scratch
+            self._ensure_capacity(scratch + 1, int(lens.max()))
+            if self._miss("ingest", b_bucket, width, self._capacity,
+                          self._n_cap):
+                self.stats.encode_jit_misses += 1
+            self.store = self._ingest_fn(
+                self.store, self.encoder["embed"], self.encoder["gru"],
+                jnp.asarray(tokens), jnp.asarray(lens_pad),
+                jnp.asarray(rows))
+            self.stats.ingest_waves += 1
+            self.stats.ingest_dispatches += 1
+
+    def ingest_hidden(self, doc_id: str, h) -> None:
+        """Admit one document directly from its (n, k) hidden states
+        (compression runs on-device; no encoder needed)."""
+        h = jnp.asarray(h, self.backend.dtype)
+        assert h.ndim == 2 and h.shape[1] == self.k, h.shape
+        row = self._assign_row(doc_id, h.shape[0])
+        self._ensure_capacity(len(self._row_of), h.shape[0])
+        payload = self.backend.payload_from_hidden(h)
+        self.store = self._write_fn(self.store, jnp.asarray([row]),
+                                    payload)
+        self.stats.pinned += 1
+
+    def pin(self, doc_id: str, state: DocumentState) -> None:
+        """Pin a pre-encoded fixed-size memory resident (linear backend
+        only — the softmax baseline cannot serve from a compressed
+        state; that asymmetry IS the paper's point)."""
+        if not self.backend.fixed_size_memory:
+            raise ValueError(
+                f"backend {self.backend.name!r} has no fixed-size memory "
+                f"to pin; ingest the document's hidden states instead")
+        if self.normalize and state.z is None:
+            raise ValueError(f"pin({doc_id!r}): engine normalizes but "
+                             f"the state has no z")
+        assert state.k == self.k, (state.k, self.k)
+        row = self._assign_row(doc_id, state.n_tokens)
+        self._ensure_capacity(len(self._row_of), state.n_tokens)
+        payload = {"c": state.c[None]}
+        if self.normalize:
+            payload["z"] = state.z[None]
+        self.store = self._write_fn(self.store, jnp.asarray([row]),
+                                    payload)
+        self.stats.pinned += 1
+
+    # -- query scheduling ----------------------------------------------
+
+    def submit(self, doc_id: str, queries, priority: int = 0) -> int:
+        """Queue M queries against one resident (or pending) memory;
+        returns the request uid. A full bounded queue sheds per
+        ``shed_policy`` — the shed request resolves immediately with
+        ``status="shed"``."""
+        if doc_id not in self._row_of and doc_id not in {
+                d for d, _ in self._pending}:
+            raise KeyError(f"unknown document {doc_id!r}: ingest or pin "
+                           f"it before submitting queries")
+        q = np.asarray(queries, np.dtype(self.backend.dtype))
+        if q.ndim == 1:
+            q = q[None, :]
+        if q.ndim != 2 or q.shape[1] != self.k:
+            raise ValueError(f"queries must be (k,) or (M, k={self.k}); "
+                             f"got {np.asarray(queries).shape}")
+        uid = self._next_uid
+        self._next_uid += 1
+        req = LookupRequest(uid=uid, doc_id=doc_id, queries=q,
+                            priority=priority)
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            victim = self._pick_shed_victim(req)
+            self._shed(victim)
+            if victim is req:
+                return uid
+        self._queue.append(req)
+        return uid
+
+    def _pick_shed_victim(self, incoming: LookupRequest) -> LookupRequest:
+        if self.shed_policy == "reject_new":
+            return incoming
+        victim = min(self._queue, key=lambda r: (r.priority, -r.uid))
+        if victim.priority < incoming.priority:
+            self._queue.remove(victim)
+            return victim
+        return incoming
+
+    def _shed(self, req: LookupRequest) -> None:
+        self.stats.shed += 1
+        self._results[req.uid] = LookupResult(
+            uid=req.uid, doc_id=req.doc_id, answers=None,
+            status=STATUS_SHED)
+
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    def has_work(self) -> bool:
+        return bool(self._queue or self._pending)
+
+    def step(self) -> bool:
+        """Serve ONE query wave: flush pending ingests, pop the ≤
+        ``wave_size`` highest-priority queued requests, flatten them
+        into one bucket-padded (B, M, k) batch with per-row memory
+        indices, and answer with ONE jitted lookup dispatch."""
+        if self._pending:
+            self.flush()
+        if not self._queue:
+            return self.has_work()
+        self._queue.sort(key=lambda r: (-r.priority, r.uid))
+        wave, self._queue = (self._queue[:self.wave_size],
+                             self._queue[self.wave_size:])
+        b_bucket = _pow2_ceil(len(wave))
+        m_bucket = _pow2_ceil(max(r.queries.shape[0] for r in wave))
+        q = np.zeros((b_bucket, m_bucket, self.k),
+                     np.dtype(self.backend.dtype))
+        rows = np.zeros((b_bucket,), np.int32)
+        for i, r in enumerate(wave):
+            q[i, :r.queries.shape[0]] = r.queries
+            rows[i] = self._row_of[r.doc_id]
+        if self._miss("wave", b_bucket, m_bucket, self._capacity,
+                      self._n_cap):
+            self.stats.lookup_jit_misses += 1
+        out = np.asarray(self._wave_fn(self.store, jnp.asarray(rows),
+                                       jnp.asarray(q)))
+        wave_idx = self.stats.waves
+        self.stats.waves += 1
+        self.stats.lookup_dispatches += 1
+        self.stats.requests += len(wave)
+        self.stats.queries += sum(r.queries.shape[0] for r in wave)
+        if len({r.doc_id for r in wave}) > 1:
+            self.stats.multi_memory_waves += 1
+        for i, r in enumerate(wave):
+            self._results[r.uid] = LookupResult(
+                uid=r.uid, doc_id=r.doc_id,
+                answers=out[i, :r.queries.shape[0]], wave=wave_idx)
+        return self.has_work()
+
+    def run(self) -> List[LookupResult]:
+        """Drain the queue (repeated :meth:`step`); results in uid
+        order, shed requests included."""
+        while self.step():
+            pass
+        return self.results()
+
+    def results(self) -> List[LookupResult]:
+        return [self._results[u] for u in sorted(self._results)]
+
+    @property
+    def resident_bytes(self) -> int:
+        """Logical bytes of every resident memory (the number that is
+        O(N·k²) for the linear backend and O(Σ nᵢ·k) for softmax)."""
+        return self.stats.resident_state_bytes
