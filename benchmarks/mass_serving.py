@@ -84,7 +84,7 @@ def _storm(engine: LookupEngine, rng: np.random.Generator,
         - base["lookup_dispatches"],
         "multi_memory_waves": st.multi_memory_waves
         - base["multi_memory_waves"],
-        "jit_misses": st.lookup_jit_misses,
+        "jit_misses": st.lookup_jit_misses - base["lookup_jit_misses"],
         "resident_bytes": st.resident_state_bytes,
     }
 

@@ -531,6 +531,14 @@ def main() -> int:
                     help="draft provider: prompt-lookup n-grams (free) "
                          "or a second LM with its own slot states")
     args = ap.parse_args()
+    if args.mode == "lookup" and args.load and \
+            args.lookup_backend != "linear":
+        ap.error(
+            f"--load pins a persisted compressed (k×k) DocumentStore, "
+            f"which only the fixed-size linear backend can serve; "
+            f"--lookup-backend {args.lookup_backend} keeps full "
+            f"hidden states resident and cannot pin compressed "
+            f"memories (drop --load and ingest documents instead)")
     if args.mode == "stream":
         return stream(args)
     if args.mode == "spec":

@@ -474,6 +474,11 @@ class LookupEngine:
         """Encode every pending document: waves of ≤ ``ingest_wave``
         docs, each wave ONE bucket-padded jitted dispatch that encodes,
         compresses and scatters into the resident store."""
+        # One scatter wave must not carry duplicate row indices (XLA's
+        # write order for duplicates is unspecified): keep only the
+        # LAST queued payload per doc id before cutting waves.
+        if len({d for d, _ in self._pending}) != len(self._pending):
+            self._pending = list(dict(self._pending).items())
         while self._pending:
             batch = self._pending[:self.ingest_wave]
             self._pending = self._pending[self.ingest_wave:]
@@ -483,16 +488,17 @@ class LookupEngine:
             tokens = np.zeros((b_bucket, width), np.int32)
             rows = np.zeros((b_bucket,), np.int32)
             lens_pad = np.zeros((b_bucket,), np.int32)
-            max_row = 0
             for i, (doc_id, toks) in enumerate(batch):
                 tokens[i, :toks.size] = toks
                 lens_pad[i] = toks.size
                 rows[i] = self._assign_row(doc_id, int(toks.size))
-                max_row = max(max_row, int(rows[i]))
-            # padded rows scatter a zero-length payload onto row 0 of
-            # the store? No — route them to a scratch row past the live
-            # ones so they can never clobber a resident memory.
-            scratch = max_row + 1
+            # Padded bucket rows scatter a zero payload somewhere; that
+            # somewhere must never be a live row. max(batch rows) + 1
+            # is NOT safe — re-ingesting existing documents can leave
+            # higher rows resident. Rows are assigned densely, so
+            # len(_row_of) is always the first free row: use it as the
+            # sacrificial scratch row.
+            scratch = len(self._row_of)
             rows[len(batch):] = scratch
             self._ensure_capacity(scratch + 1, int(lens.max()))
             if self._miss("ingest", b_bucket, width, self._capacity,

@@ -331,6 +331,59 @@ class TestLookupEngine:
                                        np.asarray(solo.c),
                                        rtol=1e-4, atol=1e-4)
 
+    def test_reingest_wave_padding_never_clobbers_resident_rows(self):
+        """Regression: a bucket-padded re-ingest wave used to route its
+        padded rows to max(batch rows) + 1 — a LIVE row when existing
+        docs re-ingest while others sit at higher rows — silently
+        zeroing that document's resident memory (5 docs, re-ingest
+        docs 0-2 in one wave of bucket 4 → doc3's state became all
+        zeros)."""
+        enc = _encoder()
+        rng = np.random.default_rng(15)
+        docs = {f"doc{i}": rng.integers(0, 50, size=4 + 2 * i)
+                for i in range(5)}
+        eng = LookupEngine(enc, backend="linear")
+        for d, t in docs.items():
+            eng.ingest(d, t)
+        eng.flush()
+        before = {d: np.asarray(eng.store["c"][r])
+                  for d, r in eng.rows().items()}
+        assert np.any(before["doc3"]) and np.any(before["doc4"])
+        for d in ("doc0", "doc1", "doc2"):     # one wave, b_bucket=4
+            eng.ingest(d, docs[d])
+        eng.flush()
+        assert eng.stats.ingest_waves == 2
+        # untouched residents are bitwise intact...
+        for d in ("doc3", "doc4"):
+            np.testing.assert_array_equal(
+                np.asarray(eng.store["c"][eng.rows()[d]]), before[d])
+        # ...and the re-ingested ones still match their solo encodes.
+        for d in ("doc0", "doc1", "doc2"):
+            np.testing.assert_allclose(
+                np.asarray(eng.store["c"][eng.rows()[d]]),
+                np.asarray(_solo_encode(enc, docs[d]).c),
+                rtol=1e-4, atol=1e-4)
+
+    def test_duplicate_pending_ids_keep_last_payload(self):
+        """Queueing the same doc id twice before flush() must not put
+        duplicate row indices in one scatter wave (XLA's write order
+        for duplicates is unspecified): the LAST queued payload wins,
+        deterministically."""
+        enc = _encoder()
+        rng = np.random.default_rng(16)
+        stale = rng.integers(0, 50, size=9)
+        fresh = rng.integers(0, 50, size=13)
+        eng = LookupEngine(enc, backend="linear")
+        eng.ingest("dup", stale)
+        eng.ingest("other", rng.integers(0, 50, size=5))
+        eng.ingest("dup", fresh)
+        eng.flush()
+        assert len(eng) == 2
+        np.testing.assert_allclose(
+            np.asarray(eng.store["c"][eng.rows()["dup"]]),
+            np.asarray(_solo_encode(enc, fresh).c),
+            rtol=1e-4, atol=1e-4)
+
     def test_pin_serves_persisted_states(self, tmp_path):
         rng = np.random.default_rng(13)
         store = DocumentStore()
