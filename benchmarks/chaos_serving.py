@@ -183,6 +183,137 @@ def run() -> Dict:
     }
 
 
+def _dir_bytes(path: str) -> int:
+    total = 0
+    for root, _, files in os.walk(path):
+        for f in files:
+            total += os.path.getsize(os.path.join(root, f))
+    return total
+
+
+def run_durability() -> Dict:
+    """Kill-and-recover benchmark: crash the engine at an event
+    boundary, recover from checkpoint + journal, and measure that
+    recovery is lossless, bit-identical and deterministic — then trace
+    checkpoint size against ``max_len`` (the paper's fixed-size state
+    means a linear-backend checkpoint is O(slots·k²) FLAT, while a
+    softmax KV checkpoint grows with the decode window)."""
+    import shutil
+    import tempfile
+
+    from repro.serving import (DecodeEngine, FleetEngine, InjectedCrash,
+                               Journal, fleet_demo_config)
+
+    key = jax.random.PRNGKey(0)
+    scratch = tempfile.mkdtemp(prefix="chaos_durability_")
+    per_backend = []
+    zero_loss = True
+    bit_identical = True
+    replay_deterministic = True
+    try:
+        for backend in ("linear", "softmax", "mamba2"):
+            cfg = fleet_demo_config(backend)
+            params = lm.init_params(key, cfg)
+            workload = _workload(cfg.vocab_size)
+
+            base, _ = _drain(_engine(params, cfg), workload)
+            base_toks = {c.uid: list(np.asarray(c.tokens)) for c in base}
+
+            jp = os.path.join(scratch, f"{backend}.journal")
+            cd = os.path.join(scratch, f"{backend}.ck")
+            eng = _engine(params, cfg, journal=jp, checkpoint_dir=cd,
+                          checkpoint_every=2,
+                          injector=FaultInjector(crash=(3,)))
+            for p, g in workload:
+                eng.submit(p, g)
+            try:
+                eng.run("continuous")
+                raise RuntimeError("injected crash did not fire")
+            except InjectedCrash:
+                pass
+
+            def _recover():
+                t0 = time.perf_counter()
+                rec = DecodeEngine.recover(
+                    params, cfg, RULES, journal=Journal(jp),
+                    checkpoint_dir=cd, n_slots=N_SLOTS,
+                    segment_len=SEGMENT_LEN, max_len=MAX_LEN)
+                t_restore = time.perf_counter() - t0
+                t0 = time.perf_counter()
+                rec.run("continuous")
+                return rec, t_restore, time.perf_counter() - t0
+
+            rec1, t_restore, t_finish = _recover()
+            rec2, _, _ = _recover()
+            got1 = {c.uid: list(np.asarray(c.tokens))
+                    for c in rec1.completions()}
+            got2 = {c.uid: list(np.asarray(c.tokens))
+                    for c in rec2.completions()}
+            acks = [r for r in rec1.journal.records() if r["t"] == "ack"]
+            b_zero_loss = (sorted(got1) == sorted(base_toks)
+                           and sorted(r["uid"] for r in acks)
+                           == sorted(base_toks))
+            b_identical = got1 == base_toks
+            b_replay = got1 == got2
+            zero_loss &= b_zero_loss
+            bit_identical &= b_identical
+            replay_deterministic &= b_replay
+            per_backend.append({
+                "backend": backend,
+                "requests": len(base_toks),
+                "recovered": len(got1),
+                "zero_loss": b_zero_loss,
+                "bit_identical": b_identical,
+                "replay_deterministic": b_replay,
+                "restore_s": t_restore,
+                "finish_s": t_finish,
+                "journal_bytes": os.path.getsize(jp),
+                "checkpoint_bytes": _dir_bytes(cd),
+            })
+
+        # -- checkpoint bytes vs decode window -------------------------
+        curves = {}
+        for backend in ("linear", "softmax"):
+            cfg = fleet_demo_config(backend)
+            params = lm.init_params(key, cfg)
+            pts = []
+            for max_len in (32, 64, 128):
+                cd = os.path.join(scratch, f"curve.{backend}.{max_len}")
+                eng = DecodeEngine(params, cfg, RULES, n_slots=N_SLOTS,
+                                   segment_len=SEGMENT_LEN,
+                                   max_len=max_len, checkpoint_dir=cd)
+                for p, g in _workload(cfg.vocab_size)[:2]:
+                    eng.submit(p, g)
+                eng.step()
+                eng.save_checkpoint()
+                pts.append({"max_len": max_len,
+                            "bytes": _dir_bytes(cd)})
+            curves[backend] = pts
+        lin = [p["bytes"] for p in curves["linear"]]
+        sof = [p["bytes"] for p in curves["softmax"]]
+        # "flat": quadrupling the window moves the linear checkpoint by
+        # <10% (only host metadata), while softmax KV at least doubles
+        linear_flat = lin[-1] <= lin[0] * 1.10
+        softmax_grows = sof[-1] >= sof[0] * 2.0
+    finally:
+        shutil.rmtree(scratch, ignore_errors=True)
+
+    claims = {
+        "durability_zero_loss": zero_loss,
+        "durability_bit_identical": bit_identical,
+        "durability_replay_deterministic": replay_deterministic,
+        "durability_ckpt_bytes_linear_flat": linear_flat,
+        "durability_ckpt_bytes_softmax_grows": softmax_grows,
+    }
+    return {
+        "n_slots": N_SLOTS, "segment_len": SEGMENT_LEN,
+        "crash_event": 3, "checkpoint_every": 2,
+        "kill_and_recover": per_backend,
+        "checkpoint_bytes_vs_max_len": curves,
+        "claims": claims,
+    }
+
+
 def main() -> List[str]:
     res = run()
     out = ["chaos,backend,quarantined,retries,failed,resumes,"
@@ -200,13 +331,30 @@ def main() -> List[str]:
     for name, ok in res["claims"].items():
         out.append(f"chaos_claim,{name},{'PASS' if ok else 'FAIL'}")
 
-    # merge under "chaos" — continuous_batching.py owns the rest
+    dur = run_durability()
+    out.append("durability,backend,requests,recovered,restore_s,"
+               "finish_s,journal_bytes,checkpoint_bytes")
+    for r in dur["kill_and_recover"]:
+        out.append(f"durability,{r['backend']},{r['requests']},"
+                   f"{r['recovered']},{r['restore_s']:.3f},"
+                   f"{r['finish_s']:.3f},{r['journal_bytes']},"
+                   f"{r['checkpoint_bytes']}")
+    for backend, pts in dur["checkpoint_bytes_vs_max_len"].items():
+        for p in pts:
+            out.append(f"durability_ckpt_bytes,{backend},"
+                       f"{p['max_len']},{p['bytes']}")
+    for name, ok in dur["claims"].items():
+        out.append(f"durability_claim,{name},{'PASS' if ok else 'FAIL'}")
+
+    # merge under "chaos"/"durability" — continuous_batching.py owns
+    # the rest of the file
     try:
         with open(BENCH_PATH) as f:
             bench = json.load(f)
     except (OSError, json.JSONDecodeError):
         bench = {}
     bench["chaos"] = res
+    bench["durability"] = dur
     with open(BENCH_PATH, "w") as f:
         json.dump(bench, f, indent=2)
     return out

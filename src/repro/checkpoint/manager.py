@@ -65,25 +65,87 @@ def save_pytree(path: str, tree: Any, extra: Optional[Dict] = None) -> None:
     os.makedirs(tmp, exist_ok=True)
     arrays = {}
     manifest = []
+    dtypes = {}
     for key, leaf in _flatten_with_paths(tree):
-        arrays[key] = np.asarray(jax.device_get(leaf))
+        arr = np.asarray(jax.device_get(leaf))
+        arrays[key] = arr
         manifest.append(key)
+        # npz stores extension dtypes (bfloat16, float8) as raw void
+        # bytes; record the true dtype so load can view them back
+        dtypes[key] = str(arr.dtype)
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump({"keys": manifest, "extra": extra or {}}, f)
+        json.dump({"keys": manifest, "dtypes": dtypes,
+                   "extra": extra or {}}, f)
     if os.path.exists(path):
         shutil.rmtree(path)
     os.replace(tmp, path)
 
 
+def _corrupt(path: str, why: str) -> ValueError:
+    return ValueError(f"corrupt checkpoint at {path}: {why}")
+
+
+def read_manifest(path: str) -> Dict:
+    """Read and validate a checkpoint directory's manifest, rejecting
+    truncated/corrupt files with a ``ValueError`` that names the path.
+    Used by callers that need the host-side ``extra`` dict *before*
+    they can build the ``like`` tree (e.g. engine recovery, where the
+    number of suspended-request snapshots lives in ``extra``)."""
+    manifest_path = os.path.join(path, "manifest.json")
+    if not os.path.exists(manifest_path):
+        raise _corrupt(path, "manifest.json missing")
+    try:
+        with open(manifest_path) as f:
+            meta = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError, OSError) as e:
+        raise _corrupt(path, f"unreadable manifest.json ({e})") from e
+    if not isinstance(meta, dict) or "keys" not in meta:
+        raise _corrupt(path, "manifest.json missing 'keys'")
+    return meta
+
+
+def read_extra(path: str) -> Dict:
+    """The manifest's ``extra`` dict alone (same validation as
+    :func:`read_manifest`)."""
+    return read_manifest(path).get("extra", {})
+
+
 def load_pytree(path: str, like: Any) -> Tuple[Any, Dict]:
-    """Load into the structure of ``like`` (values replaced)."""
-    with open(os.path.join(path, "manifest.json")) as f:
-        meta = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
-    leaves = {key: data[key] for key in meta["keys"]}
+    """Load into the structure of ``like`` (values replaced).
+
+    A truncated or corrupt checkpoint — missing/undecodable manifest or
+    array archive, or an archive missing manifest keys — raises
+    ``ValueError`` naming ``path`` (a half-written step directory can
+    only exist if ``os.replace`` atomicity was subverted, e.g. a torn
+    copy from another machine; callers fall back to an older step)."""
+    meta = read_manifest(path)
+    arrays_path = os.path.join(path, "arrays.npz")
+    if not os.path.exists(arrays_path):
+        raise _corrupt(path, "arrays.npz missing")
+    try:
+        with np.load(arrays_path, allow_pickle=False) as data:
+            try:
+                leaves = {key: data[key] for key in meta["keys"]}
+            except KeyError as e:
+                raise _corrupt(
+                    path, f"arrays.npz missing key {e.args[0]!r}") from e
+    except ValueError:
+        raise
+    except Exception as e:  # BadZipFile, truncated member, OSError, ...
+        raise _corrupt(path, f"unreadable arrays.npz ({e})") from e
+    dtypes = meta.get("dtypes", {})
+    for key, arr in leaves.items():
+        if arr.dtype.kind == "V" and key in dtypes:
+            import ml_dtypes  # noqa: F401  (registers bfloat16 et al.)
+            leaves[key] = arr.view(np.dtype(dtypes[key]))
     keys_in_order = [k for k, _ in _flatten_with_paths(like)]
-    flat = [leaves[k] for k in keys_in_order]
+    try:
+        flat = [leaves[k] for k in keys_in_order]
+    except KeyError as e:
+        raise _corrupt(
+            path, f"checkpoint lacks leaf {e.args[0]!r} required by "
+            f"the restore template") from e
     tree = jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), flat)
     return tree, meta.get("extra", {})
@@ -147,15 +209,51 @@ class CheckpointManager:
             exc, self._writer_exc = self._writer_exc, None
             raise exc
 
+    def steps(self) -> List[int]:
+        """Retained step numbers, oldest → newest."""
+        return sorted(
+            int(m.group(1))
+            for m in (re.fullmatch(r"step_(\d+)", n)
+                      for n in os.listdir(self.directory))
+            if m)
+
     def restore(self, like: Any, step: Optional[int] = None
                 ) -> Tuple[Any, Dict, int]:
+        """Restore the requested (default: newest) step.
+
+        An explicitly requested corrupt step raises its ``ValueError``
+        (naming the step directory). With ``step=None`` a corrupt
+        newest step falls back to the next-oldest retained step — the
+        torn-write recovery path — and only raises if every retained
+        step is corrupt."""
+        return self.restore_with(lambda extra: like, step)
+
+    def restore_with(self, like_fn, step: Optional[int] = None
+                     ) -> Tuple[Any, Dict, int]:
+        """Like :meth:`restore`, but the template tree is built FROM
+        the checkpoint's own ``extra`` dict: ``like_fn(extra)`` → like.
+        Needed when the tree structure is data-dependent (an engine
+        checkpoint holds one snapshot per suspended request)."""
         self.wait()
-        if step is None:
-            step = latest_step(self.directory)
-        if step is None:
+        if step is not None:
+            extra = read_extra(self._step_dir(step))
+            tree, extra = load_pytree(self._step_dir(step),
+                                      like_fn(extra))
+            return tree, extra, step
+        candidates = self.steps()
+        if not candidates:
             raise FileNotFoundError(f"no checkpoint in {self.directory}")
-        tree, extra = load_pytree(self._step_dir(step), like)
-        return tree, extra, step
+        last_err: Optional[ValueError] = None
+        for s in reversed(candidates):
+            try:
+                extra = read_extra(self._step_dir(s))
+                tree, extra = load_pytree(self._step_dir(s),
+                                          like_fn(extra))
+                return tree, extra, s
+            except ValueError as e:
+                last_err = e
+        assert last_err is not None
+        raise last_err
 
     def has_checkpoint(self) -> bool:
         return latest_step(self.directory) is not None

@@ -77,6 +77,7 @@ Three modes:
 from __future__ import annotations
 
 import argparse
+import signal
 import time
 
 import jax
@@ -163,12 +164,42 @@ def make_request_mix(rng: np.random.Generator, n_requests: int,
     return out
 
 
+class _Drainer:
+    """SIGINT/SIGTERM → finish the in-flight segment, drain, exit 0.
+
+    The handler only sets a flag; the serving loop checks it between
+    scheduler events, so a signal never tears a segment (or a
+    checkpoint write) in half. A second signal falls back to the
+    default handler — the escape hatch if draining itself wedges."""
+
+    def __init__(self):
+        self.requested = False
+        self._prev = {}
+
+    def __enter__(self):
+        for sig in (signal.SIGINT, signal.SIGTERM):
+            try:
+                self._prev[sig] = signal.signal(sig, self._on_signal)
+            except ValueError:          # non-main thread (tests)
+                pass
+        return self
+
+    def __exit__(self, *exc):
+        for sig, prev in self._prev.items():
+            signal.signal(sig, prev)
+
+    def _on_signal(self, sig, frame):
+        self.requested = True
+        signal.signal(sig, self._prev.get(sig, signal.SIG_DFL))
+
+
 def stream_fleet(args) -> int:
     """Heterogeneous fleet streaming: the Poisson workload round-robins
     across N backend slot groups behind ONE admission queue
     (``--backends linear,softmax,mamba2``; smoke-scale fleet demo
     configs — they share the vocab, so one request mix feeds every
-    architecture family at once)."""
+    architecture family at once). ``--replicas N`` runs every group as
+    N replicas behind the same queue (heartbeat + breaker failover)."""
     from repro.serving import FleetEngine, fleet_demo_config
 
     names = [b.strip() for b in args.backends.split(",") if b.strip()]
@@ -183,7 +214,10 @@ def stream_fleet(args) -> int:
         groups, n_slots=args.slots, segment_len=args.segment_len,
         max_len=max_len, temperature=args.temperature, seed=args.seed,
         max_queue=getattr(args, "max_queue", None),
-        shed_policy=getattr(args, "shed_policy", "reject_new"))
+        shed_policy=getattr(args, "shed_policy", "reject_new"),
+        replicas=getattr(args, "replicas", 1),
+        journal_dir=getattr(args, "journal_dir", None),
+        checkpoint_dir=getattr(args, "checkpoint_dir", None))
     vocab = min(cfg.vocab_size for _, cfg in groups.values())
     rng = np.random.default_rng(args.seed)
     requests = make_request_mix(rng, args.n_requests, args.prompt_len,
@@ -216,6 +250,10 @@ def stream_fleet(args) -> int:
     programs = fleet.compiled_segment_programs()
     print(f"compiled segment programs: {programs} "
           f"(one per backend: {all(v == 1 for v in programs.values())})")
+    if getattr(args, "replicas", 1) > 1:
+        print(f"replicas={args.replicas}/group "
+              f"failovers={stats['failovers']} "
+              f"readmitted={stats['readmitted']}")
     assert len(completions) == args.n_requests
     return 0
 
@@ -224,6 +262,9 @@ def stream(args) -> int:
     """Continuous batching under a synthetic Poisson request stream."""
     from repro.serving import DecodeEngine
 
+    if getattr(args, "replicas", 1) > 1 and not getattr(
+            args, "backends", None):
+        args.backends = args.backend or "linear"
     if getattr(args, "backends", None):
         return stream_fleet(args)
 
@@ -235,6 +276,11 @@ def stream(args) -> int:
     root = jax.random.PRNGKey(args.seed)
     params = lm.init_params(jax.random.fold_in(root, 0), cfg)
 
+    from repro.serving import FaultInjector, InjectedCrash
+
+    crash_at = getattr(args, "crash_at_event", None)
+    injector = (FaultInjector(crash=(crash_at,))
+                if crash_at is not None else None)
     max_len = args.prompt_len + args.gen_len + args.segment_len
     engine = DecodeEngine(
         params, cfg, rules, n_slots=args.slots,
@@ -244,17 +290,68 @@ def stream(args) -> int:
         prefill_chunk=getattr(args, "prefill_chunk", 64),
         max_queue=getattr(args, "max_queue", None),
         shed_policy=getattr(args, "shed_policy", "reject_new"),
-        degrade_threshold=getattr(args, "degrade_threshold", None))
-    rng = np.random.default_rng(args.seed)
-    requests = make_request_mix(rng, args.n_requests, args.prompt_len,
-                                args.gen_len, cfg.vocab_size,
-                                args.arrival_rate)
-    for prompt, g, arrival in requests:
-        engine.submit(prompt, g, arrival=arrival)
+        degrade_threshold=getattr(args, "degrade_threshold", None),
+        journal=getattr(args, "journal", None),
+        checkpoint_dir=getattr(args, "checkpoint_dir", None),
+        checkpoint_every=getattr(args, "checkpoint_every", 0),
+        injector=injector)
+
+    if getattr(args, "recover", False):
+        if engine.journal is None and engine._ckpt_mgr is None:
+            raise SystemExit(
+                "--recover needs --journal and/or --checkpoint-dir")
+        n_journaled = len(engine.journal.unacked_submits()) \
+            if engine.journal is not None else 0
+        engine.recover_in_place()
+        print(f"recover: {n_journaled} unacked request(s) replayed "
+              f"from the journal")
+    else:
+        rng = np.random.default_rng(args.seed)
+        requests = make_request_mix(rng, args.n_requests,
+                                    args.prompt_len, args.gen_len,
+                                    cfg.vocab_size, args.arrival_rate)
+        for prompt, g, arrival in requests:
+            engine.submit(prompt, g, arrival=arrival)
 
     t0 = time.perf_counter()
-    completions = engine.run("continuous")
+    with _Drainer() as drain:
+        try:
+            while engine.has_work() and not drain.requested:
+                engine.step("continuous")
+        except InjectedCrash as e:
+            # simulated hard kill: NO drain, NO final checkpoint — the
+            # journal + last periodic checkpoint are all recovery gets
+            print(f"crash: injected at event {e.event_idx} "
+                  f"(journal/checkpoint left as-is; restart with "
+                  f"--recover)")
+            return 3
+    completions = engine.completions()
     dt = time.perf_counter() - t0
+
+    if drain.requested:
+        in_flight = sum(1 for s in engine._slot_req if s is not None) \
+            + len(engine._queue) + len(engine._suspended)
+        if engine._ckpt_mgr is not None:
+            engine.save_checkpoint()
+        print(f"graceful shutdown: segment finished, {in_flight} "
+              f"in-flight request(s) "
+              + ("journaled + checkpointed for --recover"
+                 if engine.journal is not None
+                 or engine._ckpt_mgr is not None else "dropped"))
+        if getattr(args, "stats_json", None):
+            with open(args.stats_json, "w") as f:
+                f.write(engine.stats.to_json())
+            print(f"stats written to {args.stats_json}")
+        return 0
+
+    if engine.journal is not None:
+        acks = engine.journal.acked()
+        uids = {c.uid for c in completions}
+        lost = sorted(uids - set(acks))
+        zero_loss = not lost and len(acks) == len(uids)
+        print(f"durability: acks={len(acks)} completions={len(uids)} "
+              f"lost={len(lost)} "
+              f"zero_loss={'PASS' if zero_loss else 'FAIL'}")
 
     total = sum(len(c.tokens) for c in completions)
     served = [c for c in completions if c.admitted_step >= 0]
@@ -289,8 +386,10 @@ def stream(args) -> int:
             f.write(engine.stats.to_json())
         print(f"stats written to {args.stats_json}")
     # every submitted request resolves to a completion — shed/deadline
-    # ones included (that's the bounded-queue contract)
-    assert len(completions) == args.n_requests
+    # ones included (that's the bounded-queue contract); a recovered
+    # run's request count comes from the journal, not --n-requests
+    if not getattr(args, "recover", False):
+        assert len(completions) == args.n_requests
     return 0
 
 
@@ -506,6 +605,30 @@ def main() -> int:
     ap.add_argument("--stats-json", default=None, metavar="PATH",
                     help="write EngineStats (counters + lifecycle/chaos"
                          " fields) to PATH as JSON")
+    # durability (stream mode)
+    ap.add_argument("--journal", default=None, metavar="PATH",
+                    help="write-ahead request journal: every submit/"
+                         "cancel/ack is fsync'd to PATH before it takes"
+                         " effect; a restarted engine replays it")
+    ap.add_argument("--journal-dir", default=None, metavar="DIR",
+                    help="fleet mode: per-replica journals under DIR")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="engine checkpoints (slot states + scheduler)"
+                         " under DIR; atomic, keep-N retention")
+    ap.add_argument("--checkpoint-every", type=int, default=4,
+                    metavar="N", help="checkpoint every N scheduler"
+                    " events (0 = only on graceful shutdown)")
+    ap.add_argument("--recover", action="store_true",
+                    help="restore the newest checkpoint, replay the"
+                         " journal past it, and finish the stranded"
+                         " work instead of submitting new requests")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="fleet mode: replicas per backend group"
+                         " (heartbeat + circuit-breaker failover)")
+    ap.add_argument("--crash-at-event", type=int, default=None,
+                    metavar="N", help="chaos: hard-kill the engine at"
+                    " scheduler event N (exit 3; restart with"
+                    " --recover)")
     # lookup mode (memory serving)
     ap.add_argument("--n-docs", type=int, default=128,
                     help="lookup mode: memories to ingest")

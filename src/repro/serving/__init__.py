@@ -20,9 +20,15 @@ from repro.serving.engine import (  # noqa: F401
 )
 from repro.serving.fleet import (  # noqa: F401
     FleetEngine,
+    ReplicaState,
     fleet_demo_config,
 )
+from repro.serving.journal import (  # noqa: F401
+    Journal,
+    read_journal,
+)
 from repro.serving.lookup_engine import (  # noqa: F401
+    HedgedLookup,
     LinearLookupBackend,
     LookupBackend,
     LookupEngine,
@@ -42,6 +48,7 @@ from repro.serving.lifecycle import (  # noqa: F401
     STATUS_SHED,
     Checkpoint,
     FaultInjector,
+    InjectedCrash,
     SuspendedRequest,
 )
 from repro.serving.speculative import (  # noqa: F401

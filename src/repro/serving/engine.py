@@ -114,8 +114,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import ModelConfig
 from repro.serving.backends import DecodeBackend, backend_for_config
+from repro.serving.journal import (
+    REC_ACK,
+    REC_CANCEL,
+    REC_SUBMIT,
+    Journal,
+    ack_record,
+    cancel_record,
+    completion_from_ack,
+    submit_record,
+)
 from repro.serving.lifecycle import (
     SHED_POLICIES,
     STATUS_CANCELLED,
@@ -125,6 +136,7 @@ from repro.serving.lifecycle import (
     STATUS_SHED,
     Checkpoint,
     FaultInjector,
+    InjectedCrash,
     SuspendedRequest,
     poison_snapshot,
 )
@@ -336,6 +348,10 @@ class DecodeEngine:
         max_retries: int = 1,
         checkpoint_interval: int = 0,
         injector: Optional[FaultInjector] = None,
+        journal: Optional[Any] = None,
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: int = 0,
+        checkpoint_keep: int = 2,
     ):
         self.params = params
         self.cfg = cfg
@@ -359,6 +375,16 @@ class DecodeEngine:
         self.max_retries = max_retries
         self.checkpoint_interval = checkpoint_interval
         self.injector = injector
+        # durability: write-ahead journal + durable engine checkpoints.
+        # A path string is convenient at the CLI; tests/fleets pass a
+        # Journal instance (possibly in-memory).
+        self.journal: Optional[Journal] = (
+            Journal(journal) if isinstance(journal, str) else journal)
+        assert checkpoint_every >= 0 and checkpoint_keep >= 1
+        self.checkpoint_every = checkpoint_every
+        self._ckpt_mgr: Optional[CheckpointManager] = (
+            CheckpointManager(checkpoint_dir, keep=checkpoint_keep)
+            if checkpoint_dir is not None else None)
         # ONE capability-driven decision on the backend object resolves
         # both "auto" knobs (previously two near-identical string-check
         # branches here); unsupported modes raise naming the backend
@@ -518,6 +544,12 @@ class DecodeEngine:
         self._degraded = False
         self._events = 0          # segment/round boundaries elapsed
         self._admit_passes = 0    # admission passes attempted
+        # durability bookkeeping: uids whose ack is already in the
+        # journal (delivered in a previous incarnation — never re-acked)
+        # and the replay flag that suppresses re-journaling journaled
+        # submits/cancels while recovery re-applies them
+        self._journal_acked: Dict[int, Completion] = {}
+        self._replaying = False
         if self.draft is not None:
             self.draft.reset()
         self.stats = EngineStats(n_slots=self.n_slots,
@@ -578,6 +610,13 @@ class DecodeEngine:
         # ---- validation complete; engine state mutations start here --
         if uid is None:
             uid = self._next_uid
+        # write-ahead: the request is durable before ANY engine state
+        # changes, so a crash after submit() returns can never lose it
+        # (replay suppressed: recovery re-applies journaled submits)
+        if self.journal is not None and not self._replaying:
+            self.journal.append(submit_record(
+                uid, prompt, max_new_tokens, arrival, speculate_k,
+                priority, deadline_s))
         self._next_uid = uid + 1
         req = Request(uid=uid, prompt=prompt,
                       max_new_tokens=max_new_tokens, arrival=arrival,
@@ -619,6 +658,10 @@ class DecodeEngine:
         their partial tokens); an active/ingesting request is marked and
         evicted at the next scheduling boundary. Returns False if the
         uid is unknown or already completed."""
+        # write-ahead: the intent is durable before it takes effect (a
+        # replayed no-op cancel is still a no-op)
+        if self.journal is not None and not self._replaying:
+            self.journal.append(cancel_record(uid))
         for i, r in enumerate(self._queue):
             if r.uid == uid:
                 self._queue.pop(i)
@@ -649,17 +692,31 @@ class DecodeEngine:
     def _complete(self, req: Request, tokens: List[int],
                   admitted_step: int, status: str = STATUS_OK,
                   retries: int = 0) -> None:
+        prior = self._journal_acked.get(req.uid)
+        if prior is not None:
+            # already delivered by a previous incarnation: the
+            # journaled ack is the authoritative result (exactly-once
+            # semantics) — serve it, never ack twice
+            self._completions[req.uid] = prior
+            return
         last = tokens[-1] if tokens else None
         if status == STATUS_OK:
             reason = ("eos" if self.eos_id is not None
                       and last == self.eos_id else "length")
         else:
             reason = status
-        self._completions[req.uid] = Completion(
+        completion = Completion(
             uid=req.uid, prompt_len=len(req.prompt),
             tokens=np.asarray(tokens, np.int32), finish_reason=reason,
             admitted_step=admitted_step, finished_step=self._clock,
             status=status, retries=retries)
+        if self.journal is not None:
+            # ack-ahead: the delivery record hits stable storage before
+            # the completion becomes observable; a crash between the
+            # two re-delivers the journaled ack on recovery
+            self.journal.append(ack_record(completion))
+            self._journal_acked[req.uid] = completion
+        self._completions[req.uid] = completion
 
     def _miss(self, kind: str, width: int) -> None:
         """Count an admission-program compile the jit cache hasn't seen."""
@@ -1233,6 +1290,11 @@ class DecodeEngine:
         speculative round — the engine's scheduling quantum, so the
         per-token cost is amortized over ``segment_len`` steps."""
         ev = self._events
+        if self.injector is not None and self.injector.crashes(ev):
+            # process death at a scheduling boundary: nothing after
+            # this line runs, so everything not journaled/durably
+            # checkpointed by now is what recovery must reconstruct
+            raise InjectedCrash(ev)
         self._events += 1
         if self.injector is not None:
             for slot in self.injector.nan_slots(ev):
@@ -1254,6 +1316,9 @@ class DecodeEngine:
                         and self._events - self._last_ckpt_event[slot]
                         >= self.checkpoint_interval):
                     self._checkpoint_slot(slot)
+        if (self._ckpt_mgr is not None and self.checkpoint_every > 0
+                and self._events % self.checkpoint_every == 0):
+            self.save_checkpoint()
 
     def _fail_all_pending(self) -> None:
         """Every slot is quarantined: nothing can ever run again — fail
@@ -1267,6 +1332,250 @@ class DecodeEngine:
             self.stats.failed += 1
             self._complete(r, [], admitted_step=-1, status=STATUS_FAILED)
         self._queue = []
+
+    # ------------------------------------------------------------------
+    # durability: engine checkpoints + journal replay
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _req_to_dict(req: Request) -> Dict:
+        return {"uid": int(req.uid),
+                "prompt": np.asarray(req.prompt, np.int32).tolist(),
+                "max_new_tokens": int(req.max_new_tokens),
+                "arrival": float(req.arrival),
+                "speculate_k": int(req.speculate_k),
+                "priority": int(req.priority),
+                "deadline_s": (None if req.deadline_s is None
+                               else float(req.deadline_s))}
+
+    @staticmethod
+    def _req_from_dict(d: Dict) -> Request:
+        return Request(uid=d["uid"],
+                       prompt=np.asarray(d["prompt"], np.int32),
+                       max_new_tokens=d["max_new_tokens"],
+                       arrival=d["arrival"],
+                       speculate_k=d["speculate_k"],
+                       priority=d["priority"],
+                       deadline_s=d["deadline_s"])
+
+    def save_checkpoint(self, step: Optional[int] = None) -> int:
+        """Write a durable whole-engine checkpoint via the atomic
+        pytree writer. The device tree holds the slot batch, the RNG
+        key, and every suspended/last-good snapshot — for the paper's
+        fixed-size backends that is O(S·k²) floats per layer however
+        long the contexts are (the softmax baseline writes its whole
+        KV cache); everything host-side (queues, per-slot scalars,
+        completions, stats, the logical clock) rides in the manifest's
+        ``extra`` dict. ``journal_seq`` records the journal position
+        the checkpoint captures, so recovery replays only later
+        records. Requires ``checkpoint_dir``; returns the step id
+        (the engine's event counter unless given)."""
+        if self._ckpt_mgr is None:
+            raise ValueError("engine has no checkpoint_dir configured")
+        step = self._events if step is None else int(step)
+        tree = {
+            "key": self._key,
+            "slot_ckpt": {str(s): c.state
+                          for s, c in sorted(self._ckpt.items())},
+            "state": self.state,
+            "suspended": tuple(s.state for s in self._suspended),
+        }
+        extra = {
+            "journal_seq": (self.journal.seq
+                            if self.journal is not None else 0),
+            "clock": int(self._clock),
+            "events": int(self._events),
+            "admit_passes": int(self._admit_passes),
+            "next_uid": int(self._next_uid),
+            "tok": self._tok.tolist(), "pos": self._pos.tolist(),
+            "active": [bool(a) for a in self._active],
+            "remaining": self._remaining.tolist(),
+            "spec_k": self._spec_k.tolist(),
+            "slot_req": [None if r is None else self._req_to_dict(r)
+                         for r in self._slot_req],
+            "slot_toks": [list(t) for t in self._slot_toks],
+            "slot_admitted": [int(a) for a in self._slot_admitted],
+            "ingest_req": [None if r is None else self._req_to_dict(r)
+                           for r in self._ingest_req],
+            "ingest_cursor": self._ingest_cursor.tolist(),
+            "queue": [self._req_to_dict(r) for r in self._queue],
+            "suspended": [
+                {"req": self._req_to_dict(s.req), "tok": int(s.tok),
+                 "pos": int(s.pos), "remaining": int(s.remaining),
+                 "toks": list(s.toks),
+                 "admitted_step": int(s.admitted_step),
+                 "retries": int(s.retries)}
+                for s in self._suspended],
+            "slot_ckpt": {
+                str(s): {"tok": int(c.tok), "pos": int(c.pos),
+                         "remaining": int(c.remaining),
+                         "toks": list(c.toks)}
+                for s, c in sorted(self._ckpt.items())},
+            "completions": [ack_record(c)
+                            for _, c in sorted(self._completions.items())],
+            "quarantined": [bool(q) for q in self._quarantined],
+            "retry_count": {str(u): int(n)
+                            for u, n in self._retry_count.items()},
+            "last_ckpt_event": self._last_ckpt_event.tolist(),
+            "cancel_uids": sorted(int(u) for u in self._cancel_uids),
+            "degraded": bool(self._degraded),
+            "stats": dataclasses.asdict(self.stats),
+            "seen_shapes": sorted(list(k) for k in self._seen_shapes),
+        }
+        self._ckpt_mgr.save(step, tree, extra, blocking=True)
+        return step
+
+    def restore_checkpoint(self, step: Optional[int] = None) -> int:
+        """Restore this engine from its checkpoint directory (newest
+        retained step by default, falling back past corrupt ones).
+        The engine must be constructed with the same (params, cfg,
+        n_slots, max_len) the checkpoint was written under — the
+        device-tree structure is config-derived. Returns the journal
+        sequence number the checkpoint captured (the replay start)."""
+        if self._ckpt_mgr is None:
+            raise ValueError("engine has no checkpoint_dir configured")
+
+        def like_fn(extra):
+            like = {"key": self._key, "slot_ckpt": {}, "state": self.state,
+                    "suspended": ()}
+            n_susp = len(extra["suspended"])
+            ck_keys = sorted(extra["slot_ckpt"])
+            if n_susp or ck_keys:
+                template = self._snapshot(self.state, jnp.int32(0))
+                like["suspended"] = tuple(template
+                                          for _ in range(n_susp))
+                like["slot_ckpt"] = {k: template for k in ck_keys}
+            return like
+
+        tree, extra, ckpt_step = self._ckpt_mgr.restore_with(
+            like_fn, step)
+        dev = lambda t: jax.tree.map(jnp.asarray, t)  # noqa: E731
+        self.state = dev(tree["state"])
+        self._key = jnp.asarray(tree["key"])
+        self._clock = extra["clock"]
+        self._events = extra["events"]
+        self._admit_passes = extra["admit_passes"]
+        self._next_uid = extra["next_uid"]
+        self._tok = np.asarray(extra["tok"], np.int32)
+        self._pos = np.asarray(extra["pos"], np.int32)
+        self._active = np.asarray(extra["active"], bool)
+        self._remaining = np.asarray(extra["remaining"], np.int32)
+        self._spec_k = np.asarray(extra["spec_k"], np.int32)
+        self._slot_req = [None if d is None else self._req_from_dict(d)
+                          for d in extra["slot_req"]]
+        self._slot_toks = [list(t) for t in extra["slot_toks"]]
+        self._slot_admitted = list(extra["slot_admitted"])
+        self._ingest_req = [None if d is None else self._req_from_dict(d)
+                            for d in extra["ingest_req"]]
+        self._ingest_cursor = np.asarray(extra["ingest_cursor"], np.int64)
+        self._queue = [self._req_from_dict(d) for d in extra["queue"]]
+        self._suspended = [
+            SuspendedRequest(
+                req=self._req_from_dict(d["req"]),
+                state=dev(tree["suspended"][i]), tok=d["tok"],
+                pos=d["pos"], remaining=d["remaining"],
+                toks=list(d["toks"]), admitted_step=d["admitted_step"],
+                retries=d["retries"])
+            for i, d in enumerate(extra["suspended"])]
+        self._ckpt = {
+            int(k): Checkpoint(state=dev(tree["slot_ckpt"][k]),
+                               tok=d["tok"], pos=d["pos"],
+                               remaining=d["remaining"],
+                               toks=list(d["toks"]))
+            for k, d in extra["slot_ckpt"].items()}
+        self._completions = {rec["uid"]: completion_from_ack(rec)
+                             for rec in extra["completions"]}
+        self._quarantined = np.asarray(extra["quarantined"], bool)
+        self._retry_count = {int(u): n
+                             for u, n in extra["retry_count"].items()}
+        self._last_ckpt_event = np.asarray(
+            extra["last_ckpt_event"], np.int64)
+        self._cancel_uids = set(extra["cancel_uids"])
+        self._degraded = extra["degraded"]
+        self.stats = EngineStats(**extra["stats"])
+        self._seen_shapes = {tuple(k) for k in extra["seen_shapes"]}
+        # speculative draft providers hold host/device state per slot;
+        # it is fully reconstructible from (prompt + emitted tokens),
+        # so re-admit rather than serialize (ModelDraft re-prefills the
+        # context — deterministic, and cheap for fixed-size states)
+        if self.draft is not None:
+            self.draft.reset()
+            for slot in range(self.n_slots):
+                if self._active[slot] and self._spec_k[slot] > 0:
+                    req = self._slot_req[slot]
+                    self.draft.admit(slot, np.concatenate(
+                        [req.prompt, self._slot_toks[slot]]
+                    ).astype(np.int32))
+        return extra.get("journal_seq", 0)
+
+    def _replay_journal(self, from_seq: int = 0) -> None:
+        """Re-apply journal records past ``from_seq`` (the position the
+        restored checkpoint captured; 0 with no checkpoint). Journaled
+        acks are authoritative: their uids are served the recorded
+        completion and their submits are NOT re-run — exactly-once
+        delivery. Unacked submits re-enter the queue with their
+        original uids (journal order is uid order, so engine-side
+        monotonicity holds); greedy decode then reproduces their exact
+        token streams, because a greedy completion depends only on
+        (params, prompt). A cancel journaled while its request was
+        mid-flight replays against the re-queued request, so the
+        partial tokens the dead incarnation had emitted (but never
+        acked) are not reproduced — the ack the caller eventually sees
+        is still unique."""
+        assert self.journal is not None
+        records = self.journal.records()
+        for rec in records:
+            if rec["t"] == REC_ACK:
+                self._journal_acked[rec["uid"]] = completion_from_ack(rec)
+        # journaled acks are the delivery record — serve every one,
+        # including acks from before the checkpoint horizon
+        self._completions.update(self._journal_acked)
+        self._replaying = True
+        try:
+            for rec in records[from_seq:]:
+                if rec["t"] == REC_SUBMIT:
+                    if rec["uid"] in self._journal_acked:
+                        continue        # already delivered
+                    self.submit(np.asarray(rec["prompt"], np.int32),
+                                rec["max_new_tokens"],
+                                arrival=rec["arrival"],
+                                speculate_k=rec["speculate_k"],
+                                priority=rec["priority"],
+                                deadline_s=rec["deadline_s"],
+                                uid=rec["uid"])
+                elif rec["t"] == REC_CANCEL:
+                    if rec["uid"] in self._journal_acked:
+                        continue        # resolved before the crash
+                    self.cancel(rec["uid"])
+        finally:
+            self._replaying = False
+
+    def recover_in_place(self) -> None:
+        """Restore the newest durable checkpoint (if any) and replay
+        the journal tail past it. After this the engine is at the exact
+        logical state of the dead incarnation's last boundary: running
+        it to completion yields every outstanding ack bit-identically
+        (greedy), with no ack lost or duplicated."""
+        from_seq = 0
+        if self._ckpt_mgr is not None and self._ckpt_mgr.has_checkpoint():
+            from_seq = self.restore_checkpoint()
+        if self.journal is not None:
+            self._replay_journal(from_seq)
+
+    @classmethod
+    def recover(cls, params: Any, cfg: ModelConfig,
+                rules: Optional[Rules] = None, *,
+                journal: Optional[Any] = None,
+                checkpoint_dir: Optional[str] = None,
+                **kwargs) -> "DecodeEngine":
+        """Build an engine and bring it to the journal+checkpoint
+        state — the restart path after a crash. Pass the same engine
+        kwargs the dead incarnation used (the checkpoint's device tree
+        is config-shaped)."""
+        eng = cls(params, cfg, rules, journal=journal,
+                  checkpoint_dir=checkpoint_dir, **kwargs)
+        eng.recover_in_place()
+        return eng
 
     # ------------------------------------------------------------------
     # speculative rounds

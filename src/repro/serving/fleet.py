@@ -29,17 +29,45 @@ Design notes:
 * Lifecycle controls (cancel, priorities, deadlines, preemption,
   NaN quarantine) live in the groups and work unchanged; ``cancel``
   routes by uid.
+
+Replica failover (the durability layer):
+
+``replicas=N`` runs N identical engines per backend group behind the
+same queue. Each replica keeps its own write-ahead journal (in-memory
+by default; file-backed under ``journal_dir``), submissions round-robin
+across healthy replicas, and the fleet supervises liveness:
+
+* an :class:`~repro.serving.lifecycle.InjectedCrash` (or any crash
+  surfacing from a replica's ``step``) counts a breaker failure; at
+  ``breaker_threshold`` failures the **circuit breaker opens** — the
+  replica stops being routed to and stops being stepped;
+* a replica that has not completed a step for ``heartbeat_misses``
+  fleet steps (breaker-open replicas stop beating) is **declared
+  dead**, and the fleet fails its work over: every completion acked in
+  the dead replica's journal is adopted as-is (delivered is
+  delivered), and every journaled-but-unacked submit is re-admitted to
+  a healthy replica of the same group under a fresh uid, aliased back
+  to the original — so callers see exactly one completion per original
+  uid, bit-identical (greedy) to a run where the replica never died,
+  because a greedy completion depends only on (params, prompt). The
+  re-admission cost is a prompt re-prefill into an O(k²) fixed-size
+  state — no KV cache to reconstruct. (Deadlines do not survive
+  failover: they are absolute logical-clock stamps in the dead
+  replica's time frame.)
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.serving.engine import Completion, DecodeEngine
-from repro.serving.lifecycle import SHED_POLICIES
+from repro.serving.journal import Journal, completion_from_ack
+from repro.serving.lifecycle import SHED_POLICIES, InjectedCrash
 
 
 def fleet_demo_config(name: str):
@@ -64,6 +92,19 @@ def fleet_demo_config(name: str):
     return dataclasses.replace(cfg, dtype="float32")
 
 
+@dataclasses.dataclass
+class ReplicaState:
+    """One replica's supervision record: its engine plus the breaker/
+    heartbeat bookkeeping the fleet keys routing and failover on."""
+    engine: DecodeEngine
+    name: str                 # backend group
+    idx: int                  # replica index within the group
+    failures: int = 0         # crashes observed from step()
+    open: bool = False        # circuit breaker tripped: no routing/steps
+    dead: bool = False        # heartbeat declared it dead; failed over
+    last_beat: int = 0        # fleet step of its last completed step
+
+
 class FleetEngine:
     """N backend slot groups behind one submit/run API.
 
@@ -73,6 +114,16 @@ class FleetEngine:
     ``segment_len``, ``max_len``, ...), its backend resolved from its
     config by the registry. ``per_group`` supplies per-group engine
     overrides (e.g. a draft provider for one group only).
+
+    Durability knobs: ``replicas`` runs that many engines per group
+    with round-robin routing and journal-based failover (see module
+    docstring); ``replica_injectors`` maps ``(group, replica_idx)`` to
+    a FaultInjector (chaos harness: crash one replica, not all);
+    ``journal_dir``/``checkpoint_dir`` make the per-replica journals
+    and engine checkpoints file-backed (``<dir>/<group>.r<idx>``...),
+    which is what :meth:`recover` restarts from; ``breaker_threshold``
+    crashes open a replica's breaker and ``heartbeat_misses`` silent
+    fleet steps declare it dead.
     """
 
     def __init__(
@@ -82,21 +133,52 @@ class FleetEngine:
         max_queue: Optional[int] = None,
         shed_policy: str = "reject_new",
         per_group: Optional[Dict[str, Dict[str, Any]]] = None,
+        replicas: int = 1,
+        replica_injectors: Optional[Dict[Tuple[str, int], Any]] = None,
+        journal_dir: Optional[str] = None,
+        checkpoint_dir: Optional[str] = None,
+        breaker_threshold: int = 1,
+        heartbeat_misses: int = 2,
         **engine_kwargs,
     ):
         assert groups, "FleetEngine needs at least one backend group"
         assert shed_policy in SHED_POLICIES, shed_policy
         assert max_queue is None or max_queue >= 1, max_queue
+        assert replicas >= 1 and breaker_threshold >= 1
+        assert heartbeat_misses >= 1
         self.max_queue = max_queue
         self.shed_policy = shed_policy
-        self.groups: Dict[str, DecodeEngine] = {}
+        self.n_replicas = replicas
+        self.breaker_threshold = breaker_threshold
+        self.heartbeat_misses = heartbeat_misses
+        self.journal_dir = journal_dir
+        self.checkpoint_dir = checkpoint_dir
+        self._replicas: Dict[str, List[ReplicaState]] = {}
         for name, spec in groups.items():
             params, cfg = spec[0], spec[1]
             rules = spec[2] if len(spec) > 2 else None
-            kw = dict(engine_kwargs)
-            kw.update((per_group or {}).get(name, {}))
-            # groups keep unbounded queues; the fleet bounds the TOTAL
-            self.groups[name] = DecodeEngine(params, cfg, rules, **kw)
+            reps = []
+            for r in range(replicas):
+                kw = dict(engine_kwargs)
+                kw.update((per_group or {}).get(name, {}))
+                inj = (replica_injectors or {}).get((name, r))
+                if inj is not None:
+                    kw["injector"] = inj
+                if "journal" not in kw:
+                    kw["journal"] = (
+                        os.path.join(journal_dir, f"{name}.r{r}.journal")
+                        if journal_dir is not None else Journal())
+                if checkpoint_dir is not None and "checkpoint_dir" not in kw:
+                    kw["checkpoint_dir"] = os.path.join(
+                        checkpoint_dir, f"{name}.r{r}")
+                # groups keep unbounded queues; the fleet bounds the TOTAL
+                reps.append(ReplicaState(
+                    engine=DecodeEngine(params, cfg, rules, **kw),
+                    name=name, idx=r))
+            self._replicas[name] = reps
+        # compat view: group name → its primary (replica-0) engine
+        self.groups: Dict[str, DecodeEngine] = {
+            name: reps[0].engine for name, reps in self._replicas.items()}
         self.default_backend = next(iter(self.groups))
         self.reset()
 
@@ -104,28 +186,112 @@ class FleetEngine:
 
     def reset(self) -> None:
         """Clear all groups' requests/slots/stats; keep compiled
-        programs."""
-        for eng in self.groups.values():
-            eng.reset()
+        programs. Replica supervision state (breakers, heartbeats,
+        aliases) resets too; in-memory journals start fresh (file-
+        backed ones are append-only durable logs and are left alone)."""
+        for reps in self._replicas.values():
+            for rs in reps:
+                rs.engine.reset()
+                rs.failures = 0
+                rs.open = False
+                rs.dead = False
+                rs.last_beat = 0
+                if rs.engine.journal is not None \
+                        and rs.engine.journal.path is None:
+                    rs.engine.journal = Journal()
         self._route: Dict[int, str] = {}        # uid → group name
+        self._replica_route: Dict[int, int] = {}  # uid → replica idx
+        self._alias: Dict[int, int] = {}        # re-admitted uid → orig
+        self._realias: Dict[int, int] = {}      # orig uid → re-admitted
+        self._dead_acks: Dict[int, Completion] = {}  # adopted journal acks
+        self._rr: Dict[str, int] = {n: 0 for n in self._replicas}
+        self._beat = 0
         self._next_uid = 0
         self.fleet_shed = 0      # sheds forced by the FLEET queue bound
+        self.failovers = 0       # replicas declared dead + failed over
+        self.readmitted = 0      # stranded requests re-admitted
+        self.unrecovered: List[int] = []  # stranded with no healthy home
+
+    # -- replica supervision -------------------------------------------
+
+    def _healthy(self, name: str) -> List[ReplicaState]:
+        return [rs for rs in self._replicas[name]
+                if not rs.open and not rs.dead]
+
+    def _alive(self) -> List[ReplicaState]:
+        return [rs for reps in self._replicas.values() for rs in reps
+                if not rs.open and not rs.dead]
+
+    def _pick_replica(self, name: str) -> ReplicaState:
+        """Round-robin over the group's healthy replicas (the breaker
+        removes failing ones from rotation)."""
+        healthy = self._healthy(name)
+        if not healthy:
+            raise RuntimeError(
+                f"no healthy replica in group {name!r} "
+                f"({len(self._replicas[name])} configured)")
+        rs = healthy[self._rr[name] % len(healthy)]
+        self._rr[name] += 1
+        return rs
+
+    def _heartbeat_pass(self) -> None:
+        """Declare-and-failover: a replica silent for
+        ``heartbeat_misses`` fleet steps (its breaker opened, or it
+        stopped completing steps) is dead — adopt its journal's acks
+        and re-admit its unacked submits elsewhere."""
+        for reps in self._replicas.values():
+            for rs in reps:
+                if (not rs.dead
+                        and self._beat - rs.last_beat
+                        >= self.heartbeat_misses):
+                    self._failover(rs)
+
+    def _failover(self, rs: ReplicaState) -> None:
+        rs.dead = True
+        rs.open = True
+        self.failovers += 1
+        jr = rs.engine.journal
+        if jr is None:
+            return
+        # delivered is delivered: journal acks are served verbatim,
+        # never re-run (exactly-once across replica death)
+        for uid, rec in jr.acked().items():
+            self._dead_acks[uid] = completion_from_ack(rec)
+        for rec in jr.unacked_submits():
+            orig = rec["uid"]
+            try:
+                target = self._pick_replica(rs.name)
+            except RuntimeError:
+                self.unrecovered.append(orig)
+                continue
+            new_uid = self._next_uid
+            self._next_uid = new_uid + 1
+            target.engine.submit(
+                np.asarray(rec["prompt"], np.int32),
+                rec["max_new_tokens"], arrival=0.0,
+                speculate_k=rec["speculate_k"],
+                priority=rec["priority"], deadline_s=None, uid=new_uid)
+            self._route[new_uid] = rs.name
+            self._replica_route[new_uid] = target.idx
+            self._alias[new_uid] = orig
+            self._realias[orig] = new_uid
+            self.readmitted += 1
 
     def backend_of(self, uid: int) -> Optional[str]:
         return self._route.get(uid)
 
     def _queued_total(self) -> int:
-        return sum(e.queue_depth() for e in self.groups.values())
+        return sum(rs.engine.queue_depth() for rs in self._alive())
 
-    def _pick_queued_victim(self) -> Optional[Tuple[str, Any]]:
+    def _pick_queued_victim(self) -> Optional[Tuple[ReplicaState, Any]]:
         """Lowest-(priority, then newest) queued request ACROSS groups —
         the fleet-wide form of the engine's evict_lowest policy."""
         best = None
-        for name, eng in self.groups.items():
-            for r in eng._queue:
+        for rs in self._alive():
+            for r in rs.engine._queue:
                 key = (r.priority, -r.arrival, -r.uid)
                 if best is None or key < best[0]:
-                    best = (key, name, r)
+                    best = (key, rs, r)
         return (best[1], best[2]) if best is not None else None
 
     def submit(self, prompt, max_new_tokens: int, *,
@@ -141,7 +307,8 @@ class FleetEngine:
             raise KeyError(
                 f"unknown backend {backend!r}; fleet serves "
                 f"{list(self.groups)}")
-        eng = self.groups[backend]
+        target = self._pick_replica(backend)
+        eng = target.engine
         uid = self._next_uid
         if (self.max_queue is not None
                 and self._queued_total() >= self.max_queue):
@@ -149,7 +316,7 @@ class FleetEngine:
             if self.shed_policy == "evict_lowest":
                 victim = self._pick_queued_victim()
                 if victim is not None and victim[1].priority < priority:
-                    self.groups[victim[0]].shed_queued(victim[1].uid)
+                    victim[0].engine.shed_queued(victim[1].uid)
                     self.fleet_shed += 1
                     shed_arrival = False
             if shed_arrival:
@@ -164,29 +331,57 @@ class FleetEngine:
                 self.fleet_shed += 1
                 self._next_uid = uid + 1
                 self._route[uid] = backend
+                self._replica_route[uid] = target.idx
                 return uid
         eng.submit(np.asarray(prompt), max_new_tokens, arrival=arrival,
                    speculate_k=speculate_k, priority=priority,
                    deadline_s=deadline_s, uid=uid)
         self._next_uid = uid + 1
         self._route[uid] = backend
+        self._replica_route[uid] = target.idx
         return uid
 
     def cancel(self, uid: int) -> bool:
         name = self._route.get(uid)
-        return self.groups[name].cancel(uid) if name else False
+        if name is None:
+            return False
+        # a failed-over request lives under its re-admitted alias
+        live = self._realias.get(uid, uid)
+        idx = self._replica_route.get(live, 0)
+        return self._replicas[name][idx].engine.cancel(live)
 
     # ------------------------------------------------------------------
 
     def has_work(self) -> bool:
-        return any(e.has_work() for e in self.groups.values())
+        # a breaker-open replica that hasn't been declared dead yet is
+        # pending failover — its stranded work still counts
+        pending_failover = any(
+            rs.open and not rs.dead
+            for reps in self._replicas.values() for rs in reps)
+        return pending_failover or any(
+            rs.engine.has_work() for rs in self._alive())
 
     def step(self, policy: str = "continuous") -> bool:
-        """One scheduling iteration per group, round-robin — the
-        lockstep interleave that keeps every backend's slots fed from
-        the shared queue without any group monopolising the host."""
-        for eng in self.groups.values():
-            eng.step(policy)
+        """One scheduling iteration per healthy replica of every group,
+        round-robin — the lockstep interleave that keeps every
+        backend's slots fed from the shared queue without any group
+        monopolising the host. A replica whose step crashes counts a
+        breaker failure (at ``breaker_threshold`` the breaker opens —
+        it stops being routed to or stepped); the trailing heartbeat
+        pass declares silent replicas dead and fails their work over."""
+        self._beat += 1
+        for reps in self._replicas.values():
+            for rs in reps:
+                if rs.open or rs.dead:
+                    continue
+                try:
+                    rs.engine.step(policy)
+                    rs.last_beat = self._beat
+                except InjectedCrash:
+                    rs.failures += 1
+                    if rs.failures >= self.breaker_threshold:
+                        rs.open = True
+        self._heartbeat_pass()
         return self.has_work()
 
     def run(self, policy: str = "continuous") -> List[Completion]:
@@ -197,9 +392,21 @@ class FleetEngine:
         return self.completions()
 
     def completions(self) -> List[Completion]:
+        """One completion per original uid, fleet-wide: live replicas'
+        results, acks adopted from dead replicas' journals, and
+        failed-over work re-keyed from its re-admission alias back to
+        the uid the caller holds."""
         merged: Dict[int, Completion] = {}
-        for eng in self.groups.values():
-            merged.update(eng._completions)
+        for reps in self._replicas.values():
+            for rs in reps:
+                if rs.dead:
+                    continue        # its journal acks are in _dead_acks
+                merged.update(rs.engine._completions)
+        merged.update(self._dead_acks)
+        for new_uid, orig in self._alias.items():
+            c = merged.pop(new_uid, None)
+            if c is not None and orig not in self._dead_acks:
+                merged[orig] = dataclasses.replace(c, uid=orig)
         return [merged[u] for u in sorted(merged)]
 
     # ------------------------------------------------------------------
@@ -215,6 +422,9 @@ class FleetEngine:
         """Per-group stats + fleet-level counters, JSON-able."""
         return {
             "fleet_shed": self.fleet_shed,
+            "failovers": self.failovers,
+            "readmitted": self.readmitted,
+            "unrecovered": list(self.unrecovered),
             "groups": {
                 name: {
                     "backend": eng.backend.name,
@@ -227,4 +437,98 @@ class FleetEngine:
                 }
                 for name, eng in self.groups.items()
             },
+            "replicas": {
+                name: [
+                    {"idx": rs.idx, "open": rs.open, "dead": rs.dead,
+                     "failures": rs.failures,
+                     "journal_seq": (rs.engine.journal.seq
+                                     if rs.engine.journal else 0)}
+                    for rs in reps]
+                for name, reps in self._replicas.items()
+            },
         }
+
+    # ------------------------------------------------------------------
+    # fleet durability: checkpoint / recover
+    # ------------------------------------------------------------------
+
+    def _fleet_meta_path(self) -> str:
+        assert self.checkpoint_dir is not None
+        return os.path.join(self.checkpoint_dir, "fleet.json")
+
+    def save_checkpoint(self) -> None:
+        """Checkpoint every healthy replica's engine (each into its own
+        ``<checkpoint_dir>/<group>.r<idx>`` manager) plus the fleet's
+        routing/alias tables (``fleet.json``, written atomically).
+        Requires the fleet to be built with ``checkpoint_dir``."""
+        if self.checkpoint_dir is None:
+            raise ValueError("fleet has no checkpoint_dir configured")
+        for rs in self._alive():
+            rs.engine.save_checkpoint()
+        meta = {
+            "next_uid": self._next_uid,
+            "route": {str(u): n for u, n in self._route.items()},
+            "replica_route": {str(u): i
+                              for u, i in self._replica_route.items()},
+            "alias": {str(u): o for u, o in self._alias.items()},
+            "realias": {str(u): o for u, o in self._realias.items()},
+            "rr": dict(self._rr),
+            "beat": self._beat,
+            "fleet_shed": self.fleet_shed,
+            "failovers": self.failovers,
+            "readmitted": self.readmitted,
+            "unrecovered": list(self.unrecovered),
+            "replica_flags": {
+                name: [{"open": rs.open, "dead": rs.dead,
+                        "failures": rs.failures,
+                        "last_beat": rs.last_beat} for rs in reps]
+                for name, reps in self._replicas.items()},
+        }
+        tmp = self._fleet_meta_path() + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(meta, f)
+        os.replace(tmp, self._fleet_meta_path())
+
+    def recover_in_place(self) -> None:
+        """Restore every replica engine from its checkpoint manager +
+        journal, and the fleet tables from ``fleet.json`` — the restart
+        path after the whole process died."""
+        if self.checkpoint_dir is not None \
+                and os.path.exists(self._fleet_meta_path()):
+            with open(self._fleet_meta_path()) as f:
+                meta = json.load(f)
+            self._next_uid = meta["next_uid"]
+            self._route = {int(u): n for u, n in meta["route"].items()}
+            self._replica_route = {
+                int(u): i for u, i in meta["replica_route"].items()}
+            self._alias = {int(u): o for u, o in meta["alias"].items()}
+            self._realias = {int(u): o
+                             for u, o in meta["realias"].items()}
+            self._rr = dict(meta["rr"])
+            self._beat = meta["beat"]
+            self.fleet_shed = meta["fleet_shed"]
+            self.failovers = meta["failovers"]
+            self.readmitted = meta["readmitted"]
+            self.unrecovered = list(meta["unrecovered"])
+            for name, flags in meta["replica_flags"].items():
+                for rs, fl in zip(self._replicas[name], flags):
+                    rs.open = fl["open"]
+                    rs.dead = fl["dead"]
+                    rs.failures = fl["failures"]
+                    rs.last_beat = fl["last_beat"]
+        for rs in self._alive():
+            rs.engine.recover_in_place()
+        for reps in self._replicas.values():
+            for rs in reps:
+                if rs.dead and rs.engine.journal is not None:
+                    for uid, rec in rs.engine.journal.acked().items():
+                        self._dead_acks[uid] = completion_from_ack(rec)
+
+    @classmethod
+    def recover(cls, groups: Dict[str, Tuple], **kwargs) -> "FleetEngine":
+        """Build a fleet and bring it to its journal+checkpoint state.
+        Pass the same construction kwargs (incl. ``journal_dir`` and
+        ``checkpoint_dir``) the dead incarnation used."""
+        fleet = cls(groups, **kwargs)
+        fleet.recover_in_place()
+        return fleet

@@ -1,0 +1,249 @@
+"""Write-ahead request journal — durable serving's source of truth.
+
+The engine's in-memory lifecycle (PR 6) survives *numeric* faults; this
+module makes the request stream survive *process death*. Every externally
+visible engine transition is appended to a journal BEFORE the engine
+mutates itself:
+
+* ``submit`` — the request's full identity (uid, prompt, budget,
+  arrival, priority, deadline, speculate_k), written after validation
+  but before any queue mutation, so a crash right after ``submit()``
+  returns can never lose the request;
+* ``cancel`` — the cancellation intent;
+* ``ack``   — the completion *delivery record*: uid, token stream and
+  status. An ack in the journal means the result left the engine; a
+  submit without an ack is work the journal owes the caller.
+* ``ckpt``  — a marker that an engine checkpoint was taken at this
+  journal position (recovery replays only records past it).
+
+The paper's fixed-size O(k²) representation is what makes the rest of
+durability cheap (an engine checkpoint is S·k² floats per layer, not an
+unbounded KV cache); the journal is the cheap half of the pair — a few
+hundred bytes per request — and together they give exactly-once
+semantics: **replaying a journal into a fresh engine (greedy decode)
+reproduces the exact completion set, with no lost and no duplicated
+acks**, because greedy tokens depend only on (params, prompt) and acked
+uids are never re-delivered.
+
+On-disk format (append-only, corruption-evident)::
+
+    magic  b"WAJ1"
+    record := header | payload
+    header := <u32 payload_len> <u32 crc32(payload)>  (little-endian)
+    payload := canonical JSON (utf-8)
+
+Every append is flushed and ``os.fsync``'d by default, so an acked
+completion is on stable storage before the caller sees it. A crash mid-
+append leaves a truncated or checksum-failing tail; readers stop at the
+last valid record (reporting how many bytes of garbage follow) and a
+writer re-opening the file truncates the garbage before appending —
+the journal can therefore always be extended after any crash.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import struct
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+MAGIC = b"WAJ1"
+_HEADER = struct.Struct("<II")          # payload_len, crc32(payload)
+MAX_RECORD_BYTES = 1 << 26              # 64 MiB: reject absurd lengths
+
+# record types
+REC_SUBMIT = "submit"
+REC_CANCEL = "cancel"
+REC_ACK = "ack"
+REC_CKPT = "ckpt"
+
+
+def encode_record(rec: Dict[str, Any]) -> bytes:
+    """One length-prefixed checksummed record (header + JSON payload)."""
+    payload = json.dumps(rec, separators=(",", ":"),
+                         sort_keys=True).encode("utf-8")
+    return _HEADER.pack(len(payload), zlib.crc32(payload)) + payload
+
+
+def scan_records(blob: bytes) -> Tuple[List[Dict[str, Any]], int]:
+    """Decode records from ``blob`` (past the magic); returns
+    ``(records, valid_bytes)`` where ``valid_bytes`` is the offset of
+    the first truncated/corrupt record (== len(blob) for a clean
+    journal). Scanning never raises on a damaged tail — that is the
+    crash-mid-append case recovery exists for."""
+    records: List[Dict[str, Any]] = []
+    off = 0
+    n = len(blob)
+    while off + _HEADER.size <= n:
+        length, crc = _HEADER.unpack_from(blob, off)
+        start = off + _HEADER.size
+        end = start + length
+        if length > MAX_RECORD_BYTES or end > n:
+            break                         # truncated tail
+        payload = blob[start:end]
+        if zlib.crc32(payload) != crc:
+            break                         # corrupt tail
+        try:
+            rec = json.loads(payload.decode("utf-8"))
+        except (UnicodeDecodeError, json.JSONDecodeError):
+            break
+        records.append(rec)
+        off = end
+    return records, off
+
+
+def read_journal(path: str) -> Tuple[List[Dict[str, Any]], int]:
+    """Read a journal file; returns ``(records, garbage_bytes)`` where
+    ``garbage_bytes`` counts trailing bytes past the last valid record
+    (0 for a cleanly closed journal). Raises ``ValueError`` naming the
+    path if the file is not a journal at all (bad magic)."""
+    with open(path, "rb") as f:
+        blob = f.read()
+    if blob[:len(MAGIC)] != MAGIC:
+        raise ValueError(f"{path!r} is not a request journal "
+                         f"(bad magic {blob[:len(MAGIC)]!r})")
+    records, valid = scan_records(blob[len(MAGIC):])
+    return records, len(blob) - len(MAGIC) - valid
+
+
+class Journal:
+    """Append-only request journal; file-backed or in-memory.
+
+    ``path=None`` keeps records in memory only — the mode replica
+    fleets use for their per-replica journals when no durability
+    directory is configured (failover still works; process death does
+    not). With a path, the file is created (with magic) or re-opened:
+    existing valid records are loaded (``.records()`` serves them for
+    replay) and any torn tail from a previous crash is truncated so
+    appends continue from the last good record.
+
+    ``fsync=True`` (default) syncs every append — the write-ahead
+    guarantee. Benchmarks measuring journal overhead can disable it.
+    """
+
+    def __init__(self, path: Optional[str] = None, *, fsync: bool = True):
+        self.path = path
+        self.fsync = fsync
+        self._records: List[Dict[str, Any]] = []
+        self._fh = None
+        self.recovered_garbage_bytes = 0
+        if path is None:
+            return
+        if os.path.exists(path):
+            records, garbage = read_journal(path)
+            self._records = records
+            self.recovered_garbage_bytes = garbage
+            valid_size = os.path.getsize(path) - garbage
+            self._fh = open(path, "r+b")
+            if garbage:
+                self._fh.truncate(valid_size)
+            self._fh.seek(0, os.SEEK_END)
+        else:
+            parent = os.path.dirname(path)
+            if parent:
+                os.makedirs(parent, exist_ok=True)
+            self._fh = open(path, "w+b")
+            self._fh.write(MAGIC)
+            self._fh.flush()
+            os.fsync(self._fh.fileno())
+
+    # -- write side ----------------------------------------------------
+
+    def append(self, rec: Dict[str, Any]) -> int:
+        """Append one record; returns its sequence number (position).
+        File-backed journals flush + fsync before returning, so the
+        record is durable when the caller proceeds."""
+        seq = len(self._records)
+        self._records.append(rec)
+        if self._fh is not None:
+            self._fh.write(encode_record(rec))
+            self._fh.flush()
+            if self.fsync:
+                os.fsync(self._fh.fileno())
+        return seq
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "Journal":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- read side -----------------------------------------------------
+
+    @property
+    def seq(self) -> int:
+        """Records appended so far (the next record's sequence number)."""
+        return len(self._records)
+
+    def records(self) -> List[Dict[str, Any]]:
+        return list(self._records)
+
+    def acked(self) -> Dict[int, Dict[str, Any]]:
+        """uid → ack record, for every delivered completion."""
+        return {r["uid"]: r for r in self._records if r["t"] == REC_ACK}
+
+    def unacked_submits(self) -> List[Dict[str, Any]]:
+        """Submit records the journal still owes an ack for — the work
+        a recovering (or failing-over) engine must re-admit, in the
+        original submission order."""
+        done = {r["uid"] for r in self._records if r["t"] == REC_ACK}
+        return [r for r in self._records
+                if r["t"] == REC_SUBMIT and r["uid"] not in done]
+
+
+# ---------------------------------------------------------------------------
+# record constructors / converters (the one place field names live)
+# ---------------------------------------------------------------------------
+
+def submit_record(uid: int, prompt, max_new_tokens: int, arrival: float,
+                  speculate_k: int, priority: int,
+                  deadline_s: Optional[float]) -> Dict[str, Any]:
+    import numpy as np
+    return {"t": REC_SUBMIT, "uid": int(uid),
+            "prompt": np.asarray(prompt, np.int32).tolist(),
+            "max_new_tokens": int(max_new_tokens),
+            "arrival": float(arrival), "speculate_k": int(speculate_k),
+            "priority": int(priority),
+            "deadline_s": (None if deadline_s is None
+                           else float(deadline_s))}
+
+
+def cancel_record(uid: int) -> Dict[str, Any]:
+    return {"t": REC_CANCEL, "uid": int(uid)}
+
+
+def ack_record(completion) -> Dict[str, Any]:
+    import numpy as np
+    return {"t": REC_ACK, "uid": int(completion.uid),
+            "prompt_len": int(completion.prompt_len),
+            "tokens": np.asarray(completion.tokens, np.int32).tolist(),
+            "finish_reason": completion.finish_reason,
+            "admitted_step": int(completion.admitted_step),
+            "finished_step": int(completion.finished_step),
+            "status": completion.status,
+            "retries": int(completion.retries)}
+
+
+def ckpt_record(step: int, seq: int) -> Dict[str, Any]:
+    return {"t": REC_CKPT, "step": int(step), "seq": int(seq)}
+
+
+def completion_from_ack(rec: Dict[str, Any]):
+    """Rebuild a Completion from its journaled ack (the authoritative
+    delivery record a recovered engine serves instead of re-acking)."""
+    import numpy as np
+
+    from repro.serving.engine import Completion
+    return Completion(
+        uid=rec["uid"], prompt_len=rec["prompt_len"],
+        tokens=np.asarray(rec["tokens"], np.int32),
+        finish_reason=rec["finish_reason"],
+        admitted_step=rec["admitted_step"],
+        finished_step=rec["finished_step"],
+        status=rec["status"], retries=rec.get("retries", 0))

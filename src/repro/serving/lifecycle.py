@@ -63,6 +63,18 @@ STATUS_FAILED = "failed"        # numeric fault, retries exhausted
 SHED_POLICIES = ("reject_new", "evict_lowest")
 
 
+class InjectedCrash(RuntimeError):
+    """Raised by the engine at an event boundary when the chaos
+    injector schedules a process-death fault there. Carries the event
+    index so harnesses can label the kill point. Anything the engine
+    had not journaled/checkpointed when this propagates is lost — which
+    is exactly what the durability layer must tolerate."""
+
+    def __init__(self, event_idx: int):
+        super().__init__(f"injected crash at event {event_idx}")
+        self.event_idx = event_idx
+
+
 @dataclasses.dataclass
 class SuspendedRequest:
     """A request swapped out of its slot mid-generation.
@@ -123,11 +135,17 @@ class FaultInjector:
     zeroed before verification (forces rejection + rewind).
     ``delay``: event_idx → extra logical decode steps added to the
     clock after that event (trips deadlines without real latency).
+    ``crash``: event indices at which the engine dies — it raises
+    :class:`InjectedCrash` *before* any other boundary work at that
+    event, modelling a process kill at a scheduling boundary. Paired
+    with the journal + checkpoint layer, this is how the chaos harness
+    measures zero-loss recovery.
     """
     nan: Tuple[Tuple[int, int], ...] = ()
     drop_admission: Tuple[int, ...] = ()
     spec_mismatch: Tuple[int, ...] = ()
     delay: Optional[Dict[int, int]] = None
+    crash: Tuple[int, ...] = ()
 
     def nan_slots(self, event_idx: int) -> List[int]:
         return [s for e, s in self.nan if e == event_idx]
@@ -140,3 +158,6 @@ class FaultInjector:
 
     def extra_delay(self, event_idx: int) -> int:
         return (self.delay or {}).get(event_idx, 0)
+
+    def crashes(self, event_idx: int) -> bool:
+        return event_idx in self.crash

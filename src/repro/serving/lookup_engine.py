@@ -52,12 +52,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.manager import CheckpointManager
 from repro.core.linear_attention import safe_denom
 from repro.core.state import DocumentState
 from repro.kernels.lookup import ops as lookup_ops
 from repro.qa.gru import gru_scan
 from repro.serving.engine import _pow2_ceil
-from repro.serving.lifecycle import SHED_POLICIES, STATUS_OK, STATUS_SHED
+from repro.serving.lifecycle import (
+    SHED_POLICIES,
+    STATUS_CANCELLED,
+    STATUS_OK,
+    STATUS_SHED,
+)
 
 Array = jax.Array
 
@@ -304,6 +310,7 @@ class LookupStats:
     lookup_jit_misses: int = 0    # distinct wave program shapes
     multi_memory_waves: int = 0   # waves mixing >1 distinct memory
     shed: int = 0                 # bounded-queue rejections
+    cancelled: int = 0            # queued requests cancelled (hedge losers)
 
     @property
     def queries_per_wave(self) -> float:
@@ -588,6 +595,23 @@ class LookupEngine:
             uid=req.uid, doc_id=req.doc_id, answers=None,
             status=STATUS_SHED)
 
+    def cancel(self, uid: int) -> bool:
+        """Cancel a QUEUED lookup request: it resolves immediately with
+        ``status="cancelled"`` and never joins a wave. Returns False if
+        the uid is unknown or already served — a lookup that entered a
+        wave is already answered (waves are synchronous), so unlike the
+        decode engine there is no in-flight window to mark. This is the
+        hedged-lookup loser-cancellation primitive."""
+        for i, r in enumerate(self._queue):
+            if r.uid == uid:
+                self._queue.pop(i)
+                self.stats.cancelled += 1
+                self._results[uid] = LookupResult(
+                    uid=uid, doc_id=r.doc_id, answers=None,
+                    status=STATUS_CANCELLED)
+                return True
+        return False
+
     def queue_depth(self) -> int:
         return len(self._queue)
 
@@ -647,3 +671,231 @@ class LookupEngine:
         """Logical bytes of every resident memory (the number that is
         O(N·k²) for the linear backend and O(Σ nᵢ·k) for softmax)."""
         return self.stats.resident_state_bytes
+
+    # -- durability ----------------------------------------------------
+
+    def save_checkpoint(self, directory: str, step: int = 0,
+                        keep: int = 2) -> None:
+        """Persist the whole engine — resident store (for the linear
+        backend that is N·k² floats total, however long the documents
+        were), row/length maps, queued+pending work, served results,
+        stats — through the atomic pytree writer. A restored engine
+        answers bit-identically: the store arrays round-trip bitwise
+        and lookups are pure functions of (store, rows, q)."""
+        extra = {
+            "capacity": self._capacity, "n_cap": self._n_cap,
+            "row_of": dict(self._row_of),
+            "len_of": dict(self._len_of),
+            "pending": [[d, np.asarray(t, np.int32).tolist()]
+                        for d, t in self._pending],
+            "queue": [{"uid": r.uid, "doc_id": r.doc_id,
+                       "queries": np.asarray(r.queries).tolist(),
+                       "priority": r.priority} for r in self._queue],
+            "results": [
+                {"uid": r.uid, "doc_id": r.doc_id,
+                 "answers": (None if r.answers is None
+                             else np.asarray(r.answers).tolist()),
+                 "status": r.status, "wave": r.wave}
+                for _, r in sorted(self._results.items())],
+            "next_uid": self._next_uid,
+            "stats": dataclasses.asdict(self.stats),
+            "seen_shapes": sorted(list(k) for k in self._seen_shapes),
+        }
+        CheckpointManager(directory, keep=keep).save(
+            step, {"store": self.store}, extra, blocking=True)
+
+    def restore_checkpoint(self, directory: str,
+                           step: Optional[int] = None) -> None:
+        """Restore from :meth:`save_checkpoint` output (newest retained
+        step by default, falling back past corrupt ones)."""
+        tree, extra, _ = CheckpointManager(directory).restore(
+            {"store": self.store}, step)
+        self._capacity = extra["capacity"]
+        self._n_cap = extra["n_cap"]
+        self.store = jax.tree.map(jnp.asarray, tree["store"])
+        self._row_of = dict(extra["row_of"])
+        self._len_of = {d: int(n) for d, n in extra["len_of"].items()}
+        self._pending = [(d, np.asarray(t, np.int32))
+                         for d, t in extra["pending"]]
+        qdt = np.dtype(self.backend.dtype)
+        self._queue = [
+            LookupRequest(uid=d["uid"], doc_id=d["doc_id"],
+                          queries=np.asarray(d["queries"], qdt),
+                          priority=d["priority"])
+            for d in extra["queue"]]
+        self._results = {
+            d["uid"]: LookupResult(
+                uid=d["uid"], doc_id=d["doc_id"],
+                answers=(None if d["answers"] is None
+                         else np.asarray(d["answers"], qdt)),
+                status=d["status"], wave=d["wave"])
+            for d in extra["results"]}
+        self._next_uid = extra["next_uid"]
+        self.stats = LookupStats(**extra["stats"])
+        self._seen_shapes = {tuple(k) for k in extra["seen_shapes"]}
+
+    @classmethod
+    def recover(cls, encoder: Optional[Dict[str, Any]] = None, *,
+                directory: str, **kwargs) -> "LookupEngine":
+        """Build a lookup engine and restore it from ``directory`` —
+        the restart path. Pass the construction kwargs the dead
+        incarnation used."""
+        eng = cls(encoder, **kwargs)
+        eng.restore_checkpoint(directory)
+        return eng
+
+
+# ---------------------------------------------------------------------------
+# hedged lookups: tail-latency failover across lookup replicas
+# ---------------------------------------------------------------------------
+
+class HedgedLookup:
+    """N :class:`LookupEngine` replicas behind one submit/results API,
+    with request hedging — the classic tail-latency/failover move, and
+    nearly free here because replicating a memory is an O(k²) copy.
+
+    Every ingest/pin lands on ALL replicas (each holds the full store);
+    a submitted request routes to ONE replica round-robin. A request
+    still unanswered ``hedge_after`` scheduler ticks later (its replica
+    is slow, backlogged, or dead) is **duplicated** to a second
+    replica; the FIRST answer to arrive wins and the loser is
+    cancelled out of its queue (:meth:`LookupEngine.cancel`). Both
+    replicas serve the same store, so whichever copy wins the caller
+    gets an answer computed from the same document state. When every
+    request in a wave carries the same query count the answer is
+    bitwise identical regardless of which replica served it; waves
+    that pad requests to different query widths can differ in
+    low-order float bits (XLA reduction order), exactly as they
+    already do between two differently-batched :class:`LookupEngine`
+    runs — hedging adds no variance beyond wave composition.
+
+    ``kill(r)`` drops a replica from stepping and routing (the chaos
+    hook): its queued work is recovered purely by hedging.
+    """
+
+    def __init__(self, encoder: Optional[Dict[str, Any]] = None, *,
+                 replicas: int = 2, hedge_after: int = 1,
+                 **engine_kwargs):
+        assert replicas >= 2, "hedging needs at least two replicas"
+        assert hedge_after >= 1
+        self.engines = [LookupEngine(encoder, **engine_kwargs)
+                        for _ in range(replicas)]
+        self.hedge_after = hedge_after
+        self._alive = [True] * replicas
+        self._next_uid = 0
+        self._tick = 0
+        # uid → (replica, replica-local uid); hedges tracked separately
+        self._primary: Dict[int, Tuple[int, int]] = {}
+        self._hedge: Dict[int, Tuple[int, int]] = {}
+        self._born: Dict[int, int] = {}          # uid → submit tick
+        # uid → (doc_id, queries, priority): the hedge submit's payload
+        # must not depend on reading a dead replica's internals
+        self._reqs: Dict[int, Tuple[str, np.ndarray, int]] = {}
+        self._results: Dict[int, LookupResult] = {}
+        self._rr = 0
+        self.hedged = 0          # duplicates issued
+        self.hedge_wins = 0      # answers served by the hedge copy
+        self.losers_cancelled = 0
+
+    # -- store management: every replica holds the full store ----------
+
+    def ingest(self, doc_id: str, tokens) -> None:
+        for eng in self.engines:
+            eng.ingest(doc_id, tokens)
+
+    def ingest_hidden(self, doc_id: str, h) -> None:
+        for eng in self.engines:
+            eng.ingest_hidden(doc_id, h)
+
+    def pin(self, doc_id: str, state: DocumentState) -> None:
+        for eng in self.engines:
+            eng.pin(doc_id, state)
+
+    def kill(self, replica: int) -> None:
+        """Drop a replica (chaos hook): no more routing or stepping.
+        Its pending work is recovered by hedging alone."""
+        self._alive[replica] = False
+
+    def _pick(self, exclude: Optional[int] = None) -> int:
+        alive = [r for r in range(len(self.engines))
+                 if self._alive[r] and r != exclude]
+        if not alive:
+            raise RuntimeError("no live lookup replica")
+        r = alive[self._rr % len(alive)]
+        self._rr += 1
+        return r
+
+    def submit(self, doc_id: str, queries, priority: int = 0) -> int:
+        uid = self._next_uid
+        self._next_uid += 1
+        r = self._pick()
+        sub = self.engines[r].submit(doc_id, queries, priority=priority)
+        self._primary[uid] = (r, sub)
+        self._born[uid] = self._tick
+        self._reqs[uid] = (doc_id, np.asarray(queries), priority)
+        return uid
+
+    # -- scheduling ----------------------------------------------------
+
+    def _collect(self, uid: int) -> None:
+        """First answer wins; the losing duplicate is cancelled (or its
+        late answer discarded — never delivered twice)."""
+        for tag, route in (("primary", self._primary.get(uid)),
+                           ("hedge", self._hedge.get(uid))):
+            if route is None:
+                continue
+            r, sub = route
+            res = self.engines[r]._results.get(sub)
+            if res is None or res.status == STATUS_CANCELLED:
+                continue
+            self._results[uid] = dataclasses.replace(res, uid=uid)
+            if tag == "hedge":
+                self.hedge_wins += 1
+            other = (self._hedge if tag == "primary"
+                     else self._primary).get(uid)
+            if other is not None:
+                ro, so = other
+                if self.engines[ro].cancel(so):
+                    self.losers_cancelled += 1
+            self._primary.pop(uid, None)
+            self._hedge.pop(uid, None)
+            self._born.pop(uid, None)
+            self._reqs.pop(uid, None)
+            return
+
+    def step(self) -> bool:
+        """One tick: step live replicas, harvest answers, hedge every
+        request that has waited ``hedge_after`` ticks unanswered."""
+        self._tick += 1
+        for r, eng in enumerate(self.engines):
+            if self._alive[r]:
+                eng.step()
+        for uid in list(self._born):
+            self._collect(uid)
+        for uid, born in list(self._born.items()):
+            if uid in self._hedge or uid in self._results:
+                continue
+            if self._tick - born < self.hedge_after:
+                continue
+            rp, _ = self._primary[uid]
+            try:
+                rh = self._pick(exclude=rp)
+            except RuntimeError:
+                continue
+            doc_id, queries, priority = self._reqs[uid]
+            sub = self.engines[rh].submit(doc_id, queries,
+                                          priority=priority)
+            self._hedge[uid] = (rh, sub)
+            self.hedged += 1
+        return self.has_work()
+
+    def has_work(self) -> bool:
+        return bool(self._born)
+
+    def run(self) -> List[LookupResult]:
+        while self.step():
+            pass
+        return self.results()
+
+    def results(self) -> List[LookupResult]:
+        return [self._results[u] for u in sorted(self._results)]

@@ -113,3 +113,118 @@ class TestElastic:
         per_step, accum = accum_for_batch(256, data_parallel=32,
                                           per_device_batch=4)
         assert per_step * accum == 256
+
+class TestCorruptionHandling:
+    """Satellite: restore must REJECT corrupt checkpoints with a
+    ValueError naming the path — and fall back to an older retained
+    step when the newest is damaged."""
+
+    def _saved(self, key, tmp_path, steps=(1, 2)):
+        m = CheckpointManager(str(tmp_path / "d"), keep=4)
+        trees = {}
+        for s in steps:
+            t = jax.tree.map(lambda x, s=s: x + s, _tree(key))
+            m.save(s, t, extra={"step": s})
+            trees[s] = t
+        return m, trees
+
+    def test_truncated_npz_raises_naming_path(self, key, tmp_path):
+        m, trees = self._saved(key, tmp_path)
+        npz = tmp_path / "d" / "step_2" / "arrays.npz"
+        data = npz.read_bytes()
+        npz.write_bytes(data[: len(data) // 2])
+        with pytest.raises(ValueError, match="step_2"):
+            m.restore(_tree(key), step=2)
+
+    def test_missing_manifest_raises_naming_path(self, key, tmp_path):
+        m, _ = self._saved(key, tmp_path)
+        os.remove(tmp_path / "d" / "step_2" / "manifest.json")
+        with pytest.raises(ValueError, match="step_2"):
+            m.restore(_tree(key), step=2)
+
+    def test_undecodable_manifest_raises_naming_path(self, key, tmp_path):
+        m, _ = self._saved(key, tmp_path)
+        (tmp_path / "d" / "step_2" / "manifest.json").write_text("{oops")
+        with pytest.raises(ValueError, match="step_2"):
+            m.restore(_tree(key), step=2)
+
+    def test_corrupt_latest_falls_back_to_previous(self, key, tmp_path):
+        m, trees = self._saved(key, tmp_path)
+        npz = tmp_path / "d" / "step_2" / "arrays.npz"
+        npz.write_bytes(npz.read_bytes()[:16])
+        restored, extra, step = m.restore(_tree(key))
+        assert step == 1 and extra["step"] == 1
+        np.testing.assert_array_equal(
+            np.asarray(restored["params"]["w"]),
+            np.asarray(trees[1]["params"]["w"]))
+
+    def test_all_corrupt_raises_value_error(self, key, tmp_path):
+        m, _ = self._saved(key, tmp_path)
+        for s in (1, 2):
+            npz = tmp_path / "d" / f"step_{s}" / "arrays.npz"
+            npz.write_bytes(b"junk")
+        with pytest.raises(ValueError):
+            m.restore(_tree(key))
+
+    def test_missing_template_leaf_raises(self, key, tmp_path):
+        m, _ = self._saved(key, tmp_path)
+        bigger = dict(_tree(key))
+        bigger["extra_leaf"] = jnp.zeros((2,))
+        with pytest.raises(ValueError, match="step_2"):
+            m.restore(bigger, step=2)
+
+
+class TestServingPytrees:
+    """Satellite: the manager must round-trip serving-state pytrees —
+    nested dicts/tuples of mixed-dtype arrays — bitwise."""
+
+    def _serving_tree(self, key):
+        import ml_dtypes
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "state": {"s": jax.random.normal(k1, (2, 4, 8)),
+                      "conv": jax.random.normal(k2, (2, 3, 8))},
+            "key": jax.random.PRNGKey(7),
+            "suspended": (
+                {"kv": jax.random.normal(k3, (4, 8)).astype(jnp.bfloat16),
+                 "pos": jnp.int32(12)},
+            ),
+            "slot_ckpt": {"0": {"h": jnp.arange(6, dtype=jnp.float32)}},
+        }
+
+    def test_bitwise_roundtrip_f32_bf16(self, key, tmp_path):
+        t = self._serving_tree(key)
+        m = CheckpointManager(str(tmp_path / "d"))
+        m.save(1, t, extra={"journal_seq": 42})
+        restored, extra, step = m.restore(t)
+        assert extra["journal_seq"] == 42
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+            a, b = np.asarray(a), np.asarray(b)
+            assert a.dtype == b.dtype
+            assert a.tobytes() == b.tobytes()
+
+    def test_atomic_tmp_then_replace(self, key, tmp_path):
+        t = self._serving_tree(key)
+        m = CheckpointManager(str(tmp_path / "d"))
+        m.save(3, t)
+        names = os.listdir(tmp_path / "d")
+        assert names == ["step_3"]
+        assert not any(n.endswith(".tmp") for n in names)
+
+    def test_restore_with_data_dependent_template(self, key, tmp_path):
+        """restore_with builds the template FROM the manifest extra —
+        the shape of a serving checkpoint (suspended count, slot ids)
+        is data, not config."""
+        t = self._serving_tree(key)
+        m = CheckpointManager(str(tmp_path / "d"))
+        m.save(1, t, extra={"n_suspended": 1})
+        seen = {}
+
+        def like_fn(extra):
+            seen.update(extra)
+            return t
+
+        restored, extra, step = m.restore_with(like_fn)
+        assert seen["n_suspended"] == 1
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

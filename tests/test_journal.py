@@ -1,0 +1,201 @@
+"""Write-ahead request journal: record format, corruption handling,
+write-ahead ordering, and exactly-once ack semantics."""
+
+import os
+import struct
+import zlib
+
+import pytest
+
+from repro.serving import Journal, read_journal
+from repro.serving.journal import (
+    MAGIC,
+    REC_ACK,
+    REC_CANCEL,
+    REC_SUBMIT,
+    ack_record,
+    cancel_record,
+    completion_from_ack,
+    encode_record,
+    scan_records,
+    submit_record,
+)
+
+
+def _submit(uid, **kw):
+    base = dict(uid=uid, prompt=[1, 2, 3], max_new_tokens=4,
+                arrival=0.0, speculate_k=0, priority=0, deadline_s=None)
+    base.update(kw)
+    return submit_record(**base)
+
+
+class TestFormat:
+    def test_roundtrip_file(self, tmp_path):
+        p = str(tmp_path / "j.journal")
+        with Journal(p) as j:
+            j.append(_submit(0))
+            j.append(cancel_record(0))
+        recs, garbage = read_journal(p)
+        assert garbage == 0
+        assert [r["t"] for r in recs] == [REC_SUBMIT, REC_CANCEL]
+        assert recs[0]["uid"] == 0 and recs[0]["prompt"] == [1, 2, 3]
+
+    def test_seq_monotonic(self, tmp_path):
+        j = Journal(str(tmp_path / "j.journal"))
+        assert j.append(_submit(0)) == 0
+        assert j.append(_submit(1)) == 1
+        assert j.seq == 2
+
+    def test_bad_magic_names_path(self, tmp_path):
+        p = str(tmp_path / "bad.journal")
+        with open(p, "wb") as f:
+            f.write(b"NOPE" + b"\x00" * 16)
+        with pytest.raises(ValueError, match="bad.journal"):
+            read_journal(p)
+
+    def test_in_memory_mode(self):
+        j = Journal(None)
+        j.append(_submit(0))
+        j.append(ack_record(_fake_completion(0)))
+        assert j.seq == 2
+        assert list(j.acked()) == [0]
+        assert j.unacked_submits() == []
+
+
+def _fake_completion(uid):
+    from repro.serving.engine import Completion
+    import numpy as np
+    return Completion(uid=uid, prompt_len=3,
+                      tokens=np.asarray([5, 6], np.int32),
+                      finish_reason="length", admitted_step=1,
+                      finished_step=3, status="ok", retries=0)
+
+
+class TestCorruption:
+    def test_crc_corruption_stops_reader(self, tmp_path):
+        p = str(tmp_path / "j.journal")
+        with Journal(p) as j:
+            j.append(_submit(0))
+            j.append(_submit(1))
+        # flip a payload byte inside the second record
+        with open(p, "r+b") as f:
+            data = f.read()
+            f.seek(len(data) - 2)
+            f.write(bytes([data[-2] ^ 0xFF]))
+        recs, garbage = read_journal(p)
+        assert [r["uid"] for r in recs] == [0]
+        assert garbage > 0
+
+    def test_truncated_tail_truncated_and_resumed(self, tmp_path):
+        p = str(tmp_path / "j.journal")
+        with Journal(p) as j:
+            j.append(_submit(0))
+        size_one = os.path.getsize(p)
+        with Journal(p) as j:
+            j.append(_submit(1))
+        # simulate a crash mid-append: cut the last record in half
+        full = os.path.getsize(p)
+        with open(p, "r+b") as f:
+            f.truncate(size_one + (full - size_one) // 2)
+        j = Journal(p)
+        assert j.recovered_garbage_bytes > 0
+        assert [r["uid"] for r in j.records()] == [0]
+        j.append(_submit(2))
+        j.close()
+        recs, garbage = read_journal(p)
+        assert garbage == 0
+        assert [r["uid"] for r in recs] == [0, 2]
+
+    def test_scan_ignores_oversized_length_prefix(self):
+        blob = encode_record(_submit(0))
+        bogus = struct.pack("<II", 1 << 30, 0)
+        recs, valid = scan_records(blob + bogus)
+        assert [r["uid"] for r in recs] == [0]
+        assert valid == len(blob)
+
+    def test_reopen_preserves_existing_records(self, tmp_path):
+        p = str(tmp_path / "j.journal")
+        with Journal(p) as j:
+            j.append(_submit(0))
+        with Journal(p) as j:
+            assert j.seq == 1
+            j.append(_submit(1))
+        recs, _ = read_journal(p)
+        assert [r["uid"] for r in recs] == [0, 1]
+        with open(p, "rb") as f:
+            assert f.read(len(MAGIC)) == MAGIC
+
+
+class TestSemantics:
+    def test_ack_roundtrips_completion(self):
+        c = _fake_completion(7)
+        rec = ack_record(c)
+        assert rec["t"] == REC_ACK
+        import numpy as np
+        back = completion_from_ack(rec)
+        assert back.uid == c.uid
+        assert np.array_equal(back.tokens, c.tokens)
+        assert back.finish_reason == c.finish_reason
+        assert back.status == c.status
+
+    def test_unacked_submits(self):
+        j = Journal(None)
+        j.append(_submit(0))
+        j.append(_submit(1))
+        j.append(ack_record(_fake_completion(0)))
+        assert [r["uid"] for r in j.unacked_submits()] == [1]
+
+    def test_cancelled_submit_still_listed_as_unacked(self):
+        # cancels replay as cancels; the submit stays visible so replay
+        # can re-create then re-cancel the request deterministically
+        j = Journal(None)
+        j.append(_submit(0))
+        j.append(cancel_record(0))
+        assert [r["uid"] for r in j.unacked_submits()] == [0]
+
+
+class TestWriteAheadOrdering:
+    """The engine journals intent BEFORE mutating state, and acks
+    BEFORE exposing a completion."""
+
+    def test_submit_journaled_before_engine_state(self, tmp_path, key):
+        from repro.configs import get_smoke_config
+        from repro.models import lm
+        from repro.serving import DecodeEngine
+
+        cfg = get_smoke_config("yi-34b").with_backend("linear")
+        params = lm.init_params(key, cfg)
+        p = str(tmp_path / "j.journal")
+        eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                           max_len=64, journal=p)
+        uid = eng.submit([3, 1, 4], max_new_tokens=4)
+        recs = eng.journal.records()
+        assert recs and recs[0]["t"] == REC_SUBMIT
+        assert recs[0]["uid"] == uid
+        eng.run()
+        acks = [r for r in eng.journal.records() if r["t"] == REC_ACK]
+        assert [r["uid"] for r in acks] == [uid]
+        # the journaled ack IS the delivered completion
+        assert list(acks[0]["tokens"]) == list(eng.completions()[uid].tokens)
+
+    def test_ack_unique_per_uid_across_replay(self, tmp_path, key):
+        from repro.configs import get_smoke_config
+        from repro.models import lm
+        from repro.serving import DecodeEngine
+
+        cfg = get_smoke_config("yi-34b").with_backend("linear")
+        params = lm.init_params(key, cfg)
+        p = str(tmp_path / "j.journal")
+        eng = DecodeEngine(params, cfg, n_slots=2, segment_len=4,
+                           max_len=64, journal=p)
+        uid = eng.submit([3, 1, 4], max_new_tokens=4)
+        eng.run()
+        first = eng.completions()[uid]
+        # recover from the journal alone: the ack must not be re-issued
+        eng2 = DecodeEngine.recover(params, cfg, journal=Journal(p),
+                                    n_slots=2, segment_len=4, max_len=64)
+        eng2.run()
+        import numpy as np
+        assert np.array_equal(eng2.completions()[uid].tokens, first.tokens)
+        acks = [r for r in eng2.journal.records() if r["t"] == REC_ACK]
+        assert len(acks) == 1
