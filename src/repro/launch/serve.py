@@ -217,7 +217,10 @@ def stream_fleet(args) -> int:
         shed_policy=getattr(args, "shed_policy", "reject_new"),
         replicas=getattr(args, "replicas", 1),
         journal_dir=getattr(args, "journal_dir", None),
-        checkpoint_dir=getattr(args, "checkpoint_dir", None))
+        checkpoint_dir=getattr(args, "checkpoint_dir", None),
+        prefix_cache={"off": None, "auto": "auto", "on": True}[
+            getattr(args, "prefix_cache", "off")],
+        cache_bytes=getattr(args, "cache_bytes", 64 << 20))
     vocab = min(cfg.vocab_size for _, cfg in groups.values())
     rng = np.random.default_rng(args.seed)
     requests = make_request_mix(rng, args.n_requests, args.prompt_len,
@@ -294,6 +297,9 @@ def stream(args) -> int:
         journal=getattr(args, "journal", None),
         checkpoint_dir=getattr(args, "checkpoint_dir", None),
         checkpoint_every=getattr(args, "checkpoint_every", 0),
+        prefix_cache={"off": None, "auto": "auto", "on": True}[
+            getattr(args, "prefix_cache", "off")],
+        cache_bytes=getattr(args, "cache_bytes", 64 << 20),
         injector=injector)
 
     if getattr(args, "recover", False):
@@ -310,8 +316,9 @@ def stream(args) -> int:
         requests = make_request_mix(rng, args.n_requests,
                                     args.prompt_len, args.gen_len,
                                     cfg.vocab_size, args.arrival_rate)
+        fork = getattr(args, "fork", 1)
         for prompt, g, arrival in requests:
-            engine.submit(prompt, g, arrival=arrival)
+            engine.submit(prompt, g, arrival=arrival, fork=fork)
 
     t0 = time.perf_counter()
     with _Drainer() as drain:
@@ -381,15 +388,24 @@ def stream(args) -> int:
           f"{st.ingest_chunks} ingest chunks "
           f"(interleave {st.interleave_ratio:.2f}), "
           f"{st.prefill_jit_misses} admission jit misses")
+    if engine.cache is not None:
+        c = engine.cache.counters()
+        print(f"prefix cache ({engine.cache.name}): "
+              f"hits={st.cache_hits} misses={st.cache_misses} "
+              f"cached_prefix_tokens={st.cached_prefix_tokens} "
+              f"forks={st.forks} evictions={st.cache_evictions} "
+              f"bytes={c['bytes_used']}/{engine.cache.max_bytes}")
     if getattr(args, "stats_json", None):
         with open(args.stats_json, "w") as f:
             f.write(engine.stats.to_json())
         print(f"stats written to {args.stats_json}")
     # every submitted request resolves to a completion — shed/deadline
     # ones included (that's the bounded-queue contract); a recovered
-    # run's request count comes from the journal, not --n-requests
+    # run's request count comes from the journal, not --n-requests.
+    # fork=N submissions resolve to N completions each.
     if not getattr(args, "recover", False):
-        assert len(completions) == args.n_requests
+        assert len(completions) == args.n_requests * getattr(
+            args, "fork", 1)
     return 0
 
 
@@ -592,6 +608,21 @@ def main() -> int:
                     help="max prompt tokens per ingest dispatch (rounded"
                          " up to a power of two); longer prompts are"
                          " chunked and interleaved with decode segments")
+    # prefix caching (stream mode)
+    ap.add_argument("--prefix-cache", default="off",
+                    choices=["off", "auto", "on"],
+                    help="content-hash prefix cache: shared prompt"
+                         " prefixes admit as ONE state copy + suffix-"
+                         "only prefill (fixed-size states) or reuse"
+                         " refcounted KV blocks (softmax); 'on' errors"
+                         " if the backend can't cache, 'auto' degrades"
+                         " to off")
+    ap.add_argument("--cache-bytes", type=int, default=64 << 20,
+                    help="prefix-cache byte budget (LRU eviction)")
+    ap.add_argument("--fork", type=int, default=1, metavar="N",
+                    help="n-best: admit each prompt once and fork N"
+                         " continuation slots off the shared prefill"
+                         " (uids uid..uid+N-1)")
     # robustness knobs (stream mode)
     ap.add_argument("--max-queue", type=int, default=None,
                     help="bound the admission queue; a full queue sheds"

@@ -587,6 +587,123 @@ def write_slot_state(engine_state: Any, request_state: Any,
     return restore_state(engine_state, request_state, slot)
 
 
+# ---------------------------------------------------------------------------
+# row-ranged KV snapshots: O(W·k) copies for the softmax baseline
+# ---------------------------------------------------------------------------
+#
+# The linear-family states are already fixed-size, so snapshot/restore
+# cost O(k²) regardless of context. The softmax baseline's AttnState KV
+# caches are (…, max_len, Hkv, Dh): a whole-cache snapshot moves
+# O(max_len·k) bytes however few rows were ever written. The three
+# helpers below cut every KV copy to the W written rows — the primitive
+# both speculative rewind and paged prefix caching need. They rely on a
+# read-masking invariant of ``attention_decode``: cache reads are masked
+# to pos+1 and the row at pos is rewritten before pos advances, so rows
+# at index ≥ pos are never read — a restore that leaves them stale is
+# bit-identical (greedy) to one that overwrites them.
+
+def snapshot_state_rows(state: Any, slot: Array, n_rows: int) -> Any:
+    """:func:`snapshot_state`, but each softmax KV cache keeps only its
+    first ``n_rows`` rows (static, so jit specializes per width bucket).
+    The slice fuses with the slot ``dynamic_slice``, so the copy is
+    O(n_rows·k) per layer. ``n_rows`` must be ≥ the slot's written row
+    count (its position). Linear/recurrent leaves are untouched — for
+    them this IS :func:`snapshot_state`, the paper's fixed-size
+    representation."""
+    from repro.models.attention import AttnState
+
+    snap = snapshot_state(state, slot)
+
+    def shrink(st):
+        if not isinstance(st, AttnState) or st.k_cache is None:
+            return st
+        t = st.k_cache.ndim - 3     # the S dim of (..., S, Hkv, Dh)
+        if n_rows >= st.k_cache.shape[t]:
+            return st
+        cut = lambda x: jax.lax.slice_in_dim(x, 0, n_rows, axis=t)
+        return AttnState(k_cache=cut(st.k_cache),
+                         v_cache=cut(st.v_cache), s=st.s, z=st.z)
+
+    return jax.tree.map(shrink, snap,
+                        is_leaf=lambda x: isinstance(x, AttnState))
+
+
+def restore_state_rows(engine_state: Any, snapshot: Any,
+                       slot: Array) -> Any:
+    """Write a possibly row-ranged batch-1 snapshot into slot ``slot``.
+
+    ``dynamic_update_slice`` writes only the extent of its update
+    operand, so a snapshot whose KV time axis was cut to W rows by
+    :func:`snapshot_state_rows` costs O(W·k) per layer to restore; KV
+    rows ≥ W keep the slot's previous contents (never read — see the
+    read-masking invariant above). A full-width snapshot makes this
+    exactly :func:`restore_state`, which is why the two share one
+    implementation and the engine's admission program serves both."""
+    return restore_state(engine_state, snapshot, slot)
+
+
+def where_state_rows(active: Array, new: Any, old: Any,
+                     start: Array, width: int) -> Any:
+    """Row-ranged per-slot select: like :func:`where_state`, but each
+    softmax KV cache is merged only over rows [start_s, start_s+width)
+    per slot — one ``dynamic_slice`` + select + ``dynamic_update_slice``
+    of W rows instead of a select spanning the whole (S, max_len, Hkv,
+    Dh) cache. This is the speculative-rewind cost fix: a rewind
+    touches exactly the rows the round wrote, O(W·k), while rows
+    outside the range are either bitwise-equal in ``new`` and ``old``
+    (below the round's start) or stale-but-unreadable (above it).
+
+    ``start`` is a per-slot (S,) row offset (dynamic); ``width`` is
+    static. Starts are clamped to ``max_len - width`` — value-safe,
+    because rows below a slot's true start are bitwise-equal in both
+    states. Non-KV leaves (the fixed-size linear/recurrent states) take
+    the plain full select, same as :func:`where_state`."""
+    from repro.models.attention import AttnState
+
+    start = jnp.asarray(start, jnp.int32)
+
+    def sel(n, o, axis):
+        shape = [1] * n.ndim
+        shape[axis] = active.shape[0]
+        return jnp.where(active.reshape(shape), n, o)
+
+    def rows(n, o, axis):
+        # slot axis → 0; the time axis is then ndim-3 for both layouts
+        nm = jnp.moveaxis(n, axis, 0)
+        om = jnp.moveaxis(o, axis, 0)
+
+        def one(nx, ox, st, act):
+            t = nx.ndim - 3
+            lo = jnp.clip(st, 0, nx.shape[t] - width)
+            sl_n = jax.lax.dynamic_slice_in_dim(nx, lo, width, axis=t)
+            sl_o = jax.lax.dynamic_slice_in_dim(ox, lo, width, axis=t)
+            merged = jnp.where(act, sl_n, sl_o)
+            return jax.lax.dynamic_update_slice_in_dim(
+                ox, merged, lo, axis=t)
+
+        return jnp.moveaxis(jax.vmap(one)(nm, om, start, active), 0, axis)
+
+    def merge(n, o, axis):
+        if isinstance(n, AttnState):
+            f = (lambda a, b: None if a is None else sel(a, b, axis))
+            if n.k_cache is None:
+                return AttnState(k_cache=None, v_cache=None,
+                                 s=f(n.s, o.s), z=f(n.z, o.z))
+            return AttnState(k_cache=rows(n.k_cache, o.k_cache, axis),
+                             v_cache=rows(n.v_cache, o.v_cache, axis),
+                             s=f(n.s, o.s), z=f(n.z, o.z))
+        return sel(n, o, axis)
+
+    leaf = lambda x: isinstance(x, AttnState)
+    stack = tuple(
+        jax.tree.map(lambda x, y: merge(x, y, 1), sa, sb, is_leaf=leaf)
+        for sa, sb in zip(new["stack"], old["stack"]))
+    tail = tuple(
+        jax.tree.map(lambda x, y: merge(x, y, 0), ta, tb, is_leaf=leaf)
+        for ta, tb in zip(new["tail"], old["tail"]))
+    return {"stack": stack, "tail": tail}
+
+
 def generate_segment(
     params: Params,
     state: Any,

@@ -84,6 +84,11 @@ class DecodeBackend:
         self.fixed_size_state = cfg.fixed_state_decode
         self.supports_varlen_prefill = lm.supports_varlen_prefill(cfg)
         self.supports_spec = True
+        # prefix caching needs batched (chunk-grid) admission so a hit
+        # leaves the suffix on the same chunk boundaries a cold
+        # admission uses; backends that can't varlen-prefill can't
+        # guarantee that, so the capability follows it by default
+        self.supports_prefix_cache = self.supports_varlen_prefill
         self._validate(cfg)
 
     # -- registry hooks ------------------------------------------------
@@ -193,8 +198,31 @@ class DecodeBackend:
     def where_state(self, active, new, old):
         return lm.where_state(active, new, old)
 
+    def snapshot_state_rows(self, state, slot, n_rows: int):
+        return lm.snapshot_state_rows(state, slot, n_rows)
+
+    def restore_state_rows(self, engine_state, snapshot, slot):
+        return lm.restore_state_rows(engine_state, snapshot, slot)
+
+    def where_state_rows(self, active, new, old, start, width: int):
+        return lm.where_state_rows(active, new, old, start, width)
+
     def slot_state_finite(self, state):
         return lm.slot_state_finite(state)
+
+    # -- prefix caching ------------------------------------------------
+
+    def make_prefix_cache(self, max_bytes: int, chunk: int):
+        """Build this family's prefix cache: a hash → fixed-size-state
+        table for the paper's backends, paged refcounted KV blocks for
+        the softmax baseline (overridden there). Raises when the
+        backend lacks the capability."""
+        from repro.serving.prefix_cache import FixedStatePrefixCache
+        if not self.supports_prefix_cache:
+            raise ValueError(
+                f"backend {self.name!r} does not support prefix "
+                f"caching (missing capability supports_prefix_cache)")
+        return FixedStatePrefixCache(max_bytes=max_bytes, chunk=chunk)
 
 
 # ---------------------------------------------------------------------------

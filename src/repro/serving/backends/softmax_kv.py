@@ -41,3 +41,16 @@ class SoftmaxKVBackend(DecodeBackend):
             f"backend {self.name!r} serves softmax attention; config "
             f"{cfg.name!r} has attention_backend="
             f"{cfg.attention_backend!r}")
+
+    def make_prefix_cache(self, max_bytes: int, chunk: int):
+        """The growing representation forces block machinery: a paged,
+        refcounted, content-hashed KV cache (vLLM-style) instead of the
+        linear family's flat hash → O(k²) state table. A cached prefix
+        of n tokens occupies n/chunk blocks — bytes ∝ n, the cost the
+        paper's fixed-size states avoid."""
+        from repro.serving.prefix_cache import PagedKVCache
+        if not self.supports_prefix_cache:
+            raise ValueError(
+                f"backend {self.name!r} does not support prefix "
+                f"caching (missing capability supports_prefix_cache)")
+        return PagedKVCache(max_bytes=max_bytes, chunk=chunk)

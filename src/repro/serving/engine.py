@@ -107,6 +107,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import functools
 import json
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -158,7 +159,10 @@ class Request:
     its slot with its partial output). ``priority`` orders admission
     (higher first) and arms preemption; ``speculate_k`` > 0 decodes
     through draft/verify rounds (greedy only) instead of one-token
-    segment steps."""
+    segment steps. ``fork`` > 1 asks for N independent continuations of
+    one prompt: the prompt is admitted (prefilled) ONCE, and the N-1
+    extra continuations spawn as suspended requests sharing the
+    prefilled state snapshot — uids uid..uid+fork-1."""
     uid: int
     prompt: np.ndarray            # (P,) int32
     max_new_tokens: int
@@ -166,6 +170,7 @@ class Request:
     speculate_k: int = 0
     priority: int = 0
     deadline_s: Optional[float] = None
+    fork: int = 1
 
 
 @dataclasses.dataclass
@@ -215,6 +220,12 @@ class EngineStats:
     finite_checks: int = 0        # fused isfinite probes run
     degrade_transitions: int = 0  # overload degradation flips (both ways)
     spec_disables: int = 0        # spec requests forced plain (degraded)
+    # prefix cache & fork/n-best
+    cache_hits: int = 0           # admissions served from the cache
+    cache_misses: int = 0         # cacheable prompts with no entry
+    cache_evictions: int = 0      # entries/blocks dropped (byte budget)
+    cached_prefix_tokens: int = 0  # prompt tokens NOT re-encoded on hits
+    forks: int = 0                # extra continuations spawned (fork-1)
     degrade_events: List[Dict] = dataclasses.field(default_factory=list)
 
     def to_dict(self) -> Dict:
@@ -352,6 +363,8 @@ class DecodeEngine:
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: int = 0,
         checkpoint_keep: int = 2,
+        prefix_cache: Any = None,
+        cache_bytes: int = 64 << 20,
     ):
         self.params = params
         self.cfg = cfg
@@ -394,6 +407,37 @@ class DecodeEngine:
         # power-of-2 chunk so every bucket width is a power of two too
         self.prefill_chunk = min(_pow2_ceil(max(1, prefill_chunk)),
                                  max_len)
+        # prefix caching: content-hash → state reuse at admission.
+        # None/False = off; "auto" = on iff the backend supports it and
+        # admission resolved to batched (cache hits must land the
+        # suffix on the batched path's chunk grid); True = required
+        # (raises when unsupported); a PrefixCache instance is used
+        # as-is (fleets share or scope caches this way).
+        self.cache = None
+        if prefix_cache not in (None, False):
+            if isinstance(prefix_cache, str):
+                assert prefix_cache == "auto", prefix_cache
+                if (self.backend.supports_prefix_cache
+                        and self.admission == "batched"):
+                    self.cache = self.backend.make_prefix_cache(
+                        cache_bytes, self.prefill_chunk)
+            elif prefix_cache is True:
+                if self.admission != "batched":
+                    raise ValueError(
+                        "prefix caching requires batched admission; "
+                        f"backend {self.backend.name!r} resolved "
+                        f"admission={self.admission!r}")
+                self.cache = self.backend.make_prefix_cache(
+                    cache_bytes, self.prefill_chunk)
+            else:
+                if prefix_cache.chunk % self.prefill_chunk != 0:
+                    raise ValueError(
+                        f"prefix cache chunk {prefix_cache.chunk} is "
+                        f"not a multiple of the engine's prefill_chunk "
+                        f"{self.prefill_chunk}: hit suffixes would "
+                        f"leave the cold-admission chunk grid")
+                self.cache = prefix_cache
+        self.cache_bytes = cache_bytes
 
         be = self.backend
 
@@ -478,6 +522,20 @@ class DecodeEngine:
         def _snapshot(state, slot):
             return be.snapshot_state(state, slot)
 
+        @functools.partial(jax.jit, static_argnums=(2,))
+        def _snapshot_rows(state, slot, n_rows):
+            # row-ranged snapshot: the softmax KV copy shrinks to the
+            # W written rows (O(W·k) instead of O(max_len·k)); static
+            # width → one compiled program per bucket
+            return be.snapshot_state_rows(state, slot, n_rows)
+
+        @functools.partial(jax.jit, static_argnums=(4,))
+        def _select_rows(mask, new, old, start, width):
+            # row-ranged merge: speculative rewind touches exactly the
+            # rows the round wrote instead of selecting over the whole
+            # (S, max_len, Hkv, Dh) caches
+            return be.where_state_rows(mask, new, old, start, width)
+
         @jax.jit
         def _finite(state):
             # ONE fused reduction over every float leaf → (S,) bool;
@@ -500,6 +558,8 @@ class DecodeEngine:
         self._verify = _verify
         self._select = _select
         self._snapshot = _snapshot
+        self._snapshot_rows = _snapshot_rows
+        self._select_rows = _select_rows
         self._finite = _finite
         self._poison = _poison
         # admission program shapes seen — the host-side mirror of the
@@ -550,6 +610,14 @@ class DecodeEngine:
         # submits/cancels while recovery re-applies them
         self._journal_acked: Dict[int, Completion] = {}
         self._replaying = False
+        # prefix-cache bookkeeping: the cache itself SURVIVES reset
+        # (like compiled programs — reset clears requests, not learned
+        # artifacts); stats report counter deltas since this reset.
+        # _cache_hold pins the cache entries/blocks each slot was
+        # admitted from until the slot is torn down.
+        self._cache_hold: List[Optional[Any]] = [None] * s
+        self._cache_base = (self.cache.counters()
+                            if self.cache is not None else None)
         if self.draft is not None:
             self.draft.reset()
         self.stats = EngineStats(n_slots=self.n_slots,
@@ -559,7 +627,7 @@ class DecodeEngine:
                arrival: float = 0.0, speculate_k: int = 0,
                priority: int = 0,
                deadline_s: Optional[float] = None,
-               uid: Optional[int] = None) -> int:
+               uid: Optional[int] = None, fork: int = 1) -> int:
         """Queue a request; returns its uid. ``arrival`` is in logical
         decode steps (0 = available immediately); ``deadline_s`` an
         absolute logical-step completion deadline; ``priority`` orders
@@ -578,9 +646,18 @@ class DecodeEngine:
         strictly lower-priority queued victim under "evict_lowest")
         completes immediately with ``status="shed"``.
 
+        ``fork`` > 1 requests N continuations of the one prompt: uids
+        uid..uid+fork-1 are allocated, the prompt is encoded ONCE, and
+        at activation the N-1 extra continuations spawn as suspended
+        requests sharing the prefilled state snapshot — each then
+        decodes independently, bit-identical (greedy) to N separate
+        submits. Returns the FIRST uid.
+
         ``uid`` lets a fleet scheduler assign globally-unique ids across
         slot groups; it must be monotone (>= the engine's next uid)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if fork < 1:
+            raise ValueError(f"fork must be >= 1, got {fork}")
         if uid is not None and uid < self._next_uid:
             raise ValueError(
                 f"uid {uid} is not monotone (engine next uid is "
@@ -616,12 +693,12 @@ class DecodeEngine:
         if self.journal is not None and not self._replaying:
             self.journal.append(submit_record(
                 uid, prompt, max_new_tokens, arrival, speculate_k,
-                priority, deadline_s))
-        self._next_uid = uid + 1
+                priority, deadline_s, fork=fork))
+        self._next_uid = uid + fork
         req = Request(uid=uid, prompt=prompt,
                       max_new_tokens=max_new_tokens, arrival=arrival,
                       speculate_k=speculate_k, priority=priority,
-                      deadline_s=deadline_s)
+                      deadline_s=deadline_s, fork=fork)
         if self.max_queue is not None and len(self._queue) >= self.max_queue:
             victim = self._pick_shed_victim(req)
             self._shed(victim)
@@ -692,7 +769,23 @@ class DecodeEngine:
     def _complete(self, req: Request, tokens: List[int],
                   admitted_step: int, status: str = STATUS_OK,
                   retries: int = 0) -> None:
+        # a fork primary that terminates BEFORE activation (shed,
+        # deadline, cancel, instant-EOS, budget-1) never spawned its
+        # members — fan their completions out here with the same
+        # outcome, exactly as N independent submits would resolve.
+        # (Post-activation, members live as their own requests and the
+        # primary carries fork=1.) Each member passes the journal-acked
+        # check itself, so replay stays exactly-once per uid.
+        members: List[Request] = []
+        if req.fork > 1:
+            members = [dataclasses.replace(req, uid=req.uid + i, fork=1)
+                       for i in range(1, req.fork)]
+            req = dataclasses.replace(req, fork=1)
         prior = self._journal_acked.get(req.uid)
+        if members:
+            for m in members:
+                self._complete(m, list(tokens), admitted_step,
+                               status=status, retries=retries)
         if prior is not None:
             # already delivered by a previous incarnation: the
             # journaled ack is the authoritative result (exactly-once
@@ -717,6 +810,24 @@ class DecodeEngine:
             self.journal.append(ack_record(completion))
             self._journal_acked[req.uid] = completion
         self._completions[req.uid] = completion
+
+    def _release_hold(self, slot: int) -> None:
+        """Drop the cache pins (paged-KV refcounts) the slot's request
+        acquired at hit admission — called on every slot teardown."""
+        hold = self._cache_hold[slot]
+        if hold is not None:
+            self._cache_hold[slot] = None
+            self.cache.release(hold)
+
+    def _sync_cache_stats(self) -> None:
+        """Mirror cache counters into EngineStats as deltas since the
+        last reset (the cache itself survives reset)."""
+        if self.cache is None:
+            return
+        c, b = self.cache.counters(), self._cache_base
+        self.stats.cache_hits = c["hits"] - b["hits"]
+        self.stats.cache_misses = c["misses"] - b["misses"]
+        self.stats.cache_evictions = c["evictions"] - b["evictions"]
 
     def _miss(self, kind: str, width: int) -> None:
         """Count an admission-program compile the jit cache hasn't seen."""
@@ -750,7 +861,21 @@ class DecodeEngine:
         self._activate_slot(slot, req, tok0)
 
     def _activate_slot(self, slot: int, req: Request, tok0: int) -> None:
-        """Flip a slot whose prompt is fully encoded to decode-active."""
+        """Flip a slot whose prompt is fully encoded to decode-active.
+
+        Fork/n-best spawns here: the prompt was encoded ONCE; the N-1
+        extra continuations become suspended requests SHARING the one
+        post-prefill snapshot (zero-copy on the host — each resume pays
+        only its own ``write_slot_state``), then decode independently.
+        Greedy decode depends only on (state, tok, pos), so every
+        member's token stream is bit-identical to an independent
+        submit's. The slot's primary drops to fork=1 so a later
+        requeue (quarantine retry) can never re-spawn members."""
+        members: List[Request] = []
+        if req.fork > 1:
+            members = [dataclasses.replace(req, uid=req.uid + i, fork=1)
+                       for i in range(1, req.fork)]
+            req = dataclasses.replace(req, fork=1)
         spec_k = req.speculate_k
         if spec_k > 0 and self._degraded:
             spec_k = 0               # overload: lookahead disabled; the
@@ -766,14 +891,45 @@ class DecodeEngine:
         if spec_k > 0:
             self.draft.admit(
                 slot, np.concatenate([req.prompt, [tok0]]).astype(np.int32))
+        if members:
+            snap = self._slot_snapshot(
+                slot, self._bucket(int(self._pos[slot])))
+            for m in members:
+                self._suspended.append(SuspendedRequest(
+                    req=m, state=snap, tok=tok0,
+                    pos=len(req.prompt),
+                    remaining=req.max_new_tokens - 1, toks=[tok0],
+                    admitted_step=self._clock, retries=0))
+                self.stats.forks += 1
         if self.finite_check and self.max_retries > 0:
             # activation checkpoint: the last-known-good restore point a
             # later numeric fault retries from (one O(k²) snapshot copy)
             self._checkpoint_slot(slot)
 
+    def _merge_rows(self, mask, new, old, start, width: int):
+        """Masked state merge, row-ranged when the backend has growing
+        KV caches (see step_spec_round); the plain whole-state select
+        otherwise — ONE program either way per static width."""
+        if self.backend.fixed_size_state:
+            return self._select(jnp.asarray(mask), new, old)
+        return self._select_rows(jnp.asarray(mask), new, old,
+                                 jnp.asarray(start, jnp.int32),
+                                 int(width))
+
+    def _slot_snapshot(self, slot: int, rows: int):
+        """Per-slot snapshot, row-ranged for the softmax baseline:
+        only ``rows`` KV rows are copied (O(W·k) instead of
+        O(max_len·k)). Fixed-size-state backends pin the static width
+        to ``max_len`` — the slicing is a no-op for them, and a single
+        jit program serves every call."""
+        w = (self.max_len if self.backend.fixed_size_state
+             else min(int(rows), self.max_len))
+        return self._snapshot_rows(self.state, jnp.int32(slot), w)
+
     def _checkpoint_slot(self, slot: int) -> None:
         self._ckpt[slot] = Checkpoint(
-            state=self._snapshot(self.state, jnp.int32(slot)),
+            state=self._slot_snapshot(slot,
+                                      self._bucket(int(self._pos[slot]))),
             tok=int(self._tok[slot]), pos=int(self._pos[slot]),
             remaining=int(self._remaining[slot]),
             toks=list(self._slot_toks[slot]))
@@ -869,7 +1025,8 @@ class DecodeEngine:
         assert self._active[slot] and req is not None, slot
         susp = SuspendedRequest(
             req=req,
-            state=self._snapshot(self.state, jnp.int32(slot)),
+            state=self._slot_snapshot(slot,
+                                      self._bucket(int(self._pos[slot]))),
             tok=int(self._tok[slot]), pos=int(self._pos[slot]),
             remaining=int(self._remaining[slot]),
             toks=list(self._slot_toks[slot]),
@@ -882,6 +1039,7 @@ class DecodeEngine:
         self._spec_k[slot] = 0
         self._active[slot] = False
         self._ckpt.pop(slot, None)
+        self._release_hold(slot)   # the snapshot owns its own rows now
         self._suspended.append(susp)
         self.stats.preemptions += 1
         return susp
@@ -955,7 +1113,7 @@ class DecodeEngine:
         # completing at admission (gen_len=1 / instant EOS) free their
         # slot within the same pass at the same logical clock.
         while self._work_waiting():
-            newly, resumed = [], 0
+            newly, resumed, cache_hits = [], 0, 0
             for slot in range(self.n_slots):
                 if not self._slot_free(slot) or not self._work_waiting():
                     continue
@@ -963,14 +1121,34 @@ class DecodeEngine:
                 if kind == "resume":
                     self._resume_into(slot, item)
                     resumed += 1
-                else:
-                    self._ingest_req[slot] = item
-                    self._ingest_cursor[slot] = 0
+                    continue
+                self._ingest_req[slot] = item
+                self._ingest_cursor[slot] = 0
+                hit = None
+                if (self.cache is not None
+                        and len(item.prompt) > self.cache.chunk):
+                    hit = self.cache.match(item.prompt)
+                if hit is None:
                     newly.append(slot)
+                    continue
+                # cache-hit admission: ONE slot write lands the whole
+                # cached prefix (O(k²) for fixed-size states, O(W·k)
+                # block rows for paged softmax) and the cursor jumps to
+                # the matched boundary — only the SUFFIX is ever
+                # encoded, on the same chunk grid a cold admission
+                # would have used, so the tokens are identical (greedy)
+                self.state = self._admit(self.state, hit.state,
+                                         jnp.int32(slot))
+                self._ingest_cursor[slot] = hit.n_tokens
+                self._cache_hold[slot] = hit
+                self.stats.admission_dispatches += 1
+                self.stats.cached_prefix_tokens += hit.n_tokens
+                cache_hits += 1
             if newly:
                 self._ingest_chunk(newly, first=True)
-            elif not resumed:
+            elif not (resumed or cache_hits):
                 break
+        self._sync_cache_stats()
 
     def _bucket(self, n: int) -> int:
         return min(_pow2_ceil(max(1, n)), self.max_len)
@@ -1078,8 +1256,20 @@ class DecodeEngine:
         for slot in slots:
             self._ingest_cursor[slot] += int(lens[slot])
             req = self._ingest_req[slot]
-            if self._ingest_cursor[slot] >= len(req.prompt):
+            cur = int(self._ingest_cursor[slot])
+            # populate the prefix cache at every full-chunk boundary
+            # the ingest crosses (degraded half-chunks land on these
+            # boundaries too — _live_chunk stays a divisor). The
+            # snapshot is row-ranged to exactly `cur` rows, which is
+            # what lets the paged cache split it into content-hashed
+            # blocks; `wants` gates the device copy on novelty.
+            if (self.cache is not None and cur % self.cache.chunk == 0
+                    and self.cache.wants(req.prompt, cur)):
+                self.cache.insert(req.prompt, cur,
+                                  self._slot_snapshot(slot, cur))
+            if cur >= len(req.prompt):
                 self._finish_ingest(slot, last[slot])
+        self._sync_cache_stats()
 
     def _ingest_step(self) -> None:
         """One continuation-chunk dispatch across every mid-prompt slot.
@@ -1104,6 +1294,7 @@ class DecodeEngine:
         if req.max_new_tokens <= 1 or hit_eos:
             self._complete(req, [tok0], admitted_step=self._clock,
                            retries=self._retry_count.pop(req.uid, 0))
+            self._release_hold(slot)
             return
         self._activate_slot(slot, req, tok0)
 
@@ -1155,6 +1346,7 @@ class DecodeEngine:
         self._spec_k[slot] = 0
         self._active[slot] = False
         self._ckpt.pop(slot, None)
+        self._release_hold(slot)
 
     # ------------------------------------------------------------------
     # lifecycle & fault tolerance
@@ -1181,6 +1373,7 @@ class DecodeEngine:
         self._ingest_req[slot] = None
         self._ingest_cursor[slot] = 0
         self._ckpt.pop(slot, None)
+        self._release_hold(slot)
 
     def _set_degraded(self, on: bool, pressure: float) -> None:
         self._degraded = on
@@ -1282,6 +1475,7 @@ class DecodeEngine:
         self._active[slot] = False
         self._ingest_req[slot] = None
         self._ingest_cursor[slot] = 0
+        self._release_hold(slot)
 
     def _post_event(self) -> None:
         """Segment/round boundary: chaos injection, the fused
@@ -1346,7 +1540,8 @@ class DecodeEngine:
                 "speculate_k": int(req.speculate_k),
                 "priority": int(req.priority),
                 "deadline_s": (None if req.deadline_s is None
-                               else float(req.deadline_s))}
+                               else float(req.deadline_s)),
+                "fork": int(req.fork)}
 
     @staticmethod
     def _req_from_dict(d: Dict) -> Request:
@@ -1356,7 +1551,34 @@ class DecodeEngine:
                        arrival=d["arrival"],
                        speculate_k=d["speculate_k"],
                        priority=d["priority"],
-                       deadline_s=d["deadline_s"])
+                       deadline_s=d["deadline_s"],
+                       fork=d.get("fork", 1))
+
+    @staticmethod
+    def _snapshot_kv_rows(snap) -> int:
+        """KV time-axis width of a (possibly row-ranged) snapshot, -1
+        when it has no KV caches (fixed-size states) — recorded in the
+        checkpoint manifest so restore can rebuild shape templates."""
+        from repro.models.attention import AttnState
+        widths: List[int] = []
+
+        def probe(st):
+            if isinstance(st, AttnState) and st.k_cache is not None:
+                widths.append(int(st.k_cache.shape[st.k_cache.ndim - 3]))
+            return st
+
+        jax.tree.map(probe, snap,
+                     is_leaf=lambda x: isinstance(x, AttnState))
+        return widths[0] if widths else -1
+
+    def _snapshot_template(self, rows: int):
+        """ShapeDtypeStruct pytree of a ``rows``-row slot snapshot
+        (``jax.eval_shape`` — nothing allocated)."""
+        w = self.max_len if rows is None or rows < 0 else int(rows)
+        w = max(1, min(w, self.max_len))
+        return jax.eval_shape(
+            lambda s: self.backend.snapshot_state_rows(
+                s, jnp.int32(0), w), self.state)
 
     def save_checkpoint(self, step: Optional[int] = None) -> int:
         """Write a durable whole-engine checkpoint via the atomic
@@ -1411,6 +1633,14 @@ class DecodeEngine:
                          "remaining": int(c.remaining),
                          "toks": list(c.toks)}
                 for s, c in sorted(self._ckpt.items())},
+            # row-ranged snapshot widths (KV time-axis rows; -1 for
+            # fixed-size states) — restore rebuilds shape templates
+            # from these, so a ranged snapshot round-trips exactly
+            "suspended_rows": [self._snapshot_kv_rows(s.state)
+                               for s in self._suspended],
+            "slot_ckpt_rows": {
+                str(s): self._snapshot_kv_rows(c.state)
+                for s, c in sorted(self._ckpt.items())},
             "completions": [ack_record(c)
                             for _, c in sorted(self._completions.items())],
             "quarantined": [bool(q) for q in self._quarantined],
@@ -1438,13 +1668,17 @@ class DecodeEngine:
         def like_fn(extra):
             like = {"key": self._key, "slot_ckpt": {}, "state": self.state,
                     "suspended": ()}
-            n_susp = len(extra["suspended"])
-            ck_keys = sorted(extra["slot_ckpt"])
-            if n_susp or ck_keys:
-                template = self._snapshot(self.state, jnp.int32(0))
-                like["suspended"] = tuple(template
-                                          for _ in range(n_susp))
-                like["slot_ckpt"] = {k: template for k in ck_keys}
+            # snapshots may be row-ranged (only the written KV rows
+            # were saved); rebuild each template at its recorded width.
+            # pre-ranged checkpoints lack the width lists → full width.
+            susp_rows = extra.get(
+                "suspended_rows", [-1] * len(extra["suspended"]))
+            ck_rows = extra.get("slot_ckpt_rows", {})
+            like["suspended"] = tuple(self._snapshot_template(w)
+                                      for w in susp_rows)
+            like["slot_ckpt"] = {
+                k: self._snapshot_template(ck_rows.get(k, -1))
+                for k in sorted(extra["slot_ckpt"])}
             return like
 
         tree, extra, ckpt_step = self._ckpt_mgr.restore_with(
@@ -1508,6 +1742,38 @@ class DecodeEngine:
                     ).astype(np.int32))
         return extra.get("journal_seq", 0)
 
+    # -- prefix-cache persistence --------------------------------------
+
+    def cache_template(self, n_tokens: int):
+        """ShapeDtypeStruct pytree of an ``n_tokens``-row cached state —
+        the ``template_fn`` a :class:`PrefixCache` needs to load arrays
+        back off disk (block payloads and row-ranged state entries share
+        the row-ranged snapshot structure)."""
+        return self._snapshot_template(int(n_tokens))
+
+    def save_cache(self, directory, step: Optional[int] = None) -> int:
+        """Persist the prefix cache through the atomic checkpoint
+        writer into ``directory`` (a path or a CheckpointManager —
+        use a SEPARATE directory from the engine's checkpoints).
+        Returns the step id written."""
+        if self.cache is None:
+            raise ValueError("engine has no prefix cache configured")
+        mgr = (directory if isinstance(directory, CheckpointManager)
+               else CheckpointManager(directory, keep=1))
+        step = self._events if step is None else int(step)
+        self.cache.save(mgr, step)
+        return step
+
+    def load_cache(self, directory) -> bool:
+        """Restore the prefix cache saved by :meth:`save_cache`. A
+        missing or corrupt cache file leaves the cache EMPTY and
+        returns False — a cold start, never wrong answers."""
+        if self.cache is None:
+            raise ValueError("engine has no prefix cache configured")
+        mgr = (directory if isinstance(directory, CheckpointManager)
+               else CheckpointManager(directory, keep=1))
+        return self.cache.load(mgr, self.cache_template)
+
     def _replay_journal(self, from_seq: int = 0) -> None:
         """Re-apply journal records past ``from_seq`` (the position the
         restored checkpoint captured; 0 with no checkpoint). Journaled
@@ -1534,7 +1800,11 @@ class DecodeEngine:
         try:
             for rec in records[from_seq:]:
                 if rec["t"] == REC_SUBMIT:
-                    if rec["uid"] in self._journal_acked:
+                    fork = rec.get("fork", 1)
+                    # a forked submit owns uids uid..uid+fork-1; skip
+                    # the replay only when EVERY member was delivered
+                    if all(rec["uid"] + i in self._journal_acked
+                           for i in range(fork)):
                         continue        # already delivered
                     self.submit(np.asarray(rec["prompt"], np.int32),
                                 rec["max_new_tokens"],
@@ -1542,7 +1812,8 @@ class DecodeEngine:
                                 speculate_k=rec["speculate_k"],
                                 priority=rec["priority"],
                                 deadline_s=rec["deadline_s"],
-                                uid=rec["uid"])
+                                uid=rec["uid"],
+                                fork=fork)
                 elif rec["t"] == REC_CANCEL:
                     if rec["uid"] in self._journal_acked:
                         continue        # resolved before the crash
@@ -1619,6 +1890,7 @@ class DecodeEngine:
         window[:, 1:] = drafts
 
         state_pre = self.state
+        pos_pre = self._pos.copy()    # row-range starts for the merges
         greedy, st_verify = self._verify(
             self.params, state_pre, jnp.asarray(window),
             jnp.asarray(self._pos))
@@ -1678,10 +1950,16 @@ class DecodeEngine:
             self._pos[slot] += n_cons
 
         # -- apply state: masked select for full acceptors, ONE batched
-        #    varlen re-advance from the pre-round state for partials --
+        #    varlen re-advance from the pre-round state for partials.
+        #    Both merges are ROW-RANGED for the softmax baseline: the
+        #    round wrote rows [pos_pre, pos_pre+width) per slot, rows
+        #    below are bitwise-equal in both operands and rows above
+        #    are never read before rewritten — so the select moves
+        #    O(W·k) bytes instead of the whole (S, max_len, Hkv, Dh)
+        #    caches (fixed-size states keep the plain O(k²) select). --
         if commit_full.any():
-            self.state = self._select(jnp.asarray(commit_full),
-                                      st_verify, self.state)
+            self.state = self._merge_rows(commit_full, st_verify,
+                                          self.state, pos_pre, w + 1)
         if rewinds:
             wr = max(n for _, n in rewinds)
             tokens = np.zeros((self.n_slots, wr), np.int32)
@@ -1697,7 +1975,8 @@ class DecodeEngine:
             _, st_r = self._window_varlen(
                 self.params, state_pre, jnp.asarray(tokens),
                 jnp.asarray(pos0), jnp.asarray(lens))
-            self.state = self._select(jnp.asarray(mask), st_r, self.state)
+            self.state = self._merge_rows(mask, st_r, self.state,
+                                          pos_pre, wr)
             self.stats.spec_rewinds += len(rewinds)
             self.stats.spec_rewind_rounds += 1
             self.stats.spec_rewind_dispatches += 1

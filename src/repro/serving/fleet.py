@@ -259,22 +259,25 @@ class FleetEngine:
             self._dead_acks[uid] = completion_from_ack(rec)
         for rec in jr.unacked_submits():
             orig = rec["uid"]
+            fork = rec.get("fork", 1)
             try:
                 target = self._pick_replica(rs.name)
             except RuntimeError:
                 self.unrecovered.append(orig)
                 continue
             new_uid = self._next_uid
-            self._next_uid = new_uid + 1
+            self._next_uid = new_uid + fork
             target.engine.submit(
                 np.asarray(rec["prompt"], np.int32),
                 rec["max_new_tokens"], arrival=0.0,
                 speculate_k=rec["speculate_k"],
-                priority=rec["priority"], deadline_s=None, uid=new_uid)
-            self._route[new_uid] = rs.name
-            self._replica_route[new_uid] = target.idx
-            self._alias[new_uid] = orig
-            self._realias[orig] = new_uid
+                priority=rec["priority"], deadline_s=None, uid=new_uid,
+                fork=fork)
+            for i in range(fork):
+                self._route[new_uid + i] = rs.name
+                self._replica_route[new_uid + i] = target.idx
+                self._alias[new_uid + i] = orig + i
+                self._realias[orig + i] = new_uid + i
             self.readmitted += 1
 
     def backend_of(self, uid: int) -> Optional[str]:
@@ -297,9 +300,12 @@ class FleetEngine:
     def submit(self, prompt, max_new_tokens: int, *,
                backend: Optional[str] = None, arrival: float = 0.0,
                speculate_k: int = 0, priority: int = 0,
-               deadline_s: Optional[float] = None) -> int:
+               deadline_s: Optional[float] = None,
+               fork: int = 1) -> int:
         """Queue a request against one backend group (default: the
-        first registered group). Returns a fleet-global uid. The
+        first registered group). Returns a fleet-global uid; a
+        ``fork=N`` submission owns uids uid..uid+N-1 (all routed to
+        the same replica — the members share one cached prefill). The
         fleet-level bounded queue resolves sheds across ALL groups."""
         if backend is None:
             backend = self.default_backend
@@ -307,6 +313,8 @@ class FleetEngine:
             raise KeyError(
                 f"unknown backend {backend!r}; fleet serves "
                 f"{list(self.groups)}")
+        if fork < 1:
+            raise ValueError(f"fork must be >= 1, got {fork}")
         target = self._pick_replica(backend)
         eng = target.engine
         uid = self._next_uid
@@ -322,23 +330,26 @@ class FleetEngine:
             if shed_arrival:
                 # validate via the engine (atomic — nothing mutated on
                 # raise), then shed synchronously: the completion lands
-                # in the arrival's group with status="shed"
+                # in the arrival's group with status="shed" (fork
+                # members shed with their primary)
                 eng.submit(np.asarray(prompt), max_new_tokens,
                            arrival=arrival, speculate_k=speculate_k,
                            priority=priority, deadline_s=deadline_s,
-                           uid=uid)
+                           uid=uid, fork=fork)
                 assert eng.shed_queued(uid)
                 self.fleet_shed += 1
-                self._next_uid = uid + 1
-                self._route[uid] = backend
-                self._replica_route[uid] = target.idx
+                self._next_uid = uid + fork
+                for u in range(uid, uid + fork):
+                    self._route[u] = backend
+                    self._replica_route[u] = target.idx
                 return uid
         eng.submit(np.asarray(prompt), max_new_tokens, arrival=arrival,
                    speculate_k=speculate_k, priority=priority,
-                   deadline_s=deadline_s, uid=uid)
-        self._next_uid = uid + 1
-        self._route[uid] = backend
-        self._replica_route[uid] = target.idx
+                   deadline_s=deadline_s, uid=uid, fork=fork)
+        self._next_uid = uid + fork
+        for u in range(uid, uid + fork):
+            self._route[u] = backend
+            self._replica_route[u] = target.idx
         return uid
 
     def cancel(self, uid: int) -> bool:
@@ -434,6 +445,10 @@ class FleetEngine:
                     "compiled_segment_programs":
                         eng._segment._cache_size(),
                     "stats": eng.stats.to_dict(),
+                    "prefix_cache": (
+                        None if eng.cache is None else {
+                            "kind": eng.cache.name,
+                            **eng.cache.counters()}),
                 }
                 for name, eng in self.groups.items()
             },

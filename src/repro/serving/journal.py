@@ -203,7 +203,8 @@ class Journal:
 
 def submit_record(uid: int, prompt, max_new_tokens: int, arrival: float,
                   speculate_k: int, priority: int,
-                  deadline_s: Optional[float]) -> Dict[str, Any]:
+                  deadline_s: Optional[float],
+                  fork: int = 1) -> Dict[str, Any]:
     import numpy as np
     return {"t": REC_SUBMIT, "uid": int(uid),
             "prompt": np.asarray(prompt, np.int32).tolist(),
@@ -211,7 +212,8 @@ def submit_record(uid: int, prompt, max_new_tokens: int, arrival: float,
             "arrival": float(arrival), "speculate_k": int(speculate_k),
             "priority": int(priority),
             "deadline_s": (None if deadline_s is None
-                           else float(deadline_s))}
+                           else float(deadline_s)),
+            "fork": int(fork)}
 
 
 def cancel_record(uid: int) -> Dict[str, Any]:

@@ -1,0 +1,477 @@
+"""Prefix caching for the serving engine: content-hash → decode state.
+
+The paper's fixed-size representation makes prefix caching almost
+degenerate: an entire shared prompt prefix (system prompt, few-shot
+header, multi-turn history) compresses to one O(k²)-per-layer state, so
+the cache is a hash table from token content to a small pytree and a
+cache hit is ONE ``write_slot_state`` copy — no block tables, no paging.
+:class:`FixedStatePrefixCache` implements exactly that, with LRU
+eviction under a byte budget.
+
+The honest softmax baseline needs the machinery the paper lets you
+delete. :class:`PagedKVCache` stores KV rows in fixed-size,
+content-hashed, refcounted blocks (the ``block_space_manager`` /
+``evictor`` design of paged-attention engines): a block is pinned while
+any live slot was admitted from it, drops into an LRU evictor at
+refcount 0 (still matchable — a later hit revives it), and is evicted
+only under byte pressure. A hit materializes the matched blocks into
+the slot's private dense cache — copy-on-write resolved at admission,
+so divergent suffix writes never touch shared blocks and the paged
+layout stays bit-identical (greedy) to the dense one.
+
+Both caches key entries by the same chained content hash over
+chunk-sized token blocks (``chain_digests``): boundaries land on
+multiples of the engine's ``prefill_chunk``, so a cache hit leaves the
+remaining suffix on exactly the chunk grid a cold admission would have
+used — which is what makes hit admission bit-identical to cold
+admission. Matches are capped at the largest boundary ≤ len(prompt)-1:
+at least one suffix token is always ingested, so the engine's normal
+first-token sampling path runs unchanged on hits.
+
+Persistence rides the atomic checkpoint writer: ``save``/``load``
+round-trip the cache through a :class:`CheckpointManager`; a corrupt
+cache file degrades to an empty (cold) cache, never to wrong answers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FixedStatePrefixCache",
+    "PagedKVCache",
+    "PrefixCache",
+    "PrefixHit",
+    "chain_digests",
+    "tree_nbytes",
+]
+
+
+def chain_digests(prompt, chunk: int) -> List[Tuple[int, str]]:
+    """Chained blake2b content digests of ``prompt`` at every full
+    ``chunk`` boundary: ``d_j = H(d_{j-1} ‖ tokens[j·c:(j+1)·c])``.
+
+    Chaining makes each digest cover the WHOLE prefix up to its
+    boundary (not just its own block), so two prompts collide on a
+    boundary exactly when their prefixes match token-for-token — the
+    property both the state cache and block reuse key on. Returns
+    ``[(boundary, digest), ...]`` for boundaries c, 2c, …"""
+    arr = np.asarray(prompt, np.int32).reshape(-1)
+    out: List[Tuple[int, str]] = []
+    h = b""
+    for i in range(chunk, len(arr) + 1, chunk):
+        h = hashlib.blake2b(h + arr[i - chunk:i].tobytes(),
+                            digest_size=16).digest()
+        out.append((i, h.hex()))
+    return out
+
+
+def tree_nbytes(tree: Any) -> int:
+    """Total bytes of every array leaf of a pytree (None leaves skipped)."""
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(tree) if hasattr(x, "dtype"))
+
+
+@dataclasses.dataclass
+class PrefixHit:
+    """A longest-cached-prefix match: ``state`` is a batch-1 (possibly
+    row-ranged) decode-state snapshot covering the first ``n_tokens``
+    prompt tokens; ``keys`` are the cache entries backing it (one state
+    digest, or one digest per KV block) — the handle ``release`` drops
+    when the admitted slot no longer needs them pinned."""
+    n_tokens: int
+    state: Any
+    keys: Tuple[str, ...] = ()
+
+
+class PrefixCache:
+    """Shared surface of both cache kinds: chained-hash matching,
+    counters, a byte budget, and checkpoint persistence. Subclasses
+    store either whole fixed-size states or per-block KV rows."""
+
+    name = "base"
+
+    def __init__(self, max_bytes: int, chunk: int):
+        assert max_bytes > 0 and chunk >= 1, (max_bytes, chunk)
+        self.max_bytes = int(max_bytes)
+        self.chunk = int(chunk)
+        self.hits = 0
+        self.misses = 0
+        self.inserts = 0
+        self.evictions = 0
+        self.cow_copies = 0
+
+    def counters(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "inserts": self.inserts, "evictions": self.evictions,
+                "cow_copies": self.cow_copies,
+                "bytes_used": self.bytes_used}
+
+    # -- subclass surface ----------------------------------------------
+    @property
+    def bytes_used(self) -> int:
+        raise NotImplementedError
+
+    def match(self, prompt) -> Optional[PrefixHit]:
+        raise NotImplementedError
+
+    def wants(self, prompt, n_tokens: int) -> bool:
+        """Would ``insert(prompt, n_tokens, …)`` store anything new?
+        The engine asks before paying for a state snapshot."""
+        raise NotImplementedError
+
+    def insert(self, prompt, n_tokens: int, snapshot: Any) -> None:
+        raise NotImplementedError
+
+    def release(self, hit: PrefixHit) -> None:
+        """Drop the pins a hit acquired (no-op unless refcounted)."""
+
+    def prefix_nbytes(self, prompt, n_tokens: int) -> int:
+        """Bytes this cache holds for the prefix ``prompt[:n_tokens]``
+        — the deterministic form of the linear-vs-softmax cost claim:
+        flat in ``n_tokens`` for fixed-size states, ∝ ``n_tokens`` for
+        KV blocks."""
+        raise NotImplementedError
+
+    def clear(self) -> None:
+        raise NotImplementedError
+
+    def save(self, manager, step: int) -> None:
+        raise NotImplementedError
+
+    def load(self, manager, template_fn: Callable[[int], Any]) -> bool:
+        """Restore from ``manager`` (newest retained step). Returns
+        False — with the cache left empty, a cold start — when nothing
+        restorable exists; corrupt steps fall back exactly like engine
+        checkpoints do. ``template_fn(n_tokens)`` must return a
+        ShapeDtypeStruct pytree of a ``n_tokens``-row snapshot (the
+        engine derives it from its state via ``jax.eval_shape``)."""
+        raise NotImplementedError
+
+
+class FixedStatePrefixCache(PrefixCache):
+    """digest → fixed-size state. The paper's payoff at serving time:
+    one entry is O(k²) per layer REGARDLESS of the prefix length it
+    encodes, so the byte budget admits the same entry count however
+    long the shared prefixes grow, and a hit costs one slot write.
+    Entries need no refcounts — a hit's state is copied into the slot,
+    never aliased — so eviction is plain LRU under the byte budget."""
+
+    name = "fixed_state"
+
+    def __init__(self, max_bytes: int, chunk: int):
+        super().__init__(max_bytes, chunk)
+        # digest → {"n_tokens", "state", "nbytes"}; OrderedDict order
+        # IS the LRU order (oldest first)
+        self._entries: "OrderedDict[str, Dict]" = OrderedDict()
+        self._bytes = 0
+
+    @property
+    def bytes_used(self) -> int:
+        return self._bytes
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def match(self, prompt) -> Optional[PrefixHit]:
+        limit = len(np.asarray(prompt).reshape(-1)) - 1
+        for n, digest in reversed(chain_digests(prompt, self.chunk)):
+            if n > limit:
+                continue
+            ent = self._entries.get(digest)
+            if ent is not None:
+                self._entries.move_to_end(digest)
+                self.hits += 1
+                return PrefixHit(n_tokens=n, state=ent["state"],
+                                 keys=(digest,))
+        self.misses += 1
+        return None
+
+    def _digest_at(self, prompt, n_tokens: int) -> str:
+        for n, digest in chain_digests(prompt, self.chunk):
+            if n == n_tokens:
+                return digest
+        raise ValueError(
+            f"n_tokens {n_tokens} is not a chunk ({self.chunk}) "
+            f"boundary of a {len(np.asarray(prompt).reshape(-1))}-token "
+            f"prompt")
+
+    def wants(self, prompt, n_tokens: int) -> bool:
+        if n_tokens % self.chunk != 0:
+            return False
+        return self._digest_at(prompt, n_tokens) not in self._entries
+
+    def insert(self, prompt, n_tokens: int, snapshot: Any) -> None:
+        digest = self._digest_at(prompt, n_tokens)
+        if digest in self._entries:
+            self._entries.move_to_end(digest)
+            return
+        nbytes = tree_nbytes(snapshot)
+        self._entries[digest] = {"n_tokens": int(n_tokens),
+                                 "state": snapshot, "nbytes": nbytes}
+        self._bytes += nbytes
+        self.inserts += 1
+        while self._bytes > self.max_bytes and self._entries:
+            _, ev = self._entries.popitem(last=False)
+            self._bytes -= ev["nbytes"]
+            self.evictions += 1
+
+    def prefix_nbytes(self, prompt, n_tokens: int) -> int:
+        ent = self._entries.get(self._digest_at(prompt, n_tokens))
+        return 0 if ent is None else ent["nbytes"]
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._bytes = 0
+
+    def save(self, manager, step: int) -> None:
+        tree = {f"e{i}": ent["state"]
+                for i, ent in enumerate(self._entries.values())}
+        extra = {"kind": self.name, "chunk": self.chunk,
+                 "entries": [{"key": k, "n_tokens": ent["n_tokens"],
+                              "nbytes": ent["nbytes"]}
+                             for k, ent in self._entries.items()]}
+        manager.save(step, tree, extra, blocking=True)
+
+    def load(self, manager, template_fn) -> bool:
+        def like_fn(extra):
+            return {f"e{i}": template_fn(ent["n_tokens"])
+                    for i, ent in enumerate(extra["entries"])}
+
+        try:
+            tree, extra, _ = manager.restore_with(like_fn)
+        except (FileNotFoundError, ValueError):
+            self.clear()
+            return False
+        self.clear()
+        for i, ent in enumerate(extra["entries"]):
+            self._entries[ent["key"]] = {
+                "n_tokens": int(ent["n_tokens"]),
+                "state": jax.tree.map(jnp.asarray, tree[f"e{i}"]),
+                "nbytes": int(ent["nbytes"])}
+            self._bytes += int(ent["nbytes"])
+        return True
+
+
+@dataclasses.dataclass
+class _Block:
+    """One fixed-size KV block: the rows [depth·c, (depth+1)·c) of every
+    cache leaf, plus the (whole) non-KV leaves at its boundary — the
+    chained digest covers the full prefix, so the recurrent residue of
+    a hybrid stack is content-correct to store per block (pure-softmax
+    stacks have none; it costs zero bytes there). ``refcount`` counts
+    live slots admitted from this block; at 0 the block sits in the LRU
+    evictor, still matchable (a hit revives it) until byte pressure
+    evicts it."""
+    payload: Any
+    nbytes: int
+    depth: int
+    refcount: int = 0
+
+
+def _is_attn(x: Any) -> bool:
+    from repro.models.attention import AttnState
+    return isinstance(x, AttnState)
+
+
+def _block_payload(snapshot: Any, lo: int, hi: int) -> Any:
+    """Slice rows [lo, hi) of every KV leaf (non-KV leaves pass whole)."""
+    from repro.models.attention import AttnState
+
+    def cut(st):
+        if not _is_attn(st) or st.k_cache is None:
+            return st
+        t = st.k_cache.ndim - 3
+        sl = lambda x: jax.lax.slice_in_dim(x, lo, hi, axis=t)
+        return AttnState(k_cache=sl(st.k_cache), v_cache=sl(st.v_cache),
+                         s=st.s, z=st.z)
+
+    return jax.tree.map(cut, snapshot, is_leaf=_is_attn)
+
+
+def _materialize(payloads: List[Any]) -> Any:
+    """Concatenate a run of block payloads back into one row-ranged
+    snapshot: KV leaves concatenate along the time axis; non-KV leaves
+    (fixed-size, stored per boundary) come from the LAST block."""
+    from repro.models.attention import AttnState
+
+    def merge(*sts):
+        if _is_attn(sts[0]) and sts[0].k_cache is not None:
+            cat = lambda xs: jnp.concatenate(xs, axis=xs[0].ndim - 3)
+            return AttnState(
+                k_cache=cat([s.k_cache for s in sts]),
+                v_cache=cat([s.v_cache for s in sts]),
+                s=sts[-1].s, z=sts[-1].z)
+        return sts[-1]
+
+    return jax.tree.map(merge, *payloads, is_leaf=_is_attn)
+
+
+class PagedKVCache(PrefixCache):
+    """Content-hashed, refcounted, fixed-size KV blocks for the softmax
+    baseline — the block-table machinery a growing representation
+    forces. A prefix of n tokens costs n/c blocks of O(c·k) bytes each
+    (∝ n, vs the linear family's flat O(k²) entry); matching walks the
+    chained digests block by block and stops at the first gap, so a
+    partial eviction truncates matches instead of corrupting them.
+
+    Copy-on-write: shared blocks are never written — a hit copies the
+    matched run into the slot's private dense cache (``cow_copies``
+    counts the blocks copied), so the divergent suffix lands in private
+    rows and paged serving stays bit-identical (greedy) to dense."""
+
+    name = "paged_kv"
+
+    def __init__(self, max_bytes: int, chunk: int):
+        super().__init__(max_bytes, chunk)
+        self._blocks: Dict[str, _Block] = {}
+        # refcount-0 blocks, oldest-released first (the evictor)
+        self._lru: "OrderedDict[str, None]" = OrderedDict()
+        self._bytes = 0
+
+    @property
+    def bytes_used(self) -> int:
+        return self._bytes
+
+    def __len__(self) -> int:
+        return len(self._blocks)
+
+    def refcount(self, digest: str) -> int:
+        return self._blocks[digest].refcount
+
+    def match(self, prompt) -> Optional[PrefixHit]:
+        limit = len(np.asarray(prompt).reshape(-1)) - 1
+        run: List[str] = []
+        for n, digest in chain_digests(prompt, self.chunk):
+            if n > limit or digest not in self._blocks:
+                break
+            run.append(digest)
+        if not run:
+            self.misses += 1
+            return None
+        for digest in run:
+            blk = self._blocks[digest]
+            blk.refcount += 1
+            self._lru.pop(digest, None)
+        state = _materialize([self._blocks[d].payload for d in run])
+        self.hits += 1
+        self.cow_copies += len(run)
+        return PrefixHit(n_tokens=len(run) * self.chunk, state=state,
+                         keys=tuple(run))
+
+    def release(self, hit: PrefixHit) -> None:
+        for digest in hit.keys:
+            blk = self._blocks.get(digest)
+            if blk is None:
+                continue
+            blk.refcount -= 1
+            assert blk.refcount >= 0, digest
+            if blk.refcount == 0:
+                self._lru[digest] = None
+                self._lru.move_to_end(digest)
+
+    def wants(self, prompt, n_tokens: int) -> bool:
+        if n_tokens % self.chunk != 0 or n_tokens == 0:
+            return False
+        digests = chain_digests(prompt, self.chunk)
+        j = n_tokens // self.chunk - 1
+        return digests[j][1] not in self._blocks
+
+    @staticmethod
+    def _has_residue(snapshot: Any) -> bool:
+        """Any non-KV content (recurrent states of a hybrid stack)?
+        Residue is only content-correct at the snapshot's OWN boundary,
+        so its presence restricts an insert to the final block."""
+        found: List[bool] = []
+
+        def probe(st):
+            if _is_attn(st) and st.k_cache is not None:
+                if st.s is not None or st.z is not None:
+                    found.append(True)
+            else:
+                found.append(True)
+            return st
+
+        jax.tree.map(probe, snapshot, is_leaf=_is_attn)
+        return bool(found)
+
+    def insert(self, prompt, n_tokens: int, snapshot: Any) -> None:
+        assert n_tokens % self.chunk == 0, (n_tokens, self.chunk)
+        last_only = self._has_residue(snapshot)
+        for j, (n, digest) in enumerate(chain_digests(prompt, self.chunk)):
+            if n > n_tokens:
+                break
+            if digest in self._blocks:
+                continue
+            if last_only and n != n_tokens:
+                continue   # residue is only correct at the last block
+            payload = _block_payload(snapshot, n - self.chunk, n)
+            nbytes = tree_nbytes(payload)
+            self._blocks[digest] = _Block(payload=payload, nbytes=nbytes,
+                                          depth=j)
+            self._lru[digest] = None
+            self._lru.move_to_end(digest)
+            self._bytes += nbytes
+            self.inserts += 1
+        # byte pressure: evict refcount-0 blocks oldest-first. Pinned
+        # blocks (live slots) are NEVER evicted, so usage may exceed
+        # the budget transiently while every block is held.
+        while self._bytes > self.max_bytes and self._lru:
+            digest, _ = self._lru.popitem(last=False)
+            self._bytes -= self._blocks.pop(digest).nbytes
+            self.evictions += 1
+
+    def prefix_nbytes(self, prompt, n_tokens: int) -> int:
+        total = 0
+        for n, digest in chain_digests(prompt, self.chunk):
+            if n > n_tokens:
+                break
+            blk = self._blocks.get(digest)
+            if blk is None:
+                return 0            # gap: the prefix is not resident
+            total += blk.nbytes
+        return total
+
+    def clear(self) -> None:
+        self._blocks.clear()
+        self._lru.clear()
+        self._bytes = 0
+
+    def save(self, manager, step: int) -> None:
+        keys = list(self._blocks)
+        tree = {f"b{i}": self._blocks[k].payload
+                for i, k in enumerate(keys)}
+        extra = {"kind": self.name, "chunk": self.chunk,
+                 "blocks": [{"key": k,
+                             "depth": self._blocks[k].depth,
+                             "nbytes": self._blocks[k].nbytes}
+                            for k in keys]}
+        manager.save(step, tree, extra, blocking=True)
+
+    def load(self, manager, template_fn) -> bool:
+        def like_fn(extra):
+            tpl = template_fn(extra["chunk"])
+            return {f"b{i}": tpl
+                    for i in range(len(extra["blocks"]))}
+
+        try:
+            tree, extra, _ = manager.restore_with(like_fn)
+        except (FileNotFoundError, ValueError):
+            self.clear()
+            return False
+        self.clear()
+        for i, meta in enumerate(extra["blocks"]):
+            blk = _Block(
+                payload=jax.tree.map(jnp.asarray, tree[f"b{i}"]),
+                nbytes=int(meta["nbytes"]), depth=int(meta["depth"]))
+            self._blocks[meta["key"]] = blk
+            self._lru[meta["key"]] = None
+            self._bytes += blk.nbytes
+        return True

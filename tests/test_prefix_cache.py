@@ -1,0 +1,553 @@
+"""Prefix cache + paged KV + fork/n-best + row-ranged snapshots (ISSUE 10).
+
+Acceptance contract:
+
+* cache-HIT admission is BIT-IDENTICAL (greedy) to cold admission on
+  linear, gated_linear AND softmax — a hit is one state copy plus a
+  suffix-only prefill, and the suffix rides the exact chunk grid a cold
+  admission would have used;
+* the deterministic dispatch-count form of the hit claim: a fully-warm
+  run re-encodes ZERO prompts (``stats.prefills == 0``) while serving
+  every request from the cache (``cache_hits == n``);
+* fork/n-best: ``submit(fork=N)`` equals N independent submits token-
+  for-token while encoding the prompt ONCE (``prefills == 1``);
+* the linear family's cached bytes are FLAT in prefix length; the
+  softmax baseline's grow ∝ tokens (the paper's cost claim, in bytes);
+* paged-KV refcounts pin in-use blocks against eviction; released
+  blocks become evictable; a mid-prefix eviction truncates matches
+  instead of corrupting them;
+* row-ranged softmax snapshots (ROADMAP item 4): ``n_rows`` KV rows
+  moved instead of ``max_len``, bit-safe to restore because rows at
+  index >= pos are never read before being rewritten.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.serving import DecodeEngine
+from repro.serving.prefix_cache import (
+    FixedStatePrefixCache,
+    PagedKVCache,
+    chain_digests,
+    tree_nbytes,
+)
+from repro.sharding import Rules
+
+RULES = Rules.null()
+BACKENDS = ["linear", "gated_linear", "softmax"]
+
+
+def _cfg(backend):
+    # fp32: the tests assert greedy bit-identity across admission paths
+    return dataclasses.replace(
+        get_smoke_config("yi-34b").with_backend(backend),
+        dtype="float32")
+
+
+def _params(backend):
+    cfg = _cfg(backend)
+    return lm.init_params(jax.random.PRNGKey(0), cfg), cfg
+
+
+def _shared_prefix_prompts(cfg, n=4, prefix=96, tail=8, seed=0):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, size=prefix,
+                          dtype=np.int64).astype(np.int32)
+    return [np.concatenate([shared,
+                            rng.integers(0, cfg.vocab_size, size=tail,
+                                         dtype=np.int64).astype(np.int32)])
+            for _ in range(n)]
+
+
+def _engine(params, cfg, cache="auto", **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("segment_len", 4)
+    kw.setdefault("max_len", 160)
+    kw.setdefault("prefill_chunk", 32)
+    return DecodeEngine(params, cfg, RULES, prefix_cache=cache, **kw)
+
+
+def _run(engine, prompts, gen=8, fork=1):
+    engine.reset()
+    for p in prompts:
+        engine.submit(p, gen, fork=fork)
+    return engine.run("continuous")
+
+
+# ---------------------------------------------------------------------------
+# chained content digests
+# ---------------------------------------------------------------------------
+
+
+class TestChainDigests:
+    def test_boundaries(self):
+        d = chain_digests(np.arange(100, dtype=np.int32), 32)
+        assert [n for n, _ in d] == [32, 64, 96]
+        assert chain_digests(np.arange(31, dtype=np.int32), 32) == []
+
+    def test_digest_covers_whole_prefix(self):
+        """Two prompts differing ONLY in block 0 must differ at every
+        later boundary too (chaining), unlike per-block hashing."""
+        a = np.arange(96, dtype=np.int32)
+        b = a.copy()
+        b[0] += 1
+        da, db = chain_digests(a, 32), chain_digests(b, 32)
+        assert all(x[1] != y[1] for x, y in zip(da, db))
+
+    def test_shared_prefix_shares_digests(self):
+        a = np.arange(96, dtype=np.int32)
+        b = np.concatenate([a[:64], a[64:] + 7])
+        da, db = chain_digests(a, 32), chain_digests(b, 32)
+        assert da[0] == db[0] and da[1] == db[1] and da[2] != db[2]
+
+
+# ---------------------------------------------------------------------------
+# FixedStatePrefixCache units (states stubbed with plain arrays)
+# ---------------------------------------------------------------------------
+
+
+def _fake_state(nbytes):
+    return {"s": np.zeros(nbytes // 4, np.float32)}
+
+
+class TestFixedStateCache:
+    def test_longest_prefix_wins(self):
+        c = FixedStatePrefixCache(max_bytes=1 << 20, chunk=32)
+        p = np.arange(100, dtype=np.int32)
+        c.insert(p, 32, _fake_state(64))
+        c.insert(p, 96, _fake_state(64))
+        hit = c.match(p)
+        assert hit is not None and hit.n_tokens == 96
+
+    def test_match_capped_below_prompt_len(self):
+        """A whole-prompt entry must NOT match the same prompt: at
+        least one suffix token is always left for normal admission."""
+        c = FixedStatePrefixCache(max_bytes=1 << 20, chunk=32)
+        p = np.arange(64, dtype=np.int32)
+        c.insert(p, 64, _fake_state(64))
+        assert c.match(p) is None           # 64 > len-1
+        longer = np.concatenate([p, [7]]).astype(np.int32)
+        hit = c.match(longer)
+        assert hit is not None and hit.n_tokens == 64
+
+    def test_lru_eviction_under_byte_budget(self):
+        c = FixedStatePrefixCache(max_bytes=200, chunk=32)
+        prompts = [np.arange(32, dtype=np.int32) + 100 * i
+                   for i in range(3)]
+        for p in prompts:
+            c.insert(p, 32, _fake_state(80))
+        assert c.bytes_used <= 200 and len(c) == 2
+        assert c.evictions == 1
+        assert c.match(np.concatenate([prompts[0], [1]])) is None  # evicted
+        assert c.match(np.concatenate([prompts[2], [1]])) is not None
+
+    def test_match_refreshes_lru(self):
+        c = FixedStatePrefixCache(max_bytes=160, chunk=32)
+        a, b = (np.arange(32, dtype=np.int32),
+                np.arange(32, dtype=np.int32) + 500)
+        c.insert(a, 32, _fake_state(80))
+        c.insert(b, 32, _fake_state(80))
+        c.match(np.concatenate([a, [1]]))    # a becomes most-recent
+        c.insert(np.arange(32, dtype=np.int32) + 900, 32, _fake_state(80))
+        assert c.match(np.concatenate([a, [1]])) is not None
+        assert c.match(np.concatenate([b, [1]])) is None
+
+    def test_wants_only_novel_boundaries(self):
+        c = FixedStatePrefixCache(max_bytes=1 << 20, chunk=32)
+        p = np.arange(96, dtype=np.int32)
+        assert c.wants(p, 32) and not c.wants(p, 33)
+        c.insert(p, 32, _fake_state(64))
+        assert not c.wants(p, 32) and c.wants(p, 64)
+
+
+# ---------------------------------------------------------------------------
+# PagedKVCache units (block payloads stubbed with real AttnStates)
+# ---------------------------------------------------------------------------
+
+
+def _kv_snapshot(rows, k=4, layers=1, fill=0.0):
+    """A minimal softmax-like snapshot: {"stack": (layer states,),
+    "tail": ()} with (1, rows, 1, k) KV caches — the repo's (..., T,
+    H, D) layout, time axis = ndim-3."""
+    from repro.models.attention import AttnState
+    st = AttnState(
+        k_cache=jnp.full((1, rows, 1, k), fill, jnp.float32),
+        v_cache=jnp.full((1, rows, 1, k), fill, jnp.float32),
+        s=None, z=None)
+    return {"stack": (((st,),) * layers), "tail": ()}
+
+
+class TestPagedKVCache:
+    def test_bytes_grow_with_prefix(self):
+        c = PagedKVCache(max_bytes=1 << 20, chunk=32)
+        p = np.arange(100, dtype=np.int32)
+        c.insert(p, 96, _kv_snapshot(96))
+        one = c.prefix_nbytes(p, 32)
+        assert one > 0
+        assert c.prefix_nbytes(p, 64) == 2 * one
+        assert c.prefix_nbytes(p, 96) == 3 * one
+
+    def test_refcount_pins_against_eviction(self):
+        blk = tree_nbytes(_kv_snapshot(32))
+        c = PagedKVCache(max_bytes=2 * blk, chunk=32)
+        p = np.arange(65, dtype=np.int32)
+        c.insert(p, 64, _kv_snapshot(64))
+        hit = c.match(p)
+        assert hit is not None and hit.n_tokens == 64
+        assert all(c.refcount(d) == 1 for d in hit.keys)
+        # byte pressure with every block pinned: NOTHING evictable
+        q = np.arange(32, dtype=np.int32) + 999
+        c.insert(q, 32, _kv_snapshot(32))
+        assert all(d in c._blocks for d in hit.keys)
+        # release -> the old run becomes evictable oldest-first
+        c.release(hit)
+        assert all(c.refcount(d) == 0 for d in hit.keys)
+        c.insert(np.arange(32, dtype=np.int32) + 5000, 32,
+                 _kv_snapshot(32))
+        assert c.bytes_used <= 2 * blk
+        assert c.evictions >= 1
+
+    def test_gap_truncates_match(self):
+        c = PagedKVCache(max_bytes=1 << 20, chunk=32)
+        p = np.arange(100, dtype=np.int32)
+        c.insert(p, 96, _kv_snapshot(96))
+        d = chain_digests(p, 32)
+        # evict the MIDDLE block: the match must stop at 32 tokens,
+        # never skip over the hole
+        c._bytes -= c._blocks.pop(d[1][1]).nbytes
+        c._lru.pop(d[1][1], None)
+        hit = c.match(p)
+        assert hit is not None and hit.n_tokens == 32
+        assert c.prefix_nbytes(p, 96) == 0     # non-resident prefix
+        c.release(hit)
+
+    def test_materialized_rows_in_order(self):
+        c = PagedKVCache(max_bytes=1 << 20, chunk=2)
+        p = np.arange(5, dtype=np.int32)
+        snap = _kv_snapshot(4)
+        snap = jax.tree.map(
+            lambda x: (jnp.arange(4, dtype=jnp.float32)
+                       .reshape(1, 4, 1, 1) * jnp.ones((1, 4, 1, 4)))
+            if hasattr(x, "shape") else x, snap)
+        c.insert(p, 4, snap)
+        hit = c.match(p)
+        st = hit.state["stack"][0][0]
+        rows = np.asarray(st.k_cache)[0, :, 0, 0]
+        np.testing.assert_array_equal(rows, [0.0, 1.0, 2.0, 3.0])
+        assert c.cow_copies == 2
+        c.release(hit)
+
+
+# ---------------------------------------------------------------------------
+# engine integration: hit admission bit-identity + dispatch counts
+# ---------------------------------------------------------------------------
+
+
+class TestEngineCacheBitIdentity:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_off_cold_warm_identical(self, backend):
+        params, cfg = _params(backend)
+        prompts = _shared_prefix_prompts(cfg)
+
+        off = _run(_engine(params, cfg, cache=None), prompts)
+        eng = _engine(params, cfg, cache="auto")
+        assert eng.cache is not None
+        cold = _run(eng, prompts)
+        assert eng.stats.cache_hits >= 1     # later arrivals hit
+        warm = _run(eng, prompts)            # cache survives reset()
+        for a, b, c in zip(off, cold, warm):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            np.testing.assert_array_equal(a.tokens, c.tokens)
+        # the deterministic form of the hit claim: a warm run
+        # re-encodes ZERO prompts — every admission is one state copy
+        # plus suffix-only ingest
+        assert eng.stats.prefills == 0
+        assert eng.stats.cache_hits == len(prompts)
+        assert eng.stats.cache_misses == 0
+        assert eng.stats.cached_prefix_tokens == 96 * len(prompts)
+
+    def test_linear_bytes_flat_softmax_bytes_grow(self):
+        """The paper's cost claim in bytes: doubling the cached prefix
+        leaves a fixed-size entry's bytes UNCHANGED while the softmax
+        blocks double."""
+        sizes = {}
+        for backend in ("linear", "softmax"):
+            params, cfg = _params(backend)
+            eng = _engine(params, cfg, cache="auto", max_len=256)
+            rng = np.random.default_rng(3)
+            base = rng.integers(0, cfg.vocab_size, size=128,
+                                dtype=np.int64).astype(np.int32)
+            for n in (64, 128):
+                p = np.concatenate([base[:n], [1]]).astype(np.int32)
+                _run(eng, [p], gen=2)
+                sizes[(backend, n)] = eng.cache.prefix_nbytes(p, n)
+        assert sizes[("linear", 64)] > 0
+        assert sizes[("linear", 128)] == sizes[("linear", 64)]
+        assert sizes[("softmax", 128)] == 2 * sizes[("softmax", 64)]
+
+    def test_eviction_degrades_to_cold_miss(self):
+        """A byte budget too small to hold anything useful must only
+        cost performance, never correctness."""
+        params, cfg = _params("linear")
+        prompts = _shared_prefix_prompts(cfg, n=3)
+        off = _run(_engine(params, cfg, cache=None), prompts)
+        eng = _engine(params, cfg, cache="auto", cache_bytes=1)
+        got = _run(eng, prompts)
+        for a, b in zip(off, got):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert eng.stats.cache_hits == 0
+        assert eng.stats.cache_evictions >= 1
+
+    def test_unsupported_backend_raises_on_required(self):
+        cfg = dataclasses.replace(
+            get_smoke_config("zamba2-7b"), name="mamba2-cache-smoke",
+            layer_pattern=("mamba",), n_repeats=2, tail=(), n_layers=2,
+            dtype="float32")
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        with pytest.raises(ValueError, match="prefix"):
+            DecodeEngine(params, cfg, RULES, n_slots=2, segment_len=4,
+                         max_len=64, prefix_cache=True)
+        # "auto" degrades to no cache instead of raising
+        eng = DecodeEngine(params, cfg, RULES, n_slots=2, segment_len=4,
+                           max_len=64, prefix_cache="auto")
+        assert eng.cache is None
+
+    def test_misaligned_cache_chunk_rejected(self):
+        params, cfg = _params("linear")
+        with pytest.raises(ValueError, match="chunk"):
+            _engine(params, cfg,
+                    cache=FixedStatePrefixCache(max_bytes=1 << 20,
+                                                chunk=48),
+                    prefill_chunk=32)
+
+
+# ---------------------------------------------------------------------------
+# fork / n-best
+# ---------------------------------------------------------------------------
+
+
+class TestFork:
+    @pytest.mark.parametrize("backend", ["linear", "softmax"])
+    def test_fork_equals_independent_submits(self, backend):
+        params, cfg = _params(backend)
+        prompt = _shared_prefix_prompts(cfg, n=1)[0]
+
+        eng = _engine(params, cfg, cache=None, n_slots=3)
+        indep = _run(eng, [prompt] * 3, gen=8)
+        forked = _run(eng, [prompt], gen=8, fork=3)
+        assert len(forked) == 3
+        assert [c.uid for c in forked] == [0, 1, 2]
+        for a, b in zip(indep, forked):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+        # the prompt was encoded ONCE for the fork triple
+        assert eng.stats.prefills == 1
+        assert eng.stats.forks == 2
+
+    def test_fork_members_shed_with_primary(self):
+        params, cfg = _params("linear")
+        prompt = _shared_prefix_prompts(cfg, n=1)[0]
+        eng = _engine(params, cfg, cache=None, max_queue=1)
+        eng.reset()
+        eng.submit(prompt, 4)                      # fills the queue
+        eng.submit(prompt, 4, fork=3)              # shed on arrival
+        comps = eng.run("continuous")
+        by_uid = {c.uid: c for c in comps}
+        assert len(comps) == 4
+        assert all(by_uid[u].status == "shed" for u in (1, 2, 3))
+
+    def test_fork_budget_one_completes_at_admission(self):
+        params, cfg = _params("linear")
+        prompt = _shared_prefix_prompts(cfg, n=1)[0]
+        eng = _engine(params, cfg, cache=None)
+        comps = _run(eng, [prompt], gen=1, fork=2)
+        assert len(comps) == 2
+        np.testing.assert_array_equal(comps[0].tokens, comps[1].tokens)
+
+    def test_fork_replay_exactly_once(self):
+        """A journaled fork submit re-runs on recovery only while ANY
+        member is unacked, and pre-acked members are served verbatim."""
+        from repro.serving.journal import Journal
+
+        params, cfg = _params("linear")
+        prompt = _shared_prefix_prompts(cfg, n=1)[0]
+        jr = Journal()
+        eng = _engine(params, cfg, cache=None, journal=jr)
+        eng.reset()
+        eng.submit(prompt, 6, fork=3)
+        ref = eng.run("continuous")
+        assert len(jr.acked()) == 3
+
+        eng2 = _engine(params, cfg, cache=None, journal=jr)
+        eng2.reset()
+        eng2._replay_journal()
+        assert not eng2.has_work()           # all members acked: no re-run
+        got = eng2.completions()
+        assert len(got) == 3
+        for a, b in zip(ref, got):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+
+    def test_fleet_fork_routes_all_uids(self):
+        from repro.serving import FleetEngine, fleet_demo_config
+
+        cfg = dataclasses.replace(fleet_demo_config("linear"),
+                                  dtype="float32")
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        fleet = FleetEngine({"linear": (params, cfg)}, n_slots=2,
+                            segment_len=4, max_len=64)
+        rng = np.random.default_rng(0)
+        p = rng.integers(0, cfg.vocab_size, size=8,
+                         dtype=np.int64).astype(np.int32)
+        uid = fleet.submit(p, 4, fork=3)
+        uid2 = fleet.submit(p, 4)
+        assert uid == 0 and uid2 == 3        # fork advanced the uid space
+        comps = fleet.run("continuous")
+        assert [c.uid for c in comps] == [0, 1, 2, 3]
+        for c in comps[1:]:
+            np.testing.assert_array_equal(comps[0].tokens, c.tokens)
+
+
+# ---------------------------------------------------------------------------
+# row-ranged softmax KV snapshots (ROADMAP item 4)
+# ---------------------------------------------------------------------------
+
+
+class TestRowRangedSnapshots:
+    def _state(self, cfg, params, prompt, max_len=64):
+        _, st = lm.prefill(params, jnp.asarray(prompt)[None], cfg, RULES)
+        return lm.pad_decode_state(st, cfg, max_len=max_len)
+
+    def test_snapshot_rows_bytes_scale_with_rows(self):
+        params, cfg = _params("softmax")
+        state = self._state(cfg, params, np.arange(8, dtype=np.int32))
+        full = lm.snapshot_state(state, jnp.int32(0))
+        r8 = lm.snapshot_state_rows(state, jnp.int32(0), 8)
+        r32 = lm.snapshot_state_rows(state, jnp.int32(0), 32)
+        assert tree_nbytes(r8) * 4 == tree_nbytes(r32)
+        assert tree_nbytes(r8) < tree_nbytes(full)
+        # rows >= max_len short-circuits to the plain snapshot
+        assert tree_nbytes(
+            lm.snapshot_state_rows(state, jnp.int32(0), 64)) \
+            == tree_nbytes(full)
+
+    def test_ranged_restore_writes_only_covered_rows(self):
+        """restore_state with a W-row snapshot must leave rows >= W of
+        the engine state untouched (partial-extent update) and make
+        rows < W bitwise-equal to the snapshot."""
+        from repro.models.attention import AttnState
+
+        params, cfg = _params("softmax")
+        prompt = np.arange(8, dtype=np.int32)
+        state = self._state(cfg, params, prompt)
+        snap = lm.snapshot_state_rows(state, jnp.int32(0), 8)
+
+        poisoned = jax.tree.map(
+            lambda x: jnp.full_like(x, 7.0)
+            if hasattr(x, "shape") else x, state)
+        restored = lm.restore_state_rows(poisoned, snap, jnp.int32(0))
+
+        def leaves(tree):
+            return [st for st in jax.tree.leaves(
+                tree, is_leaf=lambda x: isinstance(x, AttnState))
+                if isinstance(st, AttnState) and st.k_cache is not None]
+
+        for st_r, st_o in zip(leaves(restored), leaves(state)):
+            t = st_r.k_cache.ndim - 3
+            got = np.moveaxis(np.asarray(st_r.k_cache), t, 0)
+            want = np.moveaxis(np.asarray(st_o.k_cache), t, 0)
+            np.testing.assert_array_equal(got[:8], want[:8])
+            assert np.all(np.asarray(got[8:]) == 7.0)   # untouched
+
+    def test_where_state_rows_merges_only_window(self):
+        from repro.models.attention import AttnState
+
+        params, cfg = _params("softmax")
+        state = self._state(cfg, params, np.arange(8, dtype=np.int32))
+        marked = jax.tree.map(
+            lambda x: jnp.full_like(x, 3.0)
+            if hasattr(x, "shape") else x, state)
+        start = jnp.full((state_slots(state),), 8, jnp.int32)
+        merged = lm.where_state_rows(
+            jnp.ones((state_slots(state),), bool), marked, state,
+            start, 4)
+
+        def kv_rows(tree, slot=0):
+            sts = [st for st in jax.tree.leaves(
+                tree, is_leaf=lambda x: isinstance(x, AttnState))
+                if isinstance(st, AttnState) and st.k_cache is not None]
+            st = sts[0]
+            # slot axis is the leading stacked axis for stack leaves
+            return np.moveaxis(np.asarray(st.k_cache),
+                               st.k_cache.ndim - 3, 0)
+
+        got = kv_rows(merged)
+        want = kv_rows(state)
+        np.testing.assert_array_equal(got[:8], want[:8])    # below window
+        assert np.all(got[8:12] == 3.0)                     # window
+        np.testing.assert_array_equal(got[12:], want[12:])  # above window
+
+    @pytest.mark.parametrize("backend", ["softmax"])
+    def test_preempt_resume_bit_identity_ranged(self, backend):
+        """Preempt/resume now moves row-ranged softmax snapshots; the
+        resumed stream must stay bit-identical to run-alone."""
+        params, cfg = _params(backend)
+        prompts = _shared_prefix_prompts(cfg, n=2, prefix=32, tail=4)
+        eng = _engine(params, cfg, cache=None, n_slots=2, max_len=96)
+        ref = _run(eng, prompts, gen=10)
+
+        eng.reset()
+        for p in prompts:
+            eng.submit(p, 10)
+        for _ in range(50):
+            eng.step("continuous")
+            if eng._active.any():
+                break
+        victim = next(s for s in range(eng.n_slots) if eng._active[s])
+        susp = eng.preempt(victim)
+        # the suspended snapshot is row-ranged: far fewer bytes than a
+        # full-width snapshot would be
+        full = eng.backend.state_bytes_per_slot(eng.max_len)
+        assert tree_nbytes(susp.state) < full
+        while eng.step("continuous"):
+            pass
+        got = eng.completions()
+        for a, b in zip(ref, got):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+
+    def test_spec_round_bit_identity_ranged(self):
+        """step_spec_round's commit/rewind merges are row-ranged for
+        softmax; speculative greedy must still equal plain greedy."""
+        from repro.serving import NgramDraft
+
+        params, cfg = _params("softmax")
+        rng = np.random.default_rng(1)
+        prompts = [rng.integers(0, cfg.vocab_size, size=12,
+                                dtype=np.int64).astype(np.int32)
+                   for _ in range(3)]
+        plain = _engine(params, cfg, cache=None, max_len=96)
+        ref = _run(plain, prompts, gen=10)
+        eng = DecodeEngine(params, cfg, RULES, n_slots=2, segment_len=4,
+                           max_len=96, prefill_chunk=32,
+                           draft=NgramDraft())
+        eng.reset()
+        for p in prompts:
+            eng.submit(p, 10, speculate_k=4)
+        got = eng.run("continuous")
+        assert eng.stats.spec_rounds > 0
+        for a, b in zip(ref, got):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def state_slots(state) -> int:
+    """Slot count of an engine state (leading axis of a tail leaf or
+    second axis of a stack leaf — via a flat leaf probe)."""
+    from repro.models.attention import AttnState
+    sts = [st for st in jax.tree.leaves(
+        state["stack"], is_leaf=lambda x: isinstance(x, AttnState))
+        if isinstance(st, AttnState) and st.k_cache is not None]
+    return int(sts[0].k_cache.shape[1])
